@@ -1,0 +1,62 @@
+"""Paper Fig 3 (left): training convergence of CompresSAE.
+
+Trains the SAE on a synthetic clustered corpus and logs cosine loss +
+retrieval recall@10 vs steps/wall-time, demonstrating the paper's claim of
+convergence within a few hundred steps.  CPU-scaled (d=256, h=1024, batch
+8192 vs the paper's d=768, h=4096, batch 100k on H100).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SAEConfig, build_index, encode, init_train_state, score_dense,
+    score_sparse, top_n, train_step,
+)
+from repro.data import clustered_embeddings
+from repro.optim import AdamConfig
+
+
+def recall_at(params, corpus, queries, cfg, n=10):
+    truth_ids = top_n(score_dense(corpus, queries), n)[1]
+    index = build_index(encode(params, corpus, cfg.k))
+    got_ids = top_n(score_sparse(index, encode(params, queries, cfg.k)), n)[1]
+    hits = sum(len(set(a.tolist()) & set(b.tolist()))
+               for a, b in zip(np.asarray(got_ids), np.asarray(truth_ids)))
+    return hits / truth_ids.size
+
+
+def run(steps=300, batch=8192, d=256, h=1024, k=16, eval_every=50, seed=0):
+    cfg = SAEConfig(d=d, h=h, k=k)
+    corpus = clustered_embeddings(jax.random.PRNGKey(seed), 16384, d=d)
+    queries = clustered_embeddings(jax.random.PRNGKey(seed + 1), 256, d=d)
+    state = init_train_state(cfg, jax.random.PRNGKey(seed + 2))
+    step = jax.jit(lambda s, b: train_step(s, b, cfg, AdamConfig(lr=3e-3)))
+    rows = []
+    t0 = time.time()
+    for i in range(steps + 1):
+        if i % eval_every == 0:
+            r = recall_at(state.params, corpus, queries, cfg)
+            loss = float(train_step(state, corpus[:batch], cfg, AdamConfig())[1]["cos_loss_k"])
+            rows.append((i, time.time() - t0, loss, r))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 3), i)
+        idx = jax.random.randint(key, (batch,), 0, corpus.shape[0])
+        state, m = step(state, corpus[idx])
+    return rows
+
+
+def main():
+    rows = run()
+    print("step,seconds,cos_loss_k,recall_at_10")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]:.4f},{r[3]:.4f}")
+    assert rows[-1][3] > rows[0][3], "recall did not improve"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

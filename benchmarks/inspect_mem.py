@@ -1,0 +1,50 @@
+"""Dry-run memory inspector: top HLO buffer shapes per cell.
+
+    PYTHONPATH=src python -m benchmarks.inspect_mem <arch> <shape> [kinds-json]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+import math
+import re
+import sys
+
+
+def main():
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.dryrun import lower_cell
+    from repro.models import registry
+    from repro.distributed.sharding import AxisRules
+
+    arch, shape = sys.argv[1], sys.argv[2]
+    rules = None
+    if len(sys.argv) > 3:
+        from jax.sharding import PartitionSpec as P
+
+        kinds = {k: (None if v is None else P(*v))
+                 for k, v in json.loads(sys.argv[3]).items()}
+        rules = AxisRules(batch=("data",), kinds=kinds)
+    mesh = make_production_mesh()
+    cell = registry.build_cell(arch, shape, full=True)
+    r, lo, co = lower_cell(cell, mesh, rules=rules)
+    print("temps GiB:", round(r["memory"]["temp_bytes"] / 2**30, 2),
+          "| args GiB:", round(r["memory"]["argument_bytes"] / 2**30, 2))
+    txt = co.as_text()
+    dt = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "f16": 2,
+          "u8": 1, "s8": 1, "u64": 8, "s64": 8}
+    sizes = {}
+    for m in re.finditer(r"(f32|bf16|s32|u32|pred|u64|s64)\[([0-9,]+)\]", txt):
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        b = math.prod(dims) * dt[m.group(1)]
+        key = f"{m.group(1)}[{m.group(2)}]"
+        if b > 2**28:
+            cnt = sizes.get(key, (0, 0))[1]
+            sizes[key] = (b, cnt + 1)
+    for k, (b, c) in sorted(sizes.items(), key=lambda kv: -kv[1][0])[:12]:
+        print(f"  {b/2**30:8.2f} GiB x{c:4d}  {k}")
+
+
+if __name__ == "__main__":
+    main()

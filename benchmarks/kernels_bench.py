@@ -1,0 +1,79 @@
+"""Kernel microbenchmarks (interpret-mode correctness + jnp-path timing).
+
+On CPU the Pallas kernels run in interpret mode (Python) — wall-times are
+NOT meaningful for the TPU target, so we benchmark the pure-jnp reference
+paths (what the CPU actually executes) and report kernel/ref agreement.
+The TPU-relevant statement is the roofline analysis, not these times.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sae import normalize_input
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.fused_encode.ref import fused_encode_ref
+from repro.kernels.sparse_dot.ops import sparse_dot
+from repro.kernels.sparse_dot.ref import sparse_dot_ref
+from repro.kernels.topk_mask.ref import topk_mask_ref
+
+
+def _timeit(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print("name,us_per_call,derived")
+
+    # sparse_dot: N=100k catalog, k=32, h=4096 (paper's config)
+    n, k, h = 100_000, 32, 4096
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.normal(k1, (n, k))
+    idx = jax.random.randint(k2, (n, k), 0, h, dtype=jnp.int32)
+    q = jax.random.normal(k3, (1, h))
+    ref_fn = jax.jit(sparse_dot_ref)
+    us = _timeit(ref_fn, vals, idx, q)
+    # agreement with the Pallas kernel (interpret mode) on a slice
+    got = sparse_dot(vals[:4096], idx[:4096], q)
+    want = sparse_dot_ref(vals[:4096], idx[:4096], q)
+    err = float(jnp.max(jnp.abs(got - want)))
+    print(f"sparse_dot_100k_k32,{us:.0f},flops={2*n*k:.2e};kernel_err={err:.1e}")
+
+    # dense-dot comparison point (the 12x bytes story)
+    dense = jax.random.normal(k1, (n, 768))
+    qd = jax.random.normal(k3, (1, 768))
+    us_d = _timeit(jax.jit(lambda a, b: b @ a.T), dense, qd)
+    print(f"dense_dot_100k_768d,{us_d:.0f},flops={2*n*768:.2e}")
+
+    # topk_mask: (8192, 4096) k=32
+    x = jax.random.normal(key, (8192, 4096))
+    us = _timeit(jax.jit(lambda a: topk_mask_ref(a, 32)), x)
+    print(f"topk_mask_8192x4096_k32,{us:.0f},")
+
+    # fused_encode ref: B=8192 batch
+    w = jax.random.normal(k2, (768, 4096)) / np.sqrt(768)
+    b = jnp.zeros((4096,))
+    xx = jax.random.normal(k1, (8192, 768))
+    us = _timeit(jax.jit(lambda a: fused_encode_ref(normalize_input(a), w, b, 32)), xx)
+    print(f"fused_encode_8192x768to4096,{us:.0f},")
+
+    # embedding_bag ref: DLRM-ish lookup
+    table = jax.random.normal(k1, (1_000_000, 128))
+    ids = jax.random.randint(k2, (65536, 4), 0, 1_000_000, dtype=jnp.int32)
+    us = _timeit(jax.jit(lambda t, i: embedding_bag_ref(t, i, "sum")), table, ids)
+    print(f"embedding_bag_65536x4_1M,{us:.0f},")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run size_table # one
+
+Modules:
+    size_table       — Fig 1 storage table (exact arithmetic vs paper)
+    convergence      — Fig 3 left: training convergence
+    tradeoff         — Fig 3 center: accuracy-compression trade-off
+    retrieval_modes  — §3.2 three retrieval modes (timing + recall + the
+                       kernel-trick exactness check)
+    kernels_bench    — kernel reference-path microbenches + kernel/ref err
+
+The roofline/dry-run reports are separate (they need a 512-device
+process): see benchmarks.roofline and repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = ["size_table", "convergence", "tradeoff", "retrieval_modes",
+           "kernels_bench", "quantized_codes_bench", "inverted_index_bench"]
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    targets = args if args else MODULES
+    failures = []
+    for name in targets:
+        print(f"\n===== benchmarks.{name} =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"===== {name} done in {time.time()-t0:.1f}s =====")
+        except Exception as e:  # noqa: BLE001 — harness reports and continues
+            failures.append((name, e))
+            print(f"===== {name} FAILED: {type(e).__name__}: {e} =====")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig 1 (table): storage size per 100M embeddings.
+
+Reproduces the paper's size arithmetic exactly and extends it to the
+assigned recsys archs' retrieval catalogs.
+"""
+from __future__ import annotations
+
+GB = 1e9
+
+
+def size_gb(n: int, *, dense_dim: int = 0, fp_bytes: int = 4,
+            sparse_k: int = 0) -> float:
+    if sparse_k:
+        return n * 2 * sparse_k * 4 / GB
+    return n * dense_dim * fp_bytes / GB
+
+
+def main():
+    n = 100_000_000
+    rows = [
+        # (model, config, paper value)
+        ("SBERT dense", size_gb(n, dense_dim=512), 204.8),
+        ("Nomic dense", size_gb(n, dense_dim=768), 307.2),
+        ("Nomic Matryoshka-64", size_gb(n, dense_dim=64), 25.6),
+        ("Nomic CompresSAE (h=4096, k=32)", size_gb(n, sparse_k=32), 25.6),
+    ]
+    print("model,size_gb_100m,paper_gb")
+    for name, got, want in rows:
+        print(f"{name},{got:.1f},{want}")
+        assert abs(got - want) < 0.05 * want, (name, got, want)
+    # compression ratio claim: 768-d fp32 -> k=32 sparse = 12x
+    ratio = size_gb(n, dense_dim=768) / size_gb(n, sparse_k=32)
+    print(f"compression_ratio_768d_k32,{ratio:.1f},12.0")
+    assert abs(ratio - 12.0) < 0.01
+
+    # assigned-arch catalogs (DESIGN.md §Arch-applicability)
+    from repro.models.registry import RETRIEVAL_SAE
+
+    for arch, cfg in RETRIEVAL_SAE.items():
+        dense = size_gb(n, dense_dim=cfg.d)
+        sparse = size_gb(n, sparse_k=cfg.k)
+        print(f"{arch}_catalog_dense_gb,{dense:.1f},")
+        print(f"{arch}_catalog_compressed_gb,{sparse:.1f},ratio={dense/sparse:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

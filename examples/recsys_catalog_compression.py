@@ -1,0 +1,73 @@
+"""Scenario: compress a recommender's item catalog (the paper's production
+use case) and serve retrieval from the compressed index.
+
+A DLRM-style model's item embedding table is compressed post-training with
+CompresSAE; user vectors from the model's query tower are encoded on the
+fly and scored against the sparse catalog with the scatter-query SpMV —
+exactly the `retrieval_cand` production cell, at laptop scale.
+
+    PYTHONPATH=src python examples/recsys_catalog_compression.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SAEConfig, encode, init_train_state, score_dense, top_n, train_step,
+)
+from repro.data.synthetic import criteo_like_batch
+from repro.models import recsys as R
+from repro.models.retrieval_head import compressed_retrieval, dense_retrieval
+from repro.optim import AdamConfig
+
+
+def main():
+    # 1. A (toy) trained DLRM; table_0 is the item catalog.
+    cfg = R.DLRMConfig(vocab_sizes=(20000, 50, 200, 30), n_dense=13,
+                       embed_dim=64, bot_mlp=(64, 64), top_mlp=(64, 32, 1),
+                       n_user_fields=2)
+    params = R.dlrm_init(cfg, jax.random.PRNGKey(0))
+    # a trained item table is clustered (co-engagement structure); random
+    # init is isotropic and has no neighbourhoods to preserve — install a
+    # realistic catalog in its place
+    from repro.data import clustered_embeddings
+
+    catalog = clustered_embeddings(jax.random.PRNGKey(7), 20000, d=64,
+                                   n_clusters=128)
+    params["tables"]["table_0"] = catalog           # (20000, 64) item vectors
+
+    # 2. Post-hoc compression — no model retraining (paper's key property).
+    sae_cfg = SAEConfig(d=64, h=512, k=8)           # 4x compression
+    state = init_train_state(sae_cfg, jax.random.PRNGKey(1))
+    step = jax.jit(lambda s, b: train_step(s, b, sae_cfg, AdamConfig(lr=3e-3)))
+    for i in range(250):
+        key = jax.random.fold_in(jax.random.PRNGKey(2), i)
+        idx = jax.random.randint(key, (4096,), 0, catalog.shape[0])
+        state, _ = step(state, catalog[idx])
+    codes = encode(state.params, catalog, sae_cfg.k)
+    norms = jnp.linalg.norm(codes.values, axis=-1)
+    print(f"catalog {catalog.size*4/2**20:.2f} MiB -> "
+          f"{codes.nbytes_logical/2**20:.2f} MiB")
+
+    # 3. Serve: user vector = mean of recently-engaged items (classic
+    #    retrieval-tower construction — lives in the item-embedding space).
+    #    Real histories are coherent (co-engagement): take each user's
+    #    history as the neighbourhood of a seed item, not uniform draws —
+    #    a uniform-random centroid is a near-zero noise vector whose
+    #    "nearest neighbours" are arbitrary under ANY compression.
+    seeds = jax.random.randint(jax.random.PRNGKey(3), (32,), 0,
+                               catalog.shape[0])
+    _, hist = top_n(score_dense(catalog, catalog[seeds]), 20)
+    user_vec = jnp.mean(catalog[hist], axis=1)            # (32, 64)
+    v_c, ids_c = compressed_retrieval(user_vec, state.params, codes, norms,
+                                      n=20, k=sae_cfg.k)
+    v_d, ids_d = dense_retrieval(user_vec, catalog, n=20)
+    overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / 20
+                       for a, b in zip(np.asarray(ids_c), np.asarray(ids_d))])
+    print(f"compressed vs dense top-20 overlap: {overlap:.2f} "
+          f"(catalog bytes 4x smaller, scan bytes 4x fewer)")
+    assert overlap > 0.15, overlap
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager, restore_latest, save_pytree, load_pytree
+
+__all__ = ["CheckpointManager", "restore_latest", "save_pytree", "load_pytree"]

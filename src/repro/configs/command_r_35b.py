@@ -1,0 +1,53 @@
+"""command-r-35b [hf:CohereForAI/c4ai-command-r-v01; unverified]
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000 — GQA, no-bias."""
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "command-r-35b"
+FAMILY = "lm"
+
+SKIP = {
+    "long_500k": "pure full-attention arch (GQA, no sub-quadratic path); "
+                 "524k-token decode skipped per instructions (DESIGN.md §4)",
+}
+GRAD_ACCUM = {"train_4k": 8}
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=40,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=22528,
+        vocab=256000,
+        rope_theta=8e6,
+        tie_embeddings=False,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        residual_hint=False,
+        q_chunk=1024,
+        kv_chunk=1024,
+        loss_chunk=2048,
+    )
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=8,
+        d_ff=160,
+        vocab=211,
+        rope_theta=8e6,
+        compute_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+        loss_chunk=64,
+    )

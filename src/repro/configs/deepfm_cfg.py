@@ -1,0 +1,41 @@
+"""deepfm [arXiv:1703.04247; paper]
+n_sparse=39 embed_dim=10 mlp=400-400-400 interaction=fm (Criteo fields)."""
+from repro.models.recsys import DeepFMConfig
+
+ARCH_ID = "deepfm"
+FAMILY = "recsys"
+
+SKIP: dict = {}
+GRAD_ACCUM: dict = {}
+
+# Criteo-like field cardinalities: 13 bucketized numeric + 26 categorical.
+# Vocab sizes are padded up to multiples of 16 so the embed_dim=10 tables
+# can be ROW-sharded over the 16-way model axis (standard vocab padding;
+# embed_dim 10 is not divisible, so column sharding is unavailable).
+def _pad16(v: int) -> int:
+    return ((v + 15) // 16) * 16
+
+CRITEO_39 = tuple(_pad16(v) for v in [1000] * 13 + [
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145,
+    5683, 8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4,
+    7046547, 18, 15, 286181, 105, 142572,
+])
+
+def full() -> DeepFMConfig:
+    return DeepFMConfig(
+        name=ARCH_ID,
+        vocab_sizes=CRITEO_39,
+        embed_dim=10,
+        mlp=(400, 400, 400),
+        n_user_fields=20,
+    )
+
+
+def smoke() -> DeepFMConfig:
+    return DeepFMConfig(
+        name=ARCH_ID + "-smoke",
+        vocab_sizes=tuple([50] * 8),
+        embed_dim=10,
+        mlp=(32, 16),
+        n_user_fields=4,
+    )

@@ -1,0 +1,31 @@
+"""din [arXiv:1706.06978; paper]
+embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80 target-attention."""
+from repro.models.recsys import DINConfig
+
+ARCH_ID = "din"
+FAMILY = "recsys"
+
+SKIP: dict = {}
+GRAD_ACCUM: dict = {}
+
+
+def full() -> DINConfig:
+    return DINConfig(
+        name=ARCH_ID,
+        n_items=10_000_000,     # catalog scale for retrieval_cand
+        embed_dim=18,
+        seq_len=100,
+        attn_mlp=(80, 40),
+        mlp=(200, 80),
+    )
+
+
+def smoke() -> DINConfig:
+    return DINConfig(
+        name=ARCH_ID + "-smoke",
+        n_items=500,
+        embed_dim=18,
+        seq_len=20,
+        attn_mlp=(16, 8),
+        mlp=(32, 16),
+    )

@@ -1,0 +1,41 @@
+"""dlrm-mlperf [arXiv:1906.00091; paper] — MLPerf DLRM (Criteo 1TB):
+n_dense=13 n_sparse=26 embed_dim=128 bot=13-512-256-128
+top=1024-1024-512-256-1 interaction=dot."""
+from repro.models.recsys import DLRMConfig, MLPERF_VOCAB_SIZES
+
+ARCH_ID = "dlrm-mlperf"
+FAMILY = "recsys"
+
+SKIP: dict = {}
+GRAD_ACCUM: dict = {}
+
+
+def _pad16(v: int) -> int:
+    # vocab rows padded to x16 so tables shard 2-D (rows x data, dim x
+    # model): params + fp32 Adam moments for the ~188M-row Criteo tables
+    # are 288 GB — 16-way column sharding alone leaves 18 GB/chip
+    return ((v + 15) // 16) * 16
+
+
+def full() -> DLRMConfig:
+    return DLRMConfig(
+        name=ARCH_ID,
+        n_dense=13,
+        vocab_sizes=tuple(_pad16(v) for v in MLPERF_VOCAB_SIZES),
+        embed_dim=128,
+        bot_mlp=(512, 256, 128),
+        top_mlp=(1024, 1024, 512, 256, 1),
+        n_user_fields=13,
+    )
+
+
+def smoke() -> DLRMConfig:
+    return DLRMConfig(
+        name=ARCH_ID + "-smoke",
+        n_dense=13,
+        vocab_sizes=(100, 57, 200, 33, 80, 3),
+        embed_dim=16,
+        bot_mlp=(32, 16),
+        top_mlp=(32, 16, 1),
+        n_user_fields=3,
+    )

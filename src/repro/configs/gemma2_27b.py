@@ -1,0 +1,60 @@
+"""gemma2-27b [arXiv:2408.00118; hf]
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000 —
+local+global alternating (4096-token sliding window), logit softcap."""
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "gemma2-27b"
+FAMILY = "lm"
+
+SKIP = {
+    "long_500k": "alternating local/global stack still contains full global "
+                 "attention every other layer — quadratic at 524k; skipped "
+                 "per instructions (DESIGN.md §4)",
+}
+GRAD_ACCUM = {"train_4k": 8}
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=46,
+        d_model=4608,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab=256000,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        window_pattern=(4096, None),   # local (sliding 4096), then global
+        tie_embeddings=True,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        residual_hint=False,
+        q_chunk=1024,
+        kv_chunk=1024,
+        loss_chunk=2048,
+    )
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=223,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        window_pattern=(16, None),
+        tie_embeddings=True,
+        compute_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+        loss_chunk=64,
+    )

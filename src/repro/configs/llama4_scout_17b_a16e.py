@@ -1,0 +1,61 @@
+"""llama4-scout-17b-a16e [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192/expert vocab=202048,
+MoE 16 routed experts top-1 + 1 shared expert.  The multimodal early-fusion
+frontend is a STUB per instructions — input_specs provide token embeddings;
+the backbone here is the text/moe transformer."""
+import jax.numpy as jnp
+
+from repro.models.transformer import MoESpec, TransformerConfig
+
+ARCH_ID = "llama4-scout-17b-a16e"
+FAMILY = "lm"
+
+SKIP = {
+    "long_500k": "interleaved-full-attention arch (iRoPE full-attn layers); "
+                 "524k decode skipped per instructions (DESIGN.md §4)",
+}
+GRAD_ACCUM = {"train_4k": 8}
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab=202048,
+        rope_theta=5e5,
+        # iRoPE interleave: 3 chunked-local (8192-token window) layers per
+        # 1 full-attention layer
+        window_pattern=(8192, 8192, 8192, None),
+        moe=MoESpec(n_experts=16, top_k=1, d_ff_expert=8192, n_shared=1,
+                    capacity_factor=1.25),
+        tie_embeddings=False,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        q_chunk=1024,
+        kv_chunk=1024,
+        loss_chunk=2048,
+    )
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64,
+        vocab=181,
+        moe=MoESpec(n_experts=4, top_k=1, d_ff_expert=32, n_shared=1,
+                    capacity_factor=2.0),
+        compute_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+        loss_chunk=64,
+    )

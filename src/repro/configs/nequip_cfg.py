@@ -1,0 +1,64 @@
+"""nequip [arXiv:2101.03164; paper]
+n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5 E(3)-tensor-product.
+
+Shape cells carry their own graph sizes + task heads (see registry):
+  full_graph_sm  2,708 nodes / 10,556 edges / d_feat 1,433 (node classify)
+  minibatch_lg   232,965-node graph, batch_nodes=1,024, fanout 15-10
+  ogb_products   2,449,029 nodes / 61,859,140 edges / d_feat 100
+  molecule       128 graphs x 30 nodes / 64 edges (graph regression)
+
+CompresSAE is inapplicable to this arch (DESIGN.md §Arch-applicability):
+implemented without the technique, as instructed.
+"""
+from repro.models.nequip import NequIPConfig
+
+ARCH_ID = "nequip"
+FAMILY = "gnn"
+
+SKIP: dict = {}
+GRAD_ACCUM: dict = {}
+
+# per-shape (d_feat, n_out, task) — the generic GNN shape cells assign
+# cora/reddit/ogbn-products-like feature widths to this arch.  Web-scale
+# cells run features/messages in bf16 (node-feature arrays + their AD
+# cotangents dominate HBM at 2.4M nodes; params/head stay f32).
+import jax.numpy as _jnp
+
+SHAPE_TASKS = {
+    "full_graph_sm": dict(d_feat=1433, n_out=7, task="node_classify"),
+    "minibatch_lg": dict(d_feat=602, n_out=41, task="node_classify",
+                         feature_dtype=_jnp.bfloat16),
+    "ogb_products": dict(d_feat=100, n_out=47, task="node_classify",
+                         feature_dtype=_jnp.bfloat16),
+    "molecule": dict(d_feat=16, n_out=1, task="graph_regress"),
+}
+
+
+def full(shape: str = "full_graph_sm") -> NequIPConfig:
+    t = SHAPE_TASKS[shape]
+    return NequIPConfig(
+        name=ARCH_ID,
+        n_layers=5,
+        d_hidden=32,
+        l_max=2,
+        n_rbf=8,
+        cutoff=5.0,
+        avg_degree=8.0,
+        **t,
+    )
+
+
+def smoke() -> NequIPConfig:
+    return NequIPConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_hidden=8,
+        l_max=2,
+        n_rbf=4,
+        cutoff=5.0,
+        d_feat=12,
+        n_out=5,
+        task="node_classify",
+        radial_hidden=16,
+        avg_degree=4.0,
+    )

@@ -1,0 +1,54 @@
+"""qwen3-1.7b [hf:Qwen/Qwen3-8B family; hf]
+28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936 — qk_norm, GQA."""
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "qwen3-1.7b"
+FAMILY = "lm"
+
+SKIP = {
+    "long_500k": "pure full-attention arch; 524k-token decode skipped per "
+                 "instructions (DESIGN.md §4)",
+}
+GRAD_ACCUM = {"train_4k": 2}
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=6144,
+        vocab=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        tie_embeddings=True,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        q_chunk=1024,
+        kv_chunk=1024,
+        loss_chunk=4096,
+    )
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=199,
+        qk_norm=True,
+        tie_embeddings=True,
+        compute_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+        loss_chunk=64,
+    )

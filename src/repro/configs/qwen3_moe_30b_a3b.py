@@ -1,0 +1,57 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B; hf]
+48L d_model=2048 32H (GQA kv=4) d_ff=768/expert vocab=151936,
+MoE 128 experts top-8 — qk_norm."""
+import jax.numpy as jnp
+
+from repro.models.transformer import MoESpec, TransformerConfig
+
+ARCH_ID = "qwen3-moe-30b-a3b"
+FAMILY = "lm"
+
+SKIP = {
+    "long_500k": "pure full-attention arch; 524k-token decode skipped per "
+                 "instructions (DESIGN.md §4)",
+}
+GRAD_ACCUM = {"train_4k": 4}
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=768,
+        vocab=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        moe=MoESpec(n_experts=128, top_k=8, d_ff_expert=768,
+                    capacity_factor=1.25),
+        tie_embeddings=False,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        q_chunk=1024,
+        kv_chunk=1024,
+        loss_chunk=4096,
+    )
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=32,
+        vocab=191,
+        qk_norm=True,
+        moe=MoESpec(n_experts=8, top_k=2, d_ff_expert=32, capacity_factor=2.0),
+        compute_dtype=jnp.float32,
+        q_chunk=16,
+        kv_chunk=16,
+        loss_chunk=64,
+    )

@@ -1,0 +1,45 @@
+"""CompresSAE — the paper's primary contribution as a composable JAX module.
+
+Public API:
+    SAEConfig, SparseCodes                   — types
+    init_params, encode, decode, reconstruct — model
+    compressae_loss, cosine_distance         — training objective
+    train_step, init_train_state, TrainState — optimization
+    build_index, score_sparse, score_reconstructed, top_n — retrieval
+"""
+from repro.core.types import SAEConfig, SparseCodes
+from repro.core.topk import abs_topk, abs_topk_sparse, abs_topk_mask
+from repro.core.sae import (
+    init_params,
+    encode,
+    decode,
+    decode_dense,
+    encode_dense,
+    reconstruct,
+    kernel_matrix,
+    normalize_decoder,
+    normalize_input,
+    preactivations,
+)
+from repro.core.losses import compressae_loss, cosine_distance
+from repro.core.train import TrainState, init_train_state, train_step, eval_step
+from repro.core.retrieval import (
+    SparseIndex,
+    build_index,
+    score_sparse,
+    score_reconstructed,
+    score_dense,
+    sparse_dot_dense_query,
+    top_n,
+)
+from repro.core import sparse, baselines
+
+__all__ = [
+    "SAEConfig", "SparseCodes", "abs_topk", "abs_topk_sparse", "abs_topk_mask",
+    "init_params", "encode", "decode", "decode_dense", "encode_dense",
+    "reconstruct", "kernel_matrix", "normalize_decoder", "normalize_input",
+    "preactivations", "compressae_loss", "cosine_distance", "TrainState",
+    "init_train_state", "train_step", "eval_step", "SparseIndex",
+    "build_index", "score_sparse", "score_reconstructed", "score_dense",
+    "sparse_dot_dense_query", "top_n", "sparse", "baselines",
+]

@@ -1,0 +1,87 @@
+"""Compression baselines the paper compares against (§2, Fig 1 / Fig 3).
+
+* Matryoshka-style prefix truncation — keep the first m dims.  (True
+  Matryoshka retrains the backbone; on a variance-ordered corpus prefix
+  truncation is its no-retrain analogue, and we additionally provide PCA.)
+* PCA projection to m dims — the strongest classical no-retrain truncation.
+* int8 / int4 post-training quantization (per-dim symmetric scales).
+
+All expose bytes_per_vector() so the trade-off benchmark compares at
+matched byte budgets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- truncation
+def truncate(x: jax.Array, m: int) -> jax.Array:
+    """Prefix truncation to m dims (Matryoshka-style inference)."""
+    return x[..., :m]
+
+
+def truncation_bytes(m: int) -> int:
+    return m * 4
+
+
+# ----------------------------------------------------------------------- PCA
+@dataclasses.dataclass(frozen=True)
+class PCAModel:
+    mean: jax.Array        # (d,)
+    components: jax.Array  # (d, m) top-m right singular vectors
+
+
+def pca_fit(x: jax.Array, m: int) -> PCAModel:
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    # economy SVD; d is small (<= a few thousand)
+    _, _, vt = jnp.linalg.svd(xc, full_matrices=False)
+    return PCAModel(mean=mean, components=vt[:m].T)
+
+
+def pca_encode(model: PCAModel, x: jax.Array) -> jax.Array:
+    return (x - model.mean) @ model.components
+
+
+def pca_decode(model: PCAModel, z: jax.Array) -> jax.Array:
+    return z @ model.components.T + model.mean
+
+
+# -------------------------------------------------------------- quantization
+@dataclasses.dataclass(frozen=True)
+class QuantModel:
+    scale: jax.Array   # (d,) per-dim symmetric scale
+    bits: int
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def quant_fit(x: jax.Array, bits: int) -> QuantModel:
+    amax = jnp.max(jnp.abs(x), axis=0)
+    qmax = 2 ** (bits - 1) - 1
+    return QuantModel(scale=jnp.maximum(amax / qmax, 1e-12), bits=bits)
+
+
+def quant_encode(model: QuantModel, x: jax.Array) -> jax.Array:
+    q = jnp.round(x / model.scale)
+    return jnp.clip(q, -model.qmax - 1, model.qmax).astype(jnp.int8)
+
+
+def quant_decode(model: QuantModel, q: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * model.scale
+
+
+def quant_bytes(d: int, bits: int) -> float:
+    return d * bits / 8
+
+
+# ------------------------------------------------------------------ registry
+def sparse_bytes(k: int) -> int:
+    """CompresSAE storage: k fp32 values + k int32 indices (paper §3.2)."""
+    return 2 * k * 4

@@ -1,0 +1,54 @@
+"""Losses (paper §3, eq. 3).
+
+L_cosine(x, x̂) = 1 − xᵀx̂ / (‖x‖‖x̂‖); the final loss sums the cosine loss of
+the k-sparse reconstruction and the 4k-sparse auxiliary reconstruction
+(multi-k training, prevents dead neurons — analogue of Gao et al.'s AuxK).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sae
+from repro.core.types import SAEConfig
+
+
+def cosine_distance(x: jax.Array, x_hat: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Per-row 1 − cos(x, x̂); shape (...,)."""
+    num = jnp.sum(x * x_hat, axis=-1)
+    den = jnp.linalg.norm(x, axis=-1) * jnp.linalg.norm(x_hat, axis=-1)
+    return 1.0 - num / jnp.maximum(den, eps)
+
+
+def compressae_loss(
+    params: sae.Params, x: jax.Array, cfg: SAEConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Total loss = L_cos(x, f(x;k)) + aux_weight · L_cos(x, f(x;4k)).
+
+    Shares one matmul: pre-activations computed once, both sparsities are
+    masks of the same tensor.  Returns (scalar loss, metrics dict).
+    """
+    from repro.core.topk import abs_topk
+    from repro.distributed.sharding import shard_hint
+
+    pre = shard_hint(sae.preactivations(params, x), "logits")   # (B, h)
+    s_k = abs_topk(pre, cfg.k, cfg.topk_groups)
+    s_aux = abs_topk(pre, cfg.aux_k, cfg.topk_groups)
+    xh_k = sae.decode_dense(params, s_k)
+    xh_aux = sae.decode_dense(params, s_aux)
+    l_k = jnp.mean(cosine_distance(x, xh_k))
+    l_aux = jnp.mean(cosine_distance(x, xh_aux))
+    loss = l_k + cfg.aux_weight * l_aux
+    # Dead-neuron telemetry: which latents fired (under the wider aux mask)
+    # anywhere in the batch.  Returned for train_step's staleness counter.
+    fired = jax.lax.stop_gradient((s_aux != 0).any(axis=tuple(range(s_aux.ndim - 1))))
+    metrics = {
+        "loss": loss,
+        "cos_loss_k": l_k,
+        "cos_loss_aux": l_aux,
+        "frac_active_latents": jnp.mean(fired.astype(jnp.float32)),
+        "fired": fired,
+    }
+    return loss, metrics

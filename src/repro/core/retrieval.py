@@ -1,0 +1,146 @@
+"""Retrieval from compressed space (paper §3.2).
+
+Three scoring modes, all returning cosine similarities against a candidate
+database stored as fixed-k SparseCodes:
+
+1. ``score_sparse``        — similarity directly between sparse codes
+                             (the paper's fast O(k) SpMV mode).
+2. ``score_reconstructed`` — kernel-trick similarity in the reconstructed
+                             space, cos(x̂_q, x̂_c) = s_qᵀKs_c / (‖·‖‖·‖),
+                             K = W_dec W_decᵀ (paper's high-fidelity mode).
+3. ``score_dense``         — exact dense baseline for evaluation.
+
+TPU adaptation (DESIGN.md §3): both sparse modes reduce to one primitive —
+a *dense query vector* dotted against fixed-k sparse candidate rows
+("scatter-query SpMV").  For mode 1 the dense query is densify(s_q); for
+mode 2 it is z = K s_q = W_decᵀ(W_dec s_q), computed with two thin MXU
+matmuls, with candidate norms √(s_cᵀKs_c) precomputed at index-build time.
+Mode 2 therefore costs the same per-candidate work as mode 1 — this is an
+exact refactoring (associativity), not an approximation.
+
+The primitive has a Pallas kernel (repro.kernels.sparse_dot) and a pure-jnp
+path (used on CPU / in tests); ``use_kernel`` selects.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sae, sparse
+from repro.core.types import SparseCodes
+
+
+def sparse_dot_dense_query(
+    codes: SparseCodes, q_dense: jax.Array, q_chunk: int = 16
+) -> jax.Array:
+    """scores[i] = Σ_j codes.values[i,j] · q_dense[codes.indices[i,j]].
+
+    codes: (N, k); q_dense: (h,) or (Q, h).  Returns (N,) or (Q, N).
+    Pure-jnp reference path (gather + FMA); the Pallas kernel in
+    repro.kernels.sparse_dot implements the same contract blockwise in
+    VMEM.  The jnp gather materializes (q_chunk, N, k) — large Q is
+    processed in chunks so the transient stays bounded (the kernel never
+    materializes it at all).
+    """
+    if q_dense.ndim == 1:
+        gathered = q_dense[codes.indices]                 # (N, k)
+        return jnp.sum(gathered * codes.values, axis=-1)  # (N,)
+    q = q_dense.shape[0]
+    if q <= q_chunk:
+        gathered = q_dense[:, codes.indices]              # (Q, N, k)
+        return jnp.sum(gathered * codes.values[None], axis=-1)
+    pad = (-q) % q_chunk
+    qp = jnp.pad(q_dense, ((0, pad), (0, 0))) if pad else q_dense
+    blocks = qp.reshape(-1, q_chunk, qp.shape[-1])
+
+    def block(qb):
+        g = qb[:, codes.indices]
+        return jnp.sum(g * codes.values[None], axis=-1)
+
+    out = jax.lax.map(block, blocks).reshape(-1, codes.values.shape[0])
+    return out[:q]
+
+
+class SparseIndex(NamedTuple):
+    """A retrieval index over a compressed candidate database.
+
+    codes:        fixed-k sparse codes of all N candidates.
+    sparse_norms: ‖s_c‖₂ per candidate (sparse-space cosine denominators).
+    recon_norms:  ‖W_dec s_c‖₂ = √(s_cᵀ K s_c) per candidate (kernel trick),
+                  None if the index was built without decoder weights.
+    """
+
+    codes: SparseCodes
+    sparse_norms: jax.Array
+    recon_norms: Optional[jax.Array]
+
+
+def build_index(
+    codes: SparseCodes, params: Optional[sae.Params] = None
+) -> SparseIndex:
+    """Precompute per-candidate norms.  recon_norms needs W_dec: ‖x̂_c‖ is the
+    norm of a k-atom combination, computed by a k-row gather of W_dec —
+    O(N·k·d) once at build time, never per query."""
+    sparse_norms = jnp.linalg.norm(codes.values, axis=-1)
+    recon_norms = None
+    if params is not None:
+        x_hat = sae.decode(params, codes)                 # (N, d)
+        recon_norms = jnp.linalg.norm(x_hat, axis=-1)
+    return SparseIndex(codes=codes, sparse_norms=sparse_norms, recon_norms=recon_norms)
+
+
+def score_sparse(index: SparseIndex, q: SparseCodes) -> jax.Array:
+    """Cosine similarity in the sparse compressed space.  q: (Q?, k) codes.
+    Returns (N,) for a single query or (Q, N)."""
+    q_dense = sparse.densify(q)                            # (Q?, h)
+    q_norm = jnp.linalg.norm(q.values, axis=-1)            # (Q?,)
+    dots = sparse_dot_dense_query(index.codes, q_dense)    # (Q?, N)
+    denom = jnp.maximum(q_norm[..., None] * index.sparse_norms, 1e-8)
+    return dots / denom if q.values.ndim > 1 else dots / jnp.maximum(q_norm * index.sparse_norms, 1e-8)
+
+
+def score_reconstructed(
+    index: SparseIndex, q: SparseCodes, params: sae.Params
+) -> jax.Array:
+    """Kernel-trick cosine in reconstructed space (paper §3.2, exact).
+
+    z = K s_q computed as W_decᵀ(W_dec s_q): decode the query (k-atom gather,
+    (…,d)), then one (d,)·(h,d)ᵀ matmul.  Scoring then reuses the same
+    sparse-dot primitive as sparse-space retrieval.
+    """
+    if index.recon_norms is None:
+        raise ValueError("index built without params; recon norms missing")
+    x_hat_q = sae.decode(params, q)                        # (Q?, d)
+    z = x_hat_q @ params["w_dec"].T                        # (Q?, h) == K s_q
+    q_norm = jnp.linalg.norm(x_hat_q, axis=-1)             # ‖W_dec s_q‖
+    dots = sparse_dot_dense_query(index.codes, z)          # s_cᵀ K s_q
+    denom = jnp.maximum(q_norm[..., None] * index.recon_norms, 1e-8) \
+        if q.values.ndim > 1 else jnp.maximum(q_norm * index.recon_norms, 1e-8)
+    return dots / denom
+
+
+def score_dense(database: jax.Array, q: jax.Array) -> jax.Array:
+    """Exact dense cosine baseline.  database (N, d), q (Q?, d)."""
+    db = database / jnp.maximum(jnp.linalg.norm(database, axis=-1, keepdims=True), 1e-8)
+    qq = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+    return qq @ db.T if q.ndim > 1 else db @ qq
+
+
+def top_n(scores: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Exact top-n over the last axis -> (scores, candidate_ids)."""
+    vals, idx = jax.lax.top_k(scores, n)
+    return vals, idx
+
+
+def sharded_top_n(scores_local: jax.Array, ids_local: jax.Array, n: int, *, axis_name: str):
+    """Distributed exact top-n: local top-n per shard, all-gather the
+    n·n_shards candidates, merge.  For use inside shard_map when the
+    candidate database is sharded (serving path)."""
+    lv, li = jax.lax.top_k(scores_local, n)
+    gid = ids_local[li]
+    av = jax.lax.all_gather(lv, axis_name, axis=-1, tiled=True)
+    ai = jax.lax.all_gather(gid, axis_name, axis=-1, tiled=True)
+    fv, fi = jax.lax.top_k(av, n)
+    return fv, jnp.take_along_axis(ai, fi, axis=-1)

@@ -1,0 +1,194 @@
+"""CompresSAE model (paper §3).
+
+    s  = φ(W_enc · x̄ + b_enc, k)          x̄ = x / ‖x‖₂        (eq. 1)
+    x̂  = W_dec · s                         W_dec row-normalized  (eq. 2)
+
+Parameters are a plain dict pytree so they shard cleanly under pjit:
+
+    params = {
+      "w_enc": (d, h),   # stored input-major: x̄ @ w_enc == W_enc x̄
+      "b_enc": (h,),
+      "w_dec": (h, d),   # row i is latent-i's unit-norm dictionary atom
+    }
+
+Storage convention: both matrices are stored with h on the *sharded* axis
+(w_enc axis 1, w_dec axis 0) so that TP over h never splits d.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import abs_topk_sparse
+from repro.core.types import SAEConfig, SparseCodes
+
+Params = Dict[str, jax.Array]
+
+
+def init_params(cfg: SAEConfig, key: jax.Array) -> Params:
+    """Initialize per Gao et al. practice: W_dec rows unit-norm random,
+    W_enc = W_dec.T (tied at init, untied during training), b_enc = 0."""
+    kd, = jax.random.split(key, 1)
+    w_dec = jax.random.normal(kd, (cfg.h, cfg.d), dtype=cfg.dtype)
+    w_dec = w_dec / jnp.linalg.norm(w_dec, axis=-1, keepdims=True)
+    return {
+        "w_enc": w_dec.T.astype(cfg.dtype),   # (d, h)
+        "b_enc": jnp.zeros((cfg.h,), dtype=cfg.dtype),
+        "w_dec": w_dec.astype(cfg.dtype),     # (h, d)
+    }
+
+
+def normalize_decoder(params: Params) -> Params:
+    """Project W_dec rows back onto the unit sphere (paper: row-normalized
+    decoder).  Applied after each optimizer update, the standard SAE
+    constraint-projection."""
+    w = params["w_dec"]
+    norm = jnp.linalg.norm(w, axis=-1, keepdims=True)
+    return {**params, "w_dec": w / jnp.maximum(norm, 1e-8)}
+
+
+def normalize_input(x: jax.Array) -> jax.Array:
+    """x̄ = x / ‖x‖₂ (paper normalizes instead of standardizing)."""
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+
+
+def preactivations(params: Params, x: jax.Array) -> jax.Array:
+    """W_enc x̄ + b_enc, shape (..., h)."""
+    return normalize_input(x) @ params["w_enc"] + params["b_enc"]
+
+
+def encode(params: Params, x: jax.Array, k: int,
+           groups: int = 0) -> SparseCodes:
+    """f_enc: dense (..., d) -> fixed-k SparseCodes.  groups > 0 uses the
+    exact two-stage grouped top-k (shardable; DESIGN.md §3)."""
+    pre = preactivations(params, x)
+    if groups:
+        from repro.core.topk import abs_topk_sparse_grouped
+
+        vals, idx = abs_topk_sparse_grouped(pre, k, groups)
+    else:
+        vals, idx = abs_topk_sparse(pre, k)
+    return SparseCodes(values=vals, indices=idx, dim=pre.shape[-1])
+
+
+def encode_chunked(params: Params, x: jax.Array, k: int,
+                   chunk: int = 8192, groups: int = 0) -> SparseCodes:
+    """Bulk-compression encode: processes rows in chunks so the (B, h)
+    pre-activations never exist at once (jnp analogue of the fused_encode
+    Pallas kernel's VMEM epilogue; use for offline catalog jobs)."""
+    n = x.shape[0]
+    h = params["w_enc"].shape[1]
+    if n <= chunk:
+        return encode(params, x, k, groups)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    blocks = xp.reshape(-1, chunk, x.shape[-1])
+
+    def block(xb):
+        c = encode(params, xb, k, groups)
+        return c.values, c.indices
+
+    vals, idx = jax.lax.map(block, blocks)
+    return SparseCodes(values=vals.reshape(-1, k)[:n],
+                       indices=idx.reshape(-1, k)[:n], dim=h)
+
+
+def decode(params: Params, codes: SparseCodes) -> jax.Array:
+    """f_dec: sparse codes -> dense reconstruction (..., d).
+
+    x̂ = Σ_j vals_j · W_dec[idx_j] — a k-row gather of W_dec followed by a
+    weighted sum; never materializes the dense (…, h) code.
+    """
+    atoms = params["w_dec"][codes.indices]            # (..., k, d)
+    return jnp.einsum("...k,...kd->...d", codes.values, atoms)
+
+
+def decode_dense(params: Params, s: jax.Array) -> jax.Array:
+    """f_dec on a dense latent (training path): x̂ = s @ W_dec."""
+    return s @ params["w_dec"]
+
+
+def encode_dense(params: Params, x: jax.Array, k: int) -> jax.Array:
+    """Dense-latent encoder (training path): φ applied, zeros kept."""
+    from repro.core.topk import abs_topk
+
+    return abs_topk(preactivations(params, x), k)
+
+
+def encode_sharded(
+    params: Params,
+    x: jax.Array,
+    k: int,
+    *,
+    batch_axes: tuple = ("data",),
+    model_axis: str = "model",
+    chunk: int = 8192,
+) -> SparseCodes:
+    """Distributed bulk encode via shard_map (DESIGN.md §3).
+
+    W_enc is h-sharded over ``model_axis``; each device computes only its
+    (B_loc, h/n) pre-activation slice and its local top-k; the global
+    top-k then merges the n·k candidate (value, index) pairs with one tiny
+    all-gather — B·n·k·8 bytes over ICI instead of all-gathering the
+    (B, h) pre-activations (B·h·4 bytes), an h/(2nk) ≈ 4x collective
+    reduction at h=4096, k=32, n=16.  Under plain pjit GSPMD instead
+    replicates W_enc and computes the full h per device (16x redundant
+    FLOPs, measured — EXPERIMENTS.md §Perf hillclimb 4).
+    """
+    from repro.core.topk import distributed_abs_topk_sparse
+
+    h = params["w_enc"].shape[1]
+    bspec = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    def local(w_enc_l, b_enc_l, x_l):
+        h_loc = w_enc_l.shape[1]
+        off = jax.lax.axis_index(model_axis) * h_loc
+
+        def block(xb):
+            pre = normalize_input(xb) @ w_enc_l + b_enc_l
+            vals, idx = distributed_abs_topk_sparse(
+                pre, k, axis_name=model_axis, shard_offset=off
+            )
+            return vals, idx
+
+        n_loc = x_l.shape[0]
+        if n_loc <= chunk:
+            vals, idx = block(x_l)
+        else:
+            blocks = x_l.reshape(-1, chunk, x_l.shape[-1])
+            vals, idx = jax.lax.map(block, blocks)
+            vals = vals.reshape(n_loc, k)
+            idx = idx.reshape(n_loc, k)
+        return vals, idx
+
+    vals, idx = jax.shard_map(
+        local,
+        in_specs=(jax.P(None, model_axis), jax.P(model_axis), jax.P(bspec, None)),
+        out_specs=(jax.P(bspec, None), jax.P(bspec, None)),
+        # outputs ARE replicated over model (post-all_gather global top-k),
+        # but the static varying-axes check can't prove it
+        check_vma=False,
+    )(params["w_enc"], params["b_enc"], x)
+    return SparseCodes(values=vals, indices=idx, dim=h)
+
+
+def reconstruct(params: Params, x: jax.Array, k: int) -> jax.Array:
+    """f = f_dec ∘ f_enc at sparsity k (dense-latent path, differentiable)."""
+    return decode_dense(params, encode_dense(params, x, k))
+
+
+def kernel_matrix(params: Params) -> jax.Array:
+    """K = W_dec W_decᵀ ∈ R^{h×h} for reconstructed-space retrieval (§3.2).
+
+    NOTE the storage convention: paper writes K = W_decᵀW_dec with
+    W_dec ∈ R^{d×h}; ours is (h, d), hence the transpose flip.  K[i,j] is
+    the inner product of dictionary atoms i and j either way.
+    """
+    return params["w_dec"] @ params["w_dec"].T
+
+
+def config_like(params: Params, k: int, **kw: Any) -> SAEConfig:
+    d, h = params["w_enc"].shape
+    return SAEConfig(d=d, h=h, k=k, **kw)

@@ -1,0 +1,72 @@
+"""Fixed-k sparse layout utilities (uniform-CSR == ELL).
+
+The paper stores codes in CSR; with a global sparsity k every row has
+exactly k nonzeros, so CSR's indptr is the arithmetic sequence 0, k, 2k, …
+and carries no information.  We therefore keep (values, indices) only —
+byte-identical to the paper's 2·k·4 B/row — and provide lossless CSR
+import/export for interop (scipy/pgvector-style consumers).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SparseCodes
+
+
+def densify(codes: SparseCodes) -> jax.Array:
+    """(..., k) sparse -> (..., h) dense. Duplicate indices sum."""
+    lead = codes.values.shape[:-1]
+    k = codes.values.shape[-1]
+
+    def one_row(vals: jax.Array, idx: jax.Array) -> jax.Array:
+        return jnp.zeros((codes.dim,), dtype=vals.dtype).at[idx].add(vals)
+
+    if not lead:
+        return one_row(codes.values, codes.indices)
+    flat = jax.vmap(one_row)(
+        codes.values.reshape(-1, k), codes.indices.reshape(-1, k)
+    )
+    return flat.reshape(*lead, codes.dim)
+
+
+def from_dense(dense: jax.Array, k: int) -> SparseCodes:
+    """Dense (N, h) with ≤k nonzeros per row -> SparseCodes (lossy if >k)."""
+    from repro.core.topk import abs_topk_sparse
+
+    vals, idx = abs_topk_sparse(dense, k)
+    return SparseCodes(values=vals, indices=idx, dim=dense.shape[-1])
+
+
+def to_csr(codes: SparseCodes) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Export to classic CSR (data, indices, indptr) numpy arrays.
+
+    Rows are sorted by column index (canonical CSR).  Host-side (numpy).
+    """
+    vals = np.asarray(codes.values)
+    idx = np.asarray(codes.indices)
+    order = np.argsort(idx, axis=-1, kind="stable")
+    data = np.take_along_axis(vals, order, axis=-1).reshape(-1)
+    indices = np.take_along_axis(idx, order, axis=-1).reshape(-1)
+    n, k = vals.shape
+    indptr = np.arange(0, (n + 1) * k, k, dtype=np.int64)
+    return data, indices.astype(np.int64), indptr
+
+
+def from_csr(
+    data: np.ndarray, indices: np.ndarray, indptr: np.ndarray, dim: int
+) -> SparseCodes:
+    """Import uniform-row-length CSR.  Raises if rows are ragged."""
+    row_len = np.diff(indptr)
+    if row_len.size == 0:
+        raise ValueError("empty CSR")
+    k = int(row_len[0])
+    if not (row_len == k).all():
+        raise ValueError("CSR is ragged; CompresSAE codes are fixed-k")
+    n = row_len.size
+    return SparseCodes(
+        values=jnp.asarray(data, dtype=jnp.float32).reshape(n, k),
+        indices=jnp.asarray(indices, dtype=jnp.int32).reshape(n, k),
+        dim=dim,
+    )

@@ -1,0 +1,109 @@
+"""φ(·, k): the abs-top-k activation (paper eq. 1).
+
+Keeps the k entries with the largest |value| and zeroes the rest —
+sign-preserving, replacing ReLU+TopK of prior SAEs.  Two public forms:
+
+  * ``abs_topk(x, k)``          — dense in, dense out (the activation).
+  * ``abs_topk_sparse(x, k)``   — dense in, (values, indices) out (encoder
+                                  output in the fixed-k sparse layout).
+
+A straight-through estimator is used for the backward pass of the *mask*
+(standard for k-sparse autoencoders: gradients flow only through the kept
+entries, which is exactly d/dx of the masked identity almost everywhere —
+so plain autodiff through ``where`` is already correct; no custom VJP
+needed).  ``jax.lax.top_k`` on |x| supplies the selection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def abs_topk_sparse(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Return (values, indices) of the k largest-|x| entries per row.
+
+    x: (..., h).  values: (..., k) same dtype, indices: (..., k) int32.
+    Ties broken by lax.top_k's deterministic lowest-index-first rule.
+    """
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def abs_topk(x: jax.Array, k: int, groups: int = 0) -> jax.Array:
+    """Dense φ(x, k): zero all but the k largest-|value| entries per row.
+    groups > 0 selects the exact two-stage grouped algorithm (shardable)."""
+    if groups:
+        vals, idx = abs_topk_sparse_grouped(x, k, groups)
+    else:
+        vals, idx = abs_topk_sparse(x, k)
+    zeros = jnp.zeros_like(x)
+    return jnp.put_along_axis(zeros, idx, vals, axis=-1, inplace=False)
+
+
+def abs_topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of kept entries; useful for telemetry (dead neurons)."""
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    mask = jnp.zeros(x.shape, dtype=bool)
+    ones = jnp.ones(idx.shape, dtype=bool)
+    return jnp.put_along_axis(mask, idx, ones, axis=-1, inplace=False)
+
+
+def abs_topk_sparse_grouped(
+    x: jax.Array, k: int, groups: int
+) -> tuple[jax.Array, jax.Array]:
+    """Two-stage EXACT abs-top-k: per-group local top-k, then a global
+    re-selection over the groups·k candidates.
+
+    Equivalent to ``abs_topk_sparse`` (the global top-k set is a subset of
+    the union of per-group top-k sets) but expressible as ``groups`` local
+    sorts over h/groups lanes + one tiny global sort — under pjit with h
+    sharded over a mesh axis of size ``groups`` the heavy stage is fully
+    local and only (…, groups·k·2) values cross the interconnect, versus
+    all-gathering the (…, h) pre-activations (DESIGN.md §3; the paper-cell
+    hillclimb in EXPERIMENTS.md §Perf).
+    """
+    *lead, h = x.shape
+    assert h % groups == 0 and groups * k <= h
+    xg = x.reshape(*lead, groups, h // groups)
+    lv, li = jax.lax.top_k(jnp.abs(xg), k)               # (..., G, k)
+    vals_g = jnp.take_along_axis(xg, li, axis=-1)
+    offs = (jnp.arange(groups, dtype=jnp.int32) * (h // groups))[:, None]
+    gi = li.astype(jnp.int32) + offs                     # global column ids
+    cand_v = vals_g.reshape(*lead, groups * k)
+    cand_i = gi.reshape(*lead, groups * k)
+    _, sel = jax.lax.top_k(jnp.abs(cand_v), k)
+    vals = jnp.take_along_axis(cand_v, sel, axis=-1)
+    idx = jnp.take_along_axis(cand_i, sel, axis=-1)
+    return vals, idx
+
+
+def distributed_abs_topk_sparse(
+    x_local: jax.Array, k: int, *, axis_name: str, shard_offset: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Distributed φ(·,k) for h sharded over a mesh axis (beyond-paper §Perf).
+
+    Instead of all-gathering the full (B, h) pre-activations to run a global
+    top-k (B·h·4 bytes over ICI), each shard takes its local top-k
+    (k candidates out of h/n_shards), then the 2·k·n_shards candidate
+    (value, global_index) pairs are all-gathered and reduced with a second
+    top-k.  Correct because the global top-k set is a subset of the union of
+    per-shard top-k sets.  Collective bytes drop from B·h·4 to B·n·k·8.
+
+    Must be called inside shard_map with ``axis_name`` bound; ``x_local`` is
+    the (B, h_local) shard and ``shard_offset`` the global column offset of
+    this shard (e.g. ``jax.lax.axis_index(axis_name) * h_local``).
+    Returns *replicated* (values, global_indices) of shape (B, k).
+    """
+    local_vals, local_idx = abs_topk_sparse(x_local, k)
+    global_idx = local_idx + shard_offset.astype(jnp.int32)
+    # all-gather the candidate sets along the sharded axis: (n, B, k)
+    cand_vals = jax.lax.all_gather(local_vals, axis_name)
+    cand_idx = jax.lax.all_gather(global_idx, axis_name)
+    n = cand_vals.shape[0]
+    cand_vals = jnp.moveaxis(cand_vals, 0, -2).reshape(*x_local.shape[:-1], n * k)
+    cand_idx = jnp.moveaxis(cand_idx, 0, -2).reshape(*x_local.shape[:-1], n * k)
+    _, sel = jax.lax.top_k(jnp.abs(cand_vals), k)
+    vals = jnp.take_along_axis(cand_vals, sel, axis=-1)
+    idx = jnp.take_along_axis(cand_idx, sel, axis=-1)
+    return vals, idx

@@ -1,0 +1,82 @@
+"""CompresSAE training step (paper §3.1).
+
+The model is tiny (two (d×h) matrices) and batches are huge (the paper uses
+100k rows/step), so the step is bandwidth-bound on the batch.  Under pjit we
+shard the batch over (pod, data) and h over model; gradients all-reduce over
+the batch axes only (the params' own axes are sharded, not replicated, along
+model).
+
+``train_step`` is mesh-agnostic: pure function of (state, batch), safe to
+jax.jit with in_shardings/out_shardings supplied by the launcher.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sae
+from repro.core.losses import compressae_loss
+from repro.core.types import SAEConfig
+from repro.optim import AdamConfig, AdamState, adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: sae.Params
+    opt: AdamState
+    # Exponential counter of steps since each latent last fired; drives the
+    # dead-neuron telemetry the multi-k loss is designed to keep at ~0.
+    steps_since_fired: jax.Array   # (h,) int32
+
+
+def init_train_state(cfg: SAEConfig, key: jax.Array) -> TrainState:
+    params = sae.init_params(cfg, key)
+    return TrainState(
+        params=params,
+        opt=adam_init(params),
+        steps_since_fired=jnp.zeros((cfg.h,), jnp.int32),
+    )
+
+
+def train_step(
+    state: TrainState,
+    batch: jax.Array,
+    cfg: SAEConfig,
+    opt_cfg: AdamConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One optimizer step on a (B, d) batch of dense embeddings."""
+    (loss, metrics), grads = jax.value_and_grad(compressae_loss, has_aux=True)(
+        state.params, batch, cfg
+    )
+    new_params, new_opt = adam_update(grads, state.opt, state.params, opt_cfg, lr_scale)
+    # Paper: W_dec row-normalized — project after every update.
+    new_params = sae.normalize_decoder(new_params)
+
+    # Dead-neuron telemetry from the aux (4k) activation pattern (computed
+    # inside the loss — no extra matmul).
+    metrics = dict(metrics)
+    fired = metrics.pop("fired")
+    ssf = jnp.where(fired, 0, state.steps_since_fired + 1)
+    metrics["dead_latents_1k"] = jnp.sum((ssf > 1000).astype(jnp.int32))
+    metrics["grad_norm"] = _global_norm(grads)
+    return TrainState(new_params, new_opt, ssf), metrics
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def eval_step(params: sae.Params, batch: jax.Array, cfg: SAEConfig) -> Dict[str, jax.Array]:
+    """Reconstruction metrics on held-out embeddings."""
+    from repro.core.losses import cosine_distance
+
+    x_hat = sae.reconstruct(params, batch, cfg.k)
+    x_hat_aux = sae.reconstruct(params, batch, cfg.aux_k)
+    return {
+        "eval_cos_loss_k": jnp.mean(cosine_distance(batch, x_hat)),
+        "eval_cos_loss_aux": jnp.mean(cosine_distance(batch, x_hat_aux)),
+    }

@@ -1,0 +1,74 @@
+"""Shared core types for CompresSAE.
+
+The sparse code produced by the encoder is *fixed-k*: every row has exactly
+``k`` nonzero entries.  That makes the natural storage format an ELL layout —
+``values[N, k]`` + ``indices[N, k]`` — which is byte-identical to a CSR matrix
+with a uniform row length (the paper's storage format) while keeping every
+shape static for XLA.  ``sparse.py`` provides lossless CSR conversion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseCodes(NamedTuple):
+    """Fixed-k sparse embedding batch (uniform-CSR / ELL layout).
+
+    values:  (N, k) float — nonzero values, arbitrary order within a row.
+    indices: (N, k) int32 — column index in [0, h) of each value.  Rows with
+             duplicate indices are not produced by the encoder but are
+             tolerated by every consumer (contributions sum).
+    dim:     h, the latent dimensionality (static python int).
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    dim: int
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def nbytes_logical(self) -> int:
+        """Storage bytes of the compressed representation (paper §3.2)."""
+        return self.values.size * 4 + self.indices.size * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SAEConfig:
+    """CompresSAE hyperparameters (paper §3)."""
+
+    d: int = 768          # dense input dimensionality
+    h: int = 4096         # sparse latent dimensionality (h >> d)
+    k: int = 32           # nonzeros kept by the abs-top-k activation
+    aux_k_mult: int = 4   # auxiliary reconstruction uses k * aux_k_mult
+    aux_weight: float = 1.0
+    dtype: jnp.dtype = jnp.float32
+    # 0 = single-stage top-k; >0 = exact two-stage grouped top-k with this
+    # many groups (match the mesh 'model' size so the heavy stage shards —
+    # DESIGN.md §3, EXPERIMENTS.md §Perf hillclimb 4)
+    topk_groups: int = 0
+
+    def __post_init__(self):
+        if self.k <= 0 or self.h < self.d or self.k > self.h:
+            raise ValueError(f"invalid SAEConfig: d={self.d} h={self.h} k={self.k}")
+        if self.k * self.aux_k_mult > self.h:
+            raise ValueError("aux_k_mult * k must not exceed h")
+
+    @property
+    def aux_k(self) -> int:
+        return self.k * self.aux_k_mult
+
+    @property
+    def compression_ratio(self) -> float:
+        """Dense fp32 bytes / sparse bytes (values+indices), paper's 12x."""
+        return (self.d * 4) / (2 * self.k * 4)

@@ -1,0 +1,16 @@
+from repro.data.synthetic import (
+    clustered_embeddings,
+    criteo_like_batch,
+    random_graph,
+    token_batch,
+)
+from repro.data.loader import ShardedLoader, LoaderState
+
+__all__ = [
+    "clustered_embeddings",
+    "criteo_like_batch",
+    "random_graph",
+    "token_batch",
+    "ShardedLoader",
+    "LoaderState",
+]

@@ -1,0 +1,150 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for sampled GNN training.
+
+Host-side numpy: builds a CSR adjacency once, then samples fixed-fanout
+k-hop neighborhoods producing *static-shaped* padded arrays (seed nodes →
+hop-1 fanout f1 → hop-2 fanout f2 …), which is what the jitted train step
+consumes.  Padding uses node -1 / edge mask conventions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray   # (N+1,)
+    indices: np.ndarray  # (E,) neighbor ids
+    n_nodes: int
+
+    @staticmethod
+    def from_edge_index(edge_index: np.ndarray, n_nodes: int) -> "CSRGraph":
+        src, dst = edge_index
+        order = np.argsort(dst, kind="stable")   # incoming-neighbor CSR
+        s = src[order]
+        counts = np.bincount(dst, minlength=n_nodes)
+        indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSRGraph(indptr=indptr, indices=s.astype(np.int32), n_nodes=n_nodes)
+
+
+def sample_subgraph(
+    graph: CSRGraph,
+    seeds: np.ndarray,
+    fanouts: Sequence[int],
+    rng: np.random.Generator,
+) -> Dict[str, np.ndarray]:
+    """Sample a fixed-fanout neighborhood.
+
+    Returns a padded, static-shaped subgraph:
+      nodes      (n_sub,)  original node ids (-1 = padding)
+      edge_index (2, e_sub) edges in *subgraph-local* indices; padded edges
+                 point at node 0 with mask 0
+      edge_mask  (e_sub,) 1.0 for real edges
+      seed_mask  (n_sub,) 1 for seed nodes (positions 0..len(seeds)-1)
+    where n_sub = B·(1 + f1 + f1·f2 + …) and e_sub = B·(f1 + f1·f2 + …).
+    """
+    layers = [seeds.astype(np.int32)]
+    edges_src: list[np.ndarray] = []
+    edges_dst: list[np.ndarray] = []
+    # subgraph-local ids are assigned positionally: seeds first, then each
+    # hop's sampled neighbors in order
+    offset = len(seeds)
+    frontier_local = np.arange(len(seeds), dtype=np.int32)
+    for f in fanouts:
+        frontier = layers[-1]
+        nbrs = np.full((len(frontier), f), -1, dtype=np.int32)
+        for i, node in enumerate(frontier):
+            if node < 0:
+                continue
+            lo, hi = graph.indptr[node], graph.indptr[node + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            pick = rng.integers(0, deg, size=f)
+            nbrs[i] = graph.indices[lo + pick]
+        flat = nbrs.reshape(-1)
+        local_ids = offset + np.arange(flat.size, dtype=np.int32)
+        # edge: sampled neighbor (src) -> frontier node (dst)
+        edges_src.append(local_ids)
+        edges_dst.append(np.repeat(frontier_local, f))
+        layers.append(flat)
+        frontier_local = local_ids
+        offset += flat.size
+
+    nodes = np.concatenate(layers)
+    src = np.concatenate(edges_src)
+    dst = np.concatenate(edges_dst)
+    mask = (nodes[src] >= 0).astype(np.float32)
+    src = np.where(nodes[src] >= 0, src, 0)
+    seed_mask = np.zeros(nodes.size, dtype=np.int32)
+    seed_mask[: len(seeds)] = 1
+    return {
+        "nodes": nodes,
+        "edge_index": np.stack([src, dst]).astype(np.int32),
+        "edge_mask": mask,
+        "seed_mask": seed_mask,
+    }
+
+
+def partition_edges_by_dst(
+    edge_index: np.ndarray,
+    n_nodes: int,
+    n_node_shards: int,
+    n_splits: int,
+    edge_mask: np.ndarray | None = None,
+) -> Dict[str, np.ndarray]:
+    """Reorder + pad edges for nequip_forward_sharded's contract.
+
+    Device (i, j) of a (node_shards × splits) edge grid must only hold
+    edges whose dst lies in node shard i.  This groups edges by dst shard,
+    pads every group to the max group size (rounded so the total divides
+    n_node_shards · n_splits), and emits the matching edge_mask.
+
+    Returns {"edge_index" (2, E'), "edge_mask" (E',)} with
+    E' = n_node_shards · per_shard, per_shard % n_splits == 0.
+    """
+    assert n_nodes % n_node_shards == 0
+    n_loc = n_nodes // n_node_shards
+    src, dst = edge_index
+    if edge_mask is None:
+        edge_mask = np.ones(src.shape[0], dtype=np.float32)
+    shard_of = dst // n_loc
+    groups_s, groups_d, groups_m = [], [], []
+    max_len = 0
+    for i in range(n_node_shards):
+        sel = (shard_of == i) & (edge_mask > 0)
+        groups_s.append(src[sel])
+        groups_d.append(dst[sel])
+        groups_m.append(edge_mask[sel])
+        max_len = max(max_len, int(sel.sum()))
+    per_shard = ((max_len + n_splits - 1) // n_splits) * n_splits
+    out_s, out_d, out_m = [], [], []
+    for i in range(n_node_shards):
+        pad = per_shard - groups_s[i].shape[0]
+        out_s.append(np.concatenate([groups_s[i],
+                                     np.zeros(pad, dtype=src.dtype)]))
+        # padded edges still point INSIDE shard i so dst-locality holds
+        out_d.append(np.concatenate([groups_d[i],
+                                     np.full(pad, i * n_loc, dtype=dst.dtype)]))
+        out_m.append(np.concatenate([groups_m[i],
+                                     np.zeros(pad, dtype=np.float32)]))
+    return {
+        "edge_index": np.stack([np.concatenate(out_s), np.concatenate(out_d)])
+        .astype(np.int32),
+        "edge_mask": np.concatenate(out_m),
+    }
+
+
+def subgraph_shapes(batch_nodes: int, fanouts: Sequence[int]) -> tuple[int, int]:
+    """(n_sub, e_sub) static shapes for a given sampling config."""
+    n = batch_nodes
+    n_sub = batch_nodes
+    e_sub = 0
+    for f in fanouts:
+        e_sub += n * f
+        n = n * f
+        n_sub += n
+    return n_sub, e_sub

@@ -1,0 +1,119 @@
+"""Synthetic data generators.
+
+The paper's corpus (O(10^8) media items embedded with Nomic) is proprietary.
+``clustered_embeddings`` generates a documented stand-in with the three
+properties that make embedding compression non-trivial and retrieval
+measurable:
+
+  1. cluster structure (items concentrate around topic centroids — what
+     retrieval must preserve),
+  2. decaying spectrum (energy concentrated in leading dims, matching text
+     embeddings and making prefix-truncation a *fair* Matryoshka analogue),
+  3. heavy-tailed cluster sizes (long-tail catalogs, paper §1).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def clustered_embeddings(
+    key: jax.Array,
+    n: int,
+    d: int = 768,
+    n_clusters: int = 64,
+    spectrum_decay: float = 0.65,
+    noise: float = 0.35,
+    zipf_a: float = 1.2,
+) -> jax.Array:
+    """(n, d) unit-norm embeddings with clustered, spectrally-decaying structure."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # per-dim scale ~ decaying spectrum: var_i = decay^(i / (d/8))
+    spectrum = spectrum_decay ** (jnp.arange(d) / (d / 8.0))
+    centroids = jax.random.normal(k1, (n_clusters, d)) * spectrum
+    # heavy-tailed cluster assignment (approximate Zipf via exponentiated uniforms)
+    u = jax.random.uniform(k2, (n,), minval=1e-6, maxval=1.0)
+    assign = jnp.clip((u ** (-1.0 / zipf_a) - 1.0), 0, n_clusters - 1).astype(jnp.int32)
+    base = centroids[assign]
+    x = base + noise * jax.random.normal(k3, (n, d)) * spectrum
+    # small per-item scale jitter so ‖x‖ is informative (paper normalizes it away)
+    scale = jnp.exp(0.1 * jax.random.normal(k4, (n, 1)))
+    x = x * scale
+    return x
+
+
+def token_batch(key: jax.Array, batch: int, seq: int, vocab: int):
+    """LM training batch: tokens + next-token labels."""
+    toks = jax.random.randint(key, (batch, seq + 1), 0, vocab, dtype=jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def criteo_like_batch(
+    key: jax.Array, batch: int, n_dense: int, vocab_sizes: list[int]
+):
+    """DLRM-style batch: dense features, one categorical id per table, label."""
+    kd, kc, kl = jax.random.split(key, 3)
+    dense = jax.random.normal(kd, (batch, n_dense))
+    maxv = np.array(vocab_sizes, dtype=np.int64)
+    u = jax.random.uniform(kc, (batch, len(vocab_sizes)))
+    cat = (u * jnp.asarray(maxv, dtype=jnp.float32)).astype(jnp.int32)
+    label = jax.random.bernoulli(kl, 0.25, (batch,)).astype(jnp.float32)
+    return {"dense": dense, "cat": cat, "label": label}
+
+
+def din_batch(key: jax.Array, batch: int, seq_len: int, n_items: int):
+    """DIN batch: behavior history (padded), target item, click label."""
+    kh, kt, kl, kp = jax.random.split(key, 4)
+    hist = jax.random.randint(kh, (batch, seq_len), 0, n_items, dtype=jnp.int32)
+    # random history lengths: pad tail with -1
+    lens = jax.random.randint(kp, (batch, 1), seq_len // 4, seq_len + 1)
+    pos = jnp.arange(seq_len)[None, :]
+    hist = jnp.where(pos < lens, hist, -1)
+    target = jax.random.randint(kt, (batch,), 0, n_items, dtype=jnp.int32)
+    label = jax.random.bernoulli(kl, 0.3, (batch,)).astype(jnp.float32)
+    return {"hist": hist, "target": target, "label": label}
+
+
+def bert4rec_batch(
+    key: jax.Array, batch: int, seq_len: int, n_items: int,
+    mask_id: int, n_negatives: int, mask_prob: float = 0.2,
+):
+    """Masked-item-prediction batch: exactly M = ceil(S·mask_prob) masked
+    positions per row (static shapes), shared sampled negatives."""
+    kh, km, kn = jax.random.split(key, 3)
+    m = max(1, int(seq_len * mask_prob))
+    hist = jax.random.randint(kh, (batch, seq_len), 0, n_items, dtype=jnp.int32)
+    # choose M distinct positions per row
+    scores = jax.random.uniform(km, (batch, seq_len))
+    _, pos_idx = jax.lax.top_k(scores, m)                    # (B, M)
+    pos_idx = pos_idx.astype(jnp.int32)
+    labels = jnp.take_along_axis(hist, pos_idx, axis=1)      # (B, M)
+    hist = jnp.asarray(hist).at[
+        jnp.arange(batch)[:, None], pos_idx
+    ].set(mask_id)
+    negatives = jax.random.randint(kn, (n_negatives,), 0, n_items, dtype=jnp.int32)
+    return {"hist": hist, "masked_positions": pos_idx, "labels": labels,
+            "negatives": negatives}
+
+
+def random_graph(
+    seed: int, n_nodes: int, n_edges: int, d_feat: int, with_positions: bool = True
+):
+    """Host-side random graph: edge_index (2, E) int32, features, positions.
+
+    numpy (not jax) — graph construction is a data-pipeline step.
+    Guarantees no self-loops; degree distribution ~ uniform.
+    """
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, size=n_edges, dtype=np.int32)
+    off = rng.integers(1, max(n_nodes, 2), size=n_edges, dtype=np.int64)
+    dst = ((src.astype(np.int64) + off) % n_nodes).astype(np.int32)
+    feats = rng.standard_normal((n_nodes, d_feat), dtype=np.float32)
+    out = {
+        "edge_index": np.stack([src, dst]),
+        "node_feat": feats,
+    }
+    if with_positions:
+        out["positions"] = rng.standard_normal((n_nodes, 3), dtype=np.float32) * 3.0
+    return out

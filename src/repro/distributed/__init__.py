@@ -1,0 +1,19 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    axis_rules,
+    current_rules,
+    shard_hint,
+    lm_param_pspecs,
+    lm_batch_pspecs,
+    cache_pspec,
+    sae_param_pspecs,
+    recsys_param_pspecs,
+    tree_replicated,
+    opt_state_pspecs,
+)
+
+__all__ = [
+    "AxisRules", "axis_rules", "current_rules", "shard_hint",
+    "lm_param_pspecs", "lm_batch_pspecs", "cache_pspec", "sae_param_pspecs",
+    "recsys_param_pspecs", "tree_replicated", "opt_state_pspecs",
+]

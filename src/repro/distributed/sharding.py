@@ -1,0 +1,228 @@
+"""Sharding rule tables (DESIGN.md §5).
+
+Axis semantics:
+  pod   — outermost data parallelism (crosses DCI; gradient all-reduce only)
+  data  — data parallelism + FSDP (params/opt-state sharded over it)
+  model — tensor / expert / vocab parallelism
+
+``shard_hint(x, kind)`` lets pure model code request activation shardings
+without importing mesh machinery: inside ``axis_rules(...)`` context it
+applies ``with_sharding_constraint``; outside (CPU unit tests) it is a
+no-op.  GSPMD propagation handles everything else; explicit hints exist for
+the places propagation picks badly (found during §Perf iteration).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Optional["AxisRules"]] = contextvars.ContextVar(
+    "axis_rules", default=None
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Maps logical activation kinds -> PartitionSpec."""
+
+    batch: tuple = ("pod", "data")    # logical batch axes
+    model: str = "model"
+    # per-kind specs; None entries mean "leave to propagation"
+    kinds: Optional[Dict[str, P]] = None
+
+    def _all_axes(self) -> tuple:
+        b = self.batch if isinstance(self.batch, tuple) else (self.batch,)
+        return (*b, self.model)
+
+    def spec(self, kind: str) -> Optional[P]:
+        defaults = {
+            # LM activations: the residual carried between layer groups is
+            # SEQUENCE-sharded over the model axis (Megatron-style sequence
+            # parallelism).  The layer-scan AD saves this carry per group —
+            # and XLA's loop-invariant convert hoisting materializes it
+            # twice (bf16 + f32) — so its footprint drives train-step HBM:
+            # seq-sharding cut command-r train temps 31.9 -> 5.0 GiB
+            # (EXPERIMENTS.md §Perf).  Only training touches this kind;
+            # decode's seq dim is 1 and never gets the hint.
+            "residual": P(self.batch, self.model, None),
+            "residual_batchsharded": P(self.batch, None, None),
+            "logits": P(self.batch, self.model),
+            # attention internals: full-head tensors shard heads over model;
+            # small-kv (hkv < 16) tensors replicate heads (DESIGN.md §5)
+            "attn_q": P(self.batch, None, self.model, None),
+            "attn_kv_small": P(self.batch, None, None, None),
+            "attn_kv_decode": P(self.batch, None, None, self.model),
+            # MoE: expert-major buffers shard experts over model
+            "moe_experts": P(self.model, None, None),
+            "tokens_2d": P(self.batch, None),
+            # GNN: per-node tensors shard nodes over (pod, data)
+            "gnn_feat": P(self.batch, None, None),
+            "gnn_out": P(self.batch, None),
+            # retrieval: candidate-major tensors shard over every axis
+            "cand_rows": P(self._all_axes(), None),
+            "cand_scores": P(None, self._all_axes()),
+            # generic
+            "batch_only": P(self.batch),
+            "tokens": P(self.batch, None),
+        }
+        if self.kinds and kind in self.kinds:
+            return self.kinds[kind]
+        return defaults.get(kind)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _RULES.get()
+
+
+def shard_hint(x: jax.Array, kind: str) -> jax.Array:
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = rules.spec(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ------------------------------------------------------------------ helpers
+def tree_replicated(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def opt_state_pspecs(param_specs: Any, opt_state: Any) -> Any:
+    """AdamState(step, mu, nu) with moments sharded like their params."""
+    from repro.optim import AdamState
+
+    return AdamState(step=P(), mu=param_specs, nu=jax.tree.map(lambda s: s, param_specs))
+
+
+# ------------------------------------------------------------- LM transformer
+def _lm_block_pspecs(block: Dict[str, Any]) -> Dict[str, Any]:
+    """Per-sub-layer stacked params (leading n_groups axis = None)."""
+    table = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, "data", "model"),
+        "wk": P(None, "data", "model"),
+        "wv": P(None, "data", "model"),
+        "wo": P(None, "model", "data"),
+        "q_norm": P(None, None),
+        "k_norm": P(None, None),
+        "w_gate": P(None, "data", "model"),
+        "w_up": P(None, "data", "model"),
+        "w_down": P(None, "model", "data"),
+        "router": P(None, "data", None),
+        "moe_gate": P(None, "model", "data", None),
+        "moe_up": P(None, "model", "data", None),
+        "moe_down": P(None, "model", None, "data"),
+    }
+    return {k: table[k] for k in block}
+
+
+def lm_param_pspecs(params: Dict[str, Any]) -> Dict[str, Any]:
+    tied = "unembed" not in params
+    specs: Dict[str, Any] = {
+        # untied: embed d_model-sharded (local token gathers), unembed
+        # vocab-sharded (TP logits).  Tied: embed must be VOCAB-sharded so
+        # its transpose yields vocab-sharded logits — otherwise the loss
+        # matmul contracts over a sharded d and replicates (B, V) logits.
+        "embed": P("model", None) if tied else P(None, "model"),
+        "ln_f": P(None),
+        "blocks": [_lm_block_pspecs(b) for b in params["blocks"]],
+    }
+    if not tied:
+        specs["unembed"] = P(None, "model")
+    return specs
+
+
+def lm_batch_pspecs(batch: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: P(("pod", "data"), None) for k in batch}
+
+
+def cache_pspec(n_kv_heads: int, model_size: int = 16) -> P:
+    """KV cache (n_groups, B, S, Hkv, hd): shard kv-heads over model when
+    divisible, else shard head_dim (DESIGN.md §5, decode path)."""
+    if n_kv_heads % model_size == 0:
+        return P(None, ("pod", "data"), None, "model", None)
+    return P(None, ("pod", "data"), None, None, "model")
+
+
+# ------------------------------------------------------------------ SAE
+def sae_param_pspecs(params: Dict[str, Any]) -> Dict[str, Any]:
+    """CompresSAE: h is the sharded axis on both matrices (DESIGN.md §5)."""
+    return {
+        "w_enc": P(None, "model"),
+        "b_enc": P("model"),
+        "w_dec": P("model", None),
+    }
+
+
+# ------------------------------------------------------------------ recsys
+MESH_DIV = 16  # production axis size both meshes share (data=model=16)
+
+
+def recsys_param_pspecs(params: Any) -> Any:
+    """Embedding tables: column-shard (embed_dim over model) when the dim
+    divides the axis, else row-shard over model (vocab padded to ×16 in the
+    configs).  MLP towers: FSDP over data on whichever dim divides.
+    Small/odd tensors replicate."""
+
+    def spec_for(path: tuple, leaf: Any) -> P:
+        keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        name = ".".join(str(k) for k in keys if k is not None)
+        is_table = (
+            "tables" in name or name.startswith("items")
+            or name.startswith("pos") or "lin" in name
+        )
+        if leaf.ndim == 2 and is_table:
+            if leaf.shape[-1] % MESH_DIV == 0:
+                if leaf.shape[0] % MESH_DIV == 0:
+                    return P("data", "model")  # 2-D sharded (padded vocab)
+                return P(None, "model")      # (V, dim): column-sharded
+            if leaf.shape[0] % MESH_DIV == 0:
+                return P("model", None)      # row-sharded (padded vocab)
+            return P()
+        if leaf.ndim == 2:                   # MLP / attention weights
+            if leaf.shape[0] % MESH_DIV == 0:
+                return P("data", None)
+            if leaf.shape[1] % MESH_DIV == 0:
+                return P(None, "data")
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ------------------------------------------------------------------ GNN
+def gnn_batch_pspecs(batch: Dict[str, Any]) -> Dict[str, Any]:
+    """Edges sharded over the full (pod·data·model) device set; node arrays
+    sharded over (pod, data) where the leading dim is nodes."""
+    specs = {}
+    for k, v in batch.items():
+        if k == "edge_index":
+            specs[k] = P(None, ("pod", "data", "model"))
+        elif k == "edge_mask":
+            specs[k] = P(("pod", "data", "model"))
+        elif k in ("node_feat", "positions"):
+            specs[k] = P(("pod", "data"), None)
+        elif k in ("labels", "graph_ids", "nodes", "seed_mask"):
+            specs[k] = P(("pod", "data"))
+        else:
+            specs[k] = P()
+    return specs

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for CompresSAE's compute hot-spots.
+
+Each subpackage ships:
+    kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+    ops.py    — jit'd public wrapper with CPU-interpret fallback
+    ref.py    — pure-jnp oracle used by tests/benchmarks
+
+Kernels:
+    sparse_dot    — scatter-query SpMV: fixed-k sparse candidates × dense
+                    query (retrieval scoring, paper §3.2)
+    topk_mask     — φ(·, k) abs-top-k activation (paper eq. 1)
+    fused_encode  — W_enc matmul + bias + φ(·, k) epilogue emitting sparse
+                    codes without materializing (B, h) pre-activations to
+                    HBM (beyond-paper memory-roofline optimization)
+    embedding_bag — gather + segment-reduce over an HBM-resident embedding
+                    table (recsys substrate; JAX has no native EmbeddingBag)
+"""
+from repro.kernels.sparse_dot import ops as sparse_dot_ops
+from repro.kernels.topk_mask import ops as topk_mask_ops
+from repro.kernels.fused_encode import ops as fused_encode_ops
+from repro.kernels.embedding_bag import ops as embedding_bag_ops
+
+__all__ = [
+    "sparse_dot_ops",
+    "topk_mask_ops",
+    "fused_encode_ops",
+    "embedding_bag_ops",
+]

@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for embedding_bag."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def embedding_bag(table: jax.Array, ids: jax.Array, mode: str = "sum") -> jax.Array:
+    """table (V, dim), ids (B, L) int32 (negative = pad) -> (B, dim)."""
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be sum|mean, got {mode}")
+    return embedding_bag_pallas(table, ids, mode=mode, interpret=not _on_tpu())

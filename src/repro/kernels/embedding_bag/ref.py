@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for embedding_bag (JAX has no native nn.EmbeddingBag).
+
+The gather + masked segment-reduce formulation — this is also the substrate
+implementation used by the recsys models (repro.layers.embedding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array, ids: jax.Array, mode: str = "sum"
+) -> jax.Array:
+    """table (V, dim); ids (B, L) int32, negative = padding.  -> (B, dim)."""
+    v = table.shape[0]
+    rows = table[jnp.clip(ids, 0, v - 1)]               # (B, L, dim)
+    valid = (ids >= 0)[..., None].astype(table.dtype)   # (B, L, 1)
+    out = jnp.sum(rows * valid, axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(jnp.sum(valid, axis=1), 1.0)
+    return out

@@ -1,0 +1,4 @@
+from repro.kernels.fused_encode.ops import fused_encode
+from repro.kernels.fused_encode.ref import fused_encode_ref
+
+__all__ = ["fused_encode", "fused_encode_ref"]

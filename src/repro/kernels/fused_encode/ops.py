@@ -1,0 +1,46 @@
+"""Public jit'd wrapper for fused_encode: normalize + pad + dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sae import normalize_input
+from repro.core.types import SparseCodes
+from repro.kernels.fused_encode.kernel import BLOCK_B, BLOCK_D, fused_encode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_d"))
+def fused_encode(
+    x: jax.Array,
+    w_enc: jax.Array,
+    b_enc: jax.Array,
+    k: int,
+    *,
+    block_b: int = BLOCK_B,
+    block_d: int = BLOCK_D,
+) -> SparseCodes:
+    """Dense (B, d) -> fixed-k SparseCodes without HBM pre-activations.
+
+    Equivalent to repro.core.sae.encode (same selection, same tie-breaks).
+    """
+    b, d = x.shape
+    h = w_enc.shape[1]
+    x = normalize_input(x)
+    bd = min(block_d, d)
+    bb = min(block_b, max(8, b))
+    pad_b = (-b) % bb
+    pad_d = (-d) % bd
+    if pad_b or pad_d:
+        x = jnp.pad(x, ((0, pad_b), (0, pad_d)))
+    if pad_d:
+        w_enc = jnp.pad(w_enc, ((0, pad_d), (0, 0)))
+    vals, idx = fused_encode_pallas(
+        x, w_enc, b_enc, k, interpret=not _on_tpu(), block_b=bb, block_d=bd
+    )
+    return SparseCodes(values=vals[:b], indices=idx[:b], dim=h)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused encoder: matmul + bias + abs-top-k codes."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.topk import abs_topk_sparse
+
+
+def fused_encode_ref(
+    x_norm: jax.Array, w_enc: jax.Array, b_enc: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """x_norm (B, d) [already L2-normalized], w_enc (d, h), b_enc (h,).
+
+    Returns (values (B, k) f32, indices (B, k) i32) of φ(x̄·W + b, k).
+    """
+    pre = x_norm @ w_enc + b_enc
+    return abs_topk_sparse(pre, k)

@@ -1,0 +1,4 @@
+from repro.kernels.sparse_dot.ops import sparse_dot
+from repro.kernels.sparse_dot.ref import sparse_dot_ref
+
+__all__ = ["sparse_dot", "sparse_dot_ref"]

@@ -1,0 +1,41 @@
+"""Public jit'd wrapper for the sparse_dot kernel.
+
+Pads N up to the tile size, dispatches to the Pallas kernel (interpret=True
+on CPU so the kernel body itself is what runs in tests), and exposes the
+same contract as ref.sparse_dot_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_dot.kernel import BLOCK_N, sparse_dot_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def sparse_dot(
+    values: jax.Array, indices: jax.Array, q: jax.Array, *, block_n: int = BLOCK_N
+) -> jax.Array:
+    """scores (Q, N): fixed-k sparse candidates scored against dense queries.
+
+    values (N, k) float32, indices (N, k) int32, q (Q, h) or (h,) float32.
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    n, k = values.shape
+    pad = (-n) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+    out = sparse_dot_pallas(
+        values, indices, q, interpret=not _on_tpu(), block_n=block_n
+    )
+    out = out[:, :n]
+    return out[0] if squeeze else out

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the scatter-query SpMV."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_dot_ref(values: jax.Array, indices: jax.Array, q: jax.Array) -> jax.Array:
+    """scores[qi, i] = sum_j values[i, j] * q[qi, indices[i, j]].
+
+    values: (N, k) float; indices: (N, k) int32 in [0, h); q: (Q, h).
+    Returns (Q, N) float32.
+    """
+    gathered = q[:, indices]                      # (Q, N, k)
+    return jnp.sum(gathered * values[None].astype(q.dtype), axis=-1)

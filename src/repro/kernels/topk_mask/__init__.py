@@ -1,0 +1,4 @@
+from repro.kernels.topk_mask.ops import topk_mask
+from repro.kernels.topk_mask.ref import topk_mask_ref
+
+__all__ = ["topk_mask", "topk_mask_ref"]

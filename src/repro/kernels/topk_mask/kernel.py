@@ -1,0 +1,59 @@
+"""φ(·, k) abs-top-k Pallas kernel (paper eq. 1).
+
+TPU mapping:
+  * x streams HBM→VMEM in (BLOCK_B, h) tiles; the full latent dim h stays
+    resident (h=4096 f32 ⇒ 16 KiB/row; BLOCK_B=256 ⇒ 4 MiB — fits VMEM).
+  * Selection is k rounds of masked-argmax on the VPU: per round, a lane
+    max-reduction finds the current row max of |x|, a broadcasted-iota
+    min-reduction breaks ties toward the lowest index (matching
+    jax.lax.top_k), the winner is recorded in the keep-mask and knocked out.
+    k ≪ h (32 vs 4096), so k·O(B·h) VPU work beats a full O(B·h·log h) sort
+    and — unlike lax.top_k/sort — uses only max/where/iota primitives that
+    Mosaic lowers natively.
+  * Everything is elementwise/reduction: no MXU, no gather; bound by HBM
+    stream of x in/out (roofline: memory term).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 256
+
+
+def _kernel(x_ref, out_ref, *, k: int):
+    x = x_ref[...]                                   # (BLOCK_B, h)
+    h = x.shape[-1]
+    absx = jnp.abs(x)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    def body(_, carry):
+        work, kept = carry
+        m = jnp.max(work, axis=-1, keepdims=True)            # row max
+        is_max = work == m
+        first = jnp.min(jnp.where(is_max, col, h), axis=-1, keepdims=True)
+        sel = col == first                                   # one per row
+        return jnp.where(sel, -jnp.inf, work), jnp.logical_or(kept, sel)
+
+    _, kept = jax.lax.fori_loop(
+        0, k, body, (absx, jnp.zeros(x.shape, dtype=jnp.bool_))
+    )
+    out_ref[...] = jnp.where(kept, x, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "block_b"))
+def topk_mask_pallas(
+    x: jax.Array, k: int, *, interpret: bool = False, block_b: int = BLOCK_B
+) -> jax.Array:
+    b, h = x.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, h), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,28 @@
+"""Public jit'd wrapper for topk_mask: pads the batch, handles leading dims."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_mask.kernel import BLOCK_B, topk_mask_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b"))
+def topk_mask(x: jax.Array, k: int, *, block_b: int = BLOCK_B) -> jax.Array:
+    """φ(x, k) over the last axis; any leading shape."""
+    lead = x.shape[:-1]
+    h = x.shape[-1]
+    flat = x.reshape(-1, h)
+    b = flat.shape[0]
+    bb = min(block_b, max(8, b))
+    pad = (-b) % bb
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    out = topk_mask_pallas(flat, k, interpret=not _on_tpu(), block_b=bb)
+    return out[:b].reshape(*lead, h)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the φ(·, k) abs-top-k activation."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.topk import abs_topk
+
+
+def topk_mask_ref(x: jax.Array, k: int) -> jax.Array:
+    """(B, h) -> (B, h): zero all but the k largest-|value| entries per row."""
+    return abs_topk(x, k)

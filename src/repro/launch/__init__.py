@@ -1,0 +1,3 @@
+# Launch layer: production mesh construction, multi-pod dry-run driver,
+# training/serving entry points.  dryrun.py must be executed as a script or
+# module FIRST in a fresh process (it sets XLA_FLAGS before importing jax).

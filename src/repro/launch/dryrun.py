@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every live (architecture × input-shape) cell, lower + compile the step
+function against the production mesh with ShapeDtypeStruct inputs (no
+allocation), print memory_analysis() (proves it fits) and cost_analysis()
+(feeds §Roofline), and optionally dump artifacts for the roofline pass.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import — run this
+module in a fresh process; don't import it from a session that already
+initialized jax.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.launch.mesh import make_production_mesh, to_shardings
+from repro.models import registry
+
+
+def lower_cell(cell, mesh, *, compile_: bool = True, rules=None):
+    """Lower (and compile) one cell on `mesh`.  Returns result dict."""
+    from repro.distributed.sharding import AxisRules, axis_rules
+
+    in_sh = to_shardings(cell.in_specs, mesh)
+    out_sh = to_shardings(cell.out_specs, mesh) if cell.out_specs is not None else None
+    # donation mirrors production: train steps update (params, opt) in place,
+    # decode steps update KV caches in place — without it the memory
+    # analysis double-counts every updated buffer as input + output copy
+    donate = {"train": (0, 1), "decode": (2,)}.get(cell.kind, ())
+    jitted = jax.jit(cell.fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    if rules is None:
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        rules = AxisRules(batch=batch_axes)
+    t0 = time.time()
+    with jax.set_mesh(mesh), axis_rules(rules):
+        lowered = jitted.lower(*cell.abstract_args)
+    t_lower = time.time() - t0
+    result = {
+        "arch": cell.arch, "shape": cell.shape, "kind": cell.kind,
+        "mesh": list(mesh.devices.shape), "lower_s": round(t_lower, 1),
+    }
+    if not compile_:
+        return result, lowered, None
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    result["cost"] = {
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "transcendentals": cost.get("transcendentals"),
+    }
+    return result, lowered, compiled
+
+
+def run_cell(arch, shape, multi_pod, out_dir=None, save_hlo=False):
+    cell = registry.build_cell(arch, shape, full=True)
+    if cell.skip:
+        print(f"[SKIP] {arch} × {shape}: {cell.skip}")
+        return {"arch": arch, "shape": shape, "skip": cell.skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = "multipod" if multi_pod else "singlepod"
+    print(f"[....] {arch} × {shape} ({tag}) lowering…", flush=True)
+    try:
+        result, lowered, compiled = lower_cell(cell, mesh)
+    except Exception as e:
+        print(f"[FAIL] {arch} × {shape}: {type(e).__name__}: {e}")
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape, "error": f"{type(e).__name__}: {e}"}
+    mem = result["memory"]
+    per_dev = (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+    print(
+        f"[ OK ] {arch} × {shape} ({tag}) "
+        f"args={_gb(mem['argument_bytes'])} temps={_gb(mem['temp_bytes'])} "
+        f"total={_gb(per_dev)} flops={result['cost']['flops']:.3e} "
+        f"(lower {result['lower_s']}s compile {result['compile_s']}s)",
+        flush=True,
+    )
+    if out_dir:
+        out = pathlib.Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        stem = f"{arch}__{shape}__{tag}"
+        (out / f"{stem}.json").write_text(json.dumps(result, indent=2))
+        if save_hlo:
+            (out / f"{stem}.hlo.txt").write_text(compiled.as_text())
+    return result
+
+
+def _gb(x):
+    return f"{(x or 0)/2**30:.2f}GiB"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    if args.all:
+        targets = [
+            (a, s) for a in registry.all_arch_ids() for s in registry.shapes_for(a)
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        targets = [(args.arch, args.shape)]
+    for multi_pod in meshes:
+        for arch, shape in targets:
+            results.append(run_cell(arch, shape, multi_pod, args.out, args.save_hlo))
+    n_fail = sum(1 for r in results if "error" in r)
+    n_skip = sum(1 for r in results if "skip" in r)
+    n_ok = len(results) - n_fail - n_skip
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped, {n_fail} failed ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

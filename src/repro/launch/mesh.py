@@ -1,0 +1,45 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+
+Single pod : (data=16, model=16)          = 256 chips (TPU v5e pod)
+Multi pod  : (pod=2, data=16, model=16)   = 512 chips; the 'pod' axis is
+             pure data parallelism whose only collective is the gradient
+             all-reduce (lowest frequency traffic on the slowest link).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def resolve_pspec(spec: P, mesh) -> P:
+    """Strip axis names that don't exist in `mesh` (e.g. 'pod' on the
+    single-pod mesh) from a PartitionSpec."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        kept = tuple(a for a in entry if a in names)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    return P(*(fix(e) for e in spec))
+
+
+def to_shardings(spec_tree, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree (mesh-resolved)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_pspec(s, mesh)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

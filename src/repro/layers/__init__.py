@@ -1,0 +1,3 @@
+from repro.layers import attention, embedding, mlp, moe, norms
+
+__all__ = ["attention", "embedding", "mlp", "moe", "norms"]

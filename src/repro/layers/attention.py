@@ -1,0 +1,224 @@
+"""Attention substrate: RoPE, chunked (flash-style) training/prefill
+attention, and single-token decode attention.  All functions are pure and
+GQA-aware (n_q_heads = G · n_kv_heads).
+
+Memory discipline: ``flash_attention`` never materializes the (Sq, Skv)
+score matrix — it scans q-chunks and, inside, kv-chunks with the running
+(max, denom, acc) online-softmax state.  This is what lets 32k-token
+prefill fit the dry-run memory budget (DESIGN.md §5).
+
+Sharding discipline: GQA is computed by expanding K/V to the full query
+head count via a static head-map gather (``kv_map``).  Every attention
+tensor then carries the full n_heads axis, which shards evenly over the
+16-way 'model' axis even when n_kv_heads < 16 (DESIGN.md §5).  The
+expansion is per-kv-chunk inside the scan, so the 8× blow-up is transient
+(a VMEM-scale tile), not a resident tensor.
+
+Supported variants (driven by the arch configs): causal / bidirectional,
+sliding-window (Gemma-2 local layers), attention-logit soft-capping
+(Gemma-2), GQA with any group size.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding, split-halves convention.  x (..., S, H, D),
+    positions (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    sin = jnp.sin(angles)[..., None, :]                            # (..., S, 1, half)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def _kv_map(hq: int, hkv: int) -> jax.Array:
+    """Static q-head -> kv-head index map for GQA expansion."""
+    g = hq // hkv
+    return jnp.repeat(jnp.arange(hkv, dtype=jnp.int32), g)
+
+
+# --------------------------------------------------- chunked flash attention
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array | int] = None,
+    logit_softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D); Hq % Hkv == 0.
+
+    Returns (B, Sq, Hq, D).  ``window`` masks keys with
+    col <= row - window (sliding-window attention); may be a traced scalar
+    so alternating-window stacks can share one jaxpr.
+    """
+    b, sq0, hq, d = q.shape
+    _, skv0, hkv, _ = k.shape
+    kvm = _kv_map(hq, hkv)
+    q_chunk = min(q_chunk, sq0)
+    kv_chunk = min(kv_chunk, skv0)
+    # pad ragged sequence lengths up to the chunk grid (masked out below)
+    pad_q = (-sq0) % q_chunk
+    pad_kv = (-skv0) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    sq, skv = sq0 + pad_q, skv0 + pad_kv
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    qs = jnp.moveaxis(
+        (q * (d ** -0.5)).reshape(b, nq, q_chunk, hq, d), 1, 0
+    )                                                  # (nq, B, qc, Hq, D)
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, hkv, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, hkv, d), 1, 0)
+
+    q_iota = jnp.arange(q_chunk)
+    k_iota = jnp.arange(kv_chunk)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk                             # (B, qc, Hq, D)
+        row = qi * q_chunk + q_iota                    # (qc,)
+
+        # remat: without this the scan-of-scan AD stacks every (qc, kc)
+        # probability block as a residual — the full S² attention matrix
+        # flash exists to avoid.  Recomputing p per block in the backward
+        # is the standard FlashAttention trade (one extra QK^T per block).
+        @jax.checkpoint
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            col = ki * kv_chunk + k_iota               # (kc,)
+            kx = kblk[:, :, kvm, :]                    # GQA expand (B,kc,Hq,D)
+            vx = vblk[:, :, kvm, :]
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk, kx,
+                preferred_element_type=jnp.float32,
+            )                                           # (B, Hq, qc, kc)
+            if logit_softcap is not None:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            mask = (col < skv0)[None, :] & jnp.ones((q_chunk, 1), dtype=bool)
+            if causal:
+                mask &= col[None, :] <= row[:, None]
+            if window is not None:
+                mask &= col[None, :] > row[:, None] - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vx.dtype), vx,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B, Hq, qc, D)
+        return None, jnp.moveaxis(out, 2, 1).astype(q.dtype)  # (B, qc, Hq, D)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1)                      # (B, nq, qc, Hq, D)
+    return out.reshape(b, sq, hq, d)[:, :sq0]
+
+
+# ------------------------------------------------------------ decode step
+def decode_attention_grouped(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    length: jax.Array | int,
+    window: Optional[jax.Array | int] = None,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-GQA decode: no KV expansion — used when n_kv_heads divides
+    the model axis, so the (hkv, G) head split shards cleanly and each
+    device's q-head group reads exactly its local kv head.  (The expand
+    path would all-gather the whole cache over heads: +2 GiB/layer at
+    gemma2 decode_32k shapes.)"""
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qr = (q * (d ** -0.5)).reshape(b, hkv, g, d)
+    scores = jnp.einsum(
+        "bhgd,bkhd->bhgk", qr, k_cache, preferred_element_type=jnp.float32
+    )                                                   # (B, Hkv, G, S)
+    if logit_softcap is not None:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    col = jnp.arange(s)
+    length = jnp.asarray(length)
+    lb = length if length.ndim else length[None]
+    valid = col[None, :] < lb[:, None]
+    if window is not None:
+        valid &= col[None, :] > lb[:, None] - 1 - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    length: jax.Array | int,
+    window: Optional[jax.Array | int] = None,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """One new token against a KV cache.
+
+    q (B, 1, Hq, D); caches (B, S, Hkv, D); length = number of valid cache
+    entries (scalar or (B,)).  Returns (B, 1, Hq, D).
+    """
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    kvm = _kv_map(hq, hkv)
+    kx = k_cache[:, :, kvm, :]                          # (B, S, Hq, D)
+    vx = v_cache[:, :, kvm, :]
+    qr = (q * (d ** -0.5)).reshape(b, hq, d)
+    scores = jnp.einsum(
+        "bhd,bkhd->bhk", qr, kx, preferred_element_type=jnp.float32
+    )                                                   # (B, Hq, S)
+    if logit_softcap is not None:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    col = jnp.arange(s)
+    length = jnp.asarray(length)
+    lb = length if length.ndim else length[None]
+    valid = col[None, :] < lb[:, None]                  # (B|1, S)
+    if window is not None:
+        valid &= col[None, :] > lb[:, None] - 1 - window
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhk,bkhd->bhd", p.astype(vx.dtype), vx,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Embedding substrate.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR/CSC sparse — the lookup
+substrate here is gather (``jnp.take``) + ``jax.ops.segment_sum``, with the
+Pallas kernel (repro.kernels.embedding_bag) as the TPU hot-path variant for
+fixed-width bags.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain row gather: (…,) int32 -> (…, dim)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag_segment(
+    table: jax.Array,
+    flat_ids: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    mode: str = "sum",
+) -> jax.Array:
+    """Ragged EmbeddingBag: gather + segment-reduce.
+
+    flat_ids (nnz,) int32 rows of ``table``; segment_ids (nnz,) int32
+    monotone bag assignment; -> (num_segments, dim).
+    """
+    rows = jnp.take(table, flat_ids, axis=0)            # (nnz, dim)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        ones = jnp.ones((flat_ids.shape[0],), table.dtype)
+        cnt = jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+        out = out / jnp.maximum(cnt[:, None], 1.0)
+    return out
+
+
+def embedding_bag_fixed(
+    table: jax.Array, ids: jax.Array, mode: str = "sum"
+) -> jax.Array:
+    """Fixed-width bags: ids (B, L), negative = padding. -> (B, dim).
+
+    Pure-jnp path (matches the Pallas kernel's oracle exactly).
+    """
+    v = table.shape[0]
+    rows = jnp.take(table, jnp.clip(ids, 0, v - 1), axis=0)   # (B, L, dim)
+    valid = (ids >= 0)[..., None].astype(table.dtype)
+    out = jnp.sum(rows * valid, axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(jnp.sum(valid, axis=1), 1.0)
+    return out

@@ -1,0 +1,25 @@
+"""Dense FFN variants (functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """LLaMA-family gated FFN: (silu(x·Wg) ⊙ x·Wu) · Wd."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, w_out: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w_in, approximate=True) @ w_out
+
+
+def mlp_stack(x: jax.Array, weights: list[jax.Array], biases: list[jax.Array],
+              final_activation: bool = False) -> jax.Array:
+    """Plain ReLU MLP tower (recsys models: DLRM/DIN/DeepFM)."""
+    n = len(weights)
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        x = x @ w + b
+        if i < n - 1 or final_activation:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,221 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design (DESIGN.md §5): the classic one-hot dispatch einsum builds an
+(N, E, C) mask — at N=65k tokens/device, E=128 that is unlowerable.  We use
+the sort-based (MegaBlocks-style) dispatch instead:
+
+    route → stable-sort slots by expert → positions via searchsorted →
+    drop beyond capacity → scatter tokens into an (E·C, d) buffer →
+    batched per-expert SwiGLU einsum (the grouped GEMM) → gather back →
+    weighted scatter-add to tokens.
+
+Everything is static-shaped (capacity C is a compile-time function of
+N, E, top_k, capacity_factor), so it lowers under pjit with experts sharded
+over the 'model' axis (expert parallelism).  Aux load-balance loss is the
+Switch formulation.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+    dropped_frac: jax.Array
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = math.ceil(n_tokens * top_k / n_experts * factor)
+    return max(8, int(math.ceil(c / 8) * 8))  # sublane-align
+
+
+def moe_ffn_sharded(
+    x: jax.Array,
+    router_w: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    norm_topk: bool = True,
+    batch_axes: tuple = ("data",),
+    model_axis: str = "model",
+) -> MoEOut:
+    """Expert-parallel MoE via shard_map (DESIGN.md §5).
+
+    Mesh contract: tokens are sharded over ``batch_axes`` and replicated
+    over ``model_axis``; experts are sharded over ``model_axis`` and
+    replicated over ``batch_axes``.  Every device therefore already holds
+    (its token shard) × (its expert shard): dispatch is a *local*
+    sort/scatter — no all-to-all — and the only collective is the psum of
+    partial expert outputs over ``model_axis``.  Under plain GSPMD the
+    sort-based dispatch is unpartitionable (it replicated the (N·K, d)
+    gather on every device — 104 GiB/device at qwen3-moe train shapes,
+    EXPERIMENTS.md §Perf); shard_map makes the locality explicit.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(mesh.shape)
+    n_model = sizes[model_axis]
+    n_bshards = 1
+    for a in batch_axes:
+        n_bshards *= sizes[a]
+    n, d = x.shape
+    e = router_w.shape[1]
+    e_loc = e // n_model
+    n_loc = n // n_bshards
+    c_loc = capacity(n_loc, e, top_k, capacity_factor)
+    bspec = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    def local_fn(x_l, rw, wg, wu, wd):
+        nl = x_l.shape[0]
+        logits = x_l.astype(jnp.float32) @ rw.astype(jnp.float32)   # (nl, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+        if norm_topk:
+            gate_vals = gate_vals / jnp.maximum(
+                jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+            )
+        j = jax.lax.axis_index(model_axis)
+        e_lo = j.astype(jnp.int32) * e_loc
+
+        slot_expert = gate_idx.reshape(-1).astype(jnp.int32)
+        slot_token = jnp.broadcast_to(
+            jnp.arange(nl, dtype=jnp.int32)[:, None], (nl, top_k)
+        ).reshape(-1)
+        slot_gate = gate_vals.reshape(-1)
+        # map to local expert ids; non-local slots -> drop bucket e_loc
+        se_rel = slot_expert - e_lo
+        local = (se_rel >= 0) & (se_rel < e_loc)
+        se_l = jnp.where(local, se_rel, e_loc)
+        order = jnp.argsort(se_l, stable=True)
+        se = se_l[order]
+        st = slot_token[order]
+        sg = slot_gate[order]
+        first = jnp.searchsorted(se, jnp.arange(e_loc, dtype=se.dtype))
+        pos = jnp.arange(nl * top_k, dtype=jnp.int32) - first[se].astype(jnp.int32)
+        keep = (se < e_loc) & (pos < c_loc)
+        dest = jnp.where(keep, se * c_loc + pos, e_loc * c_loc)
+
+        buf = jnp.zeros((e_loc * c_loc + 1, d), x_l.dtype).at[dest].set(x_l[st])
+        h = buf[: e_loc * c_loc].reshape(e_loc, c_loc, d)
+        act = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", h, wg, preferred_element_type=jnp.float32)
+        ) * jnp.einsum("ecd,edf->ecf", h, wu, preferred_element_type=jnp.float32)
+        out = jnp.einsum(
+            "ecf,efd->ecd", act.astype(x_l.dtype), wd,
+            preferred_element_type=jnp.float32,
+        ).astype(x_l.dtype)
+
+        out_flat = out.reshape(e_loc * c_loc, d)
+        slot_out = out_flat[jnp.minimum(dest, e_loc * c_loc - 1)]
+        slot_out = jnp.where(keep[:, None], slot_out, 0.0) * sg[:, None].astype(x_l.dtype)
+        y = jnp.zeros((nl, d), x_l.dtype).at[st].add(slot_out)
+        y = jax.lax.psum(y, model_axis)
+
+        # telemetry — Switch aux needs the GLOBAL f_e·p_e product: sync the
+        # per-shard stats over the batch axes before multiplying (the mean
+        # of per-shard products is a different, biased quantity)
+        top1 = gate_idx[:, 0]
+        f_e = jnp.zeros((e,), jnp.float32).at[top1].add(1.0) / nl
+        p_e = jnp.mean(probs, axis=0)
+        for a in batch_axes:
+            f_e = jax.lax.pmean(f_e, a)
+            p_e = jax.lax.pmean(p_e, a)
+        aux = e * jnp.sum(f_e * p_e)
+        kept = jax.lax.psum(jnp.sum(keep.astype(jnp.float32)), model_axis)
+        dropped = 1.0 - kept / (nl * top_k)
+        for a in batch_axes:
+            dropped = jax.lax.pmean(dropped, a)
+        return y, aux, dropped
+
+    y, aux, dropped = jax.shard_map(
+        local_fn,
+        in_specs=(
+            jax.P(bspec, None),
+            jax.P(None, None),
+            jax.P(model_axis, None, None),
+            jax.P(model_axis, None, None),
+            jax.P(model_axis, None, None),
+        ),
+        out_specs=(jax.P(bspec, None), jax.P(), jax.P()),
+    )(x, router_w, w_gate, w_up, w_down)
+    return MoEOut(y=y, aux_loss=aux, dropped_frac=dropped)
+
+
+def moe_ffn(
+    x: jax.Array,
+    router_w: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    norm_topk: bool = True,
+) -> MoEOut:
+    """x (N, d); router_w (d, E); w_gate/w_up (E, d, f); w_down (E, f, d)."""
+    n, d = x.shape
+    e = router_w.shape[1]
+    c = capacity(n, e, top_k, capacity_factor)
+
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)   # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)               # (N, K)
+    if norm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+
+    # ---- slot flattening & stable sort by expert
+    slot_expert = gate_idx.reshape(-1)                               # (N·K,)
+    slot_token = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[:, None], (n, top_k)
+    ).reshape(-1)
+    slot_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(slot_expert, stable=True)
+    se = slot_expert[order]
+    st = slot_token[order]
+    sg = slot_gate[order]
+
+    # ---- position within expert group; drop beyond capacity
+    first = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))      # (E,)
+    pos = jnp.arange(n * top_k, dtype=jnp.int32) - first[se].astype(jnp.int32)
+    keep = pos < c
+    dest = jnp.where(keep, se.astype(jnp.int32) * c + pos, e * c)    # sink row
+
+    # ---- dispatch: scatter tokens into the expert-major buffer
+    from repro.distributed.sharding import shard_hint
+
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[dest].set(x[st])
+    h = shard_hint(buf[: e * c].reshape(e, c, d), "moe_experts")
+
+    # ---- grouped GEMM (per-expert SwiGLU), expert-parallel over 'model'
+    act = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", h, w_gate, preferred_element_type=jnp.float32)
+    ) * jnp.einsum("ecd,edf->ecf", h, w_up, preferred_element_type=jnp.float32)
+    out = jnp.einsum(
+        "ecf,efd->ecd", act.astype(x.dtype), w_down,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = shard_hint(out, "moe_experts")
+
+    # ---- combine: gather expert outputs back to slots, weighted scatter-add
+    out_flat = out.reshape(e * c, d)
+    slot_out = out_flat[jnp.minimum(dest, e * c - 1)]
+    slot_out = jnp.where(keep[:, None], slot_out, 0.0) * sg[:, None].astype(x.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[st].add(slot_out)
+
+    # ---- aux losses / telemetry
+    # Switch load balance: E * Σ_e (frac tokens routed to e) · (mean prob e)
+    top1 = gate_idx[:, 0]
+    f_e = jnp.zeros((e,), jnp.float32).at[top1].add(1.0) / n
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (n * top_k)
+    return MoEOut(y=y, aux_loss=aux, dropped_frac=dropped)

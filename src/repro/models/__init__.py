@@ -1,0 +1,3 @@
+# Model zoo: transformer (LM family), nequip (equivariant GNN),
+# recsys (DLRM / DIN / DeepFM / BERT4Rec).  See repro.models.registry for
+# the arch-id -> model mapping used by configs and the launcher.

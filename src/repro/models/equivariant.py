@@ -1,0 +1,160 @@
+"""E(3)-equivariant substrate built from scratch (no e3nn dependency).
+
+Provides, for l ≤ 2 (NequIP config l_max=2):
+  * real spherical harmonics ``sh_l(v)`` of unit vectors,
+  * real-basis Clebsch-Gordan intertwiners C^{l1 l2 l3} computed at trace
+    time in numpy (complex Racah CG + real↔complex change of basis; the
+    1-D intertwiner space makes the real/imag selection exact),
+  * Wigner-D matrices for the *real* basis recovered numerically from the
+    identity  sh_l(R v) = D_l(R) sh_l(v)  (used by the equivariance tests).
+
+Everything is returned as plain numpy constants folded into the jaxpr —
+zero runtime cost.
+"""
+from __future__ import annotations
+
+import functools
+from math import factorial, sqrt
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------- complex Clebsch-Gordan
+def _cg_complex(j1: int, m1: int, j2: int, m2: int, j3: int, m3: int) -> float:
+    """Condon-Shortley CG coefficient ⟨j1 m1 j2 m2 | j3 m3⟩ (Racah)."""
+    if m3 != m1 + m2 or not abs(j1 - j2) <= j3 <= j1 + j2:
+        return 0.0
+    if abs(m1) > j1 or abs(m2) > j2 or abs(m3) > j3:
+        return 0.0
+    f = factorial
+    pref = sqrt(
+        (2 * j3 + 1)
+        * f(j3 + j1 - j2) * f(j3 - j1 + j2) * f(j1 + j2 - j3)
+        / f(j1 + j2 + j3 + 1)
+    )
+    pref *= sqrt(
+        f(j3 + m3) * f(j3 - m3)
+        * f(j1 - m1) * f(j1 + m1)
+        * f(j2 - m2) * f(j2 + m2)
+    )
+    s = 0.0
+    for k in range(0, j1 + j2 - j3 + 1):
+        denoms = [
+            k,
+            j1 + j2 - j3 - k,
+            j1 - m1 - k,
+            j2 + m2 - k,
+            j3 - j2 + m1 + k,
+            j3 - j1 - m2 + k,
+        ]
+        if any(d < 0 for d in denoms):
+            continue
+        s += (-1) ** k / np.prod([float(f(d)) for d in denoms])
+    return pref * s
+
+
+def _real_to_complex_matrix(l: int) -> np.ndarray:
+    """U with Y_l^m = Σ_mu U[m+l, mu+l] S_{l,mu} (standard real-SH bridge)."""
+    u = np.zeros((2 * l + 1, 2 * l + 1), dtype=np.complex128)
+    for m in range(-l, l + 1):
+        i = m + l
+        if m == 0:
+            u[i, l] = 1.0
+        elif m > 0:
+            u[i, l + m] = (-1) ** m / sqrt(2)
+            u[i, l - m] = 1j * (-1) ** m / sqrt(2)
+        else:  # m < 0
+            u[i, l - m] = 1 / sqrt(2)
+            u[i, l + m] = -1j / sqrt(2)
+    return u
+
+
+@functools.lru_cache(maxsize=None)
+def real_cg(l1: int, l2: int, l3: int) -> np.ndarray:
+    """Real-basis intertwiner C (2l1+1, 2l2+1, 2l3+1):
+    (u ⊗ v)_c = Σ_ab C[a,b,c] u_a v_b transforms as l3."""
+    u1 = _real_to_complex_matrix(l1)
+    u2 = _real_to_complex_matrix(l2)
+    u3 = _real_to_complex_matrix(l3)
+    c = np.zeros((2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1), dtype=np.complex128)
+    for m1 in range(-l1, l1 + 1):
+        for m2 in range(-l2, l2 + 1):
+            m3 = m1 + m2
+            if abs(m3) > l3:
+                continue
+            coeff = _cg_complex(l1, m1, l2, m2, l3, m3)
+            if coeff == 0.0:
+                continue
+            # C_real = U1^T diag-contract: C[a,b,c] += U1[m1,a] U2[m2,b] conj(U3[m3,c]) cg
+            c += coeff * np.einsum(
+                "a,b,c->abc",
+                u1[m1 + l1],
+                u2[m2 + l2],
+                np.conj(u3[m3 + l3]),
+            )
+    re, im = np.real(c), np.imag(c)
+    # the intertwiner space is 1-D: exactly one of re/im is (numerically) zero
+    out = re if np.abs(re).sum() >= np.abs(im).sum() else im
+    assert min(np.abs(re).sum(), np.abs(im).sum()) < 1e-10 * max(
+        np.abs(out).sum(), 1e-30
+    ), f"real CG not pure for ({l1},{l2},{l3})"
+    # normalize so ||C||_F = 1 (path normalization, e3nn 'component'-like)
+    n = np.linalg.norm(out)
+    return (out / n if n > 0 else out).astype(np.float32)
+
+
+# ----------------------------------------------- real spherical harmonics
+SH_C0 = 0.28209479177387814      # 1 / (2 sqrt(pi))
+SH_C1 = 0.4886025119029199
+SH_C2 = np.array([
+    1.0925484305920792,   # xy
+    1.0925484305920792,   # yz
+    0.31539156525252005,  # 3z^2 - 1
+    1.0925484305920792,   # xz
+    0.5462742152960396,   # x^2 - y^2
+])
+
+
+def spherical_harmonics(l: int, v: jax.Array) -> jax.Array:
+    """Real SH of (possibly non-unit) vectors v (..., 3) — normalized to the
+    unit sphere first.  Component order m = -l..l; l=1 order is (y, z, x)."""
+    r = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    u = v / jnp.maximum(r, 1e-9)
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    if l == 0:
+        return jnp.full((*v.shape[:-1], 1), SH_C0, v.dtype)
+    if l == 1:
+        return SH_C1 * jnp.stack([y, z, x], axis=-1)
+    if l == 2:
+        return jnp.stack(
+            [
+                SH_C2[0] * x * y,
+                SH_C2[1] * y * z,
+                SH_C2[2] * (3 * z * z - 1.0),
+                SH_C2[3] * x * z,
+                SH_C2[4] * (x * x - y * y),
+            ],
+            axis=-1,
+        )
+    raise NotImplementedError(f"l={l} > 2")
+
+
+def wigner_d_from_rotation(l: int, rot: np.ndarray, n_samples: int = 64,
+                           seed: int = 0) -> np.ndarray:
+    """Solve sh_l(R v) = D sh_l(v) for D by least squares (test utility)."""
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((n_samples, 3))
+    a = np.asarray(spherical_harmonics(l, jnp.asarray(v)))          # (S, 2l+1)
+    b = np.asarray(spherical_harmonics(l, jnp.asarray(v @ rot.T)))  # (S, 2l+1)
+    d, *_ = np.linalg.lstsq(a, b, rcond=None)
+    return d.T  # b^T = D a^T
+
+
+def random_rotation(seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q

@@ -1,0 +1,349 @@
+"""NequIP-style E(3)-equivariant interatomic GNN (arXiv:2101.03164).
+
+Config (assigned): n_layers=5, d_hidden=32 channels per irrep, l_max=2,
+n_rbf=8 Bessel radial basis, cutoff=5.0 Å.
+
+Message passing is the irrep tensor-product regime (kernel_taxonomy §GNN):
+per edge, sender features (l1) ⊗ spherical harmonics of the edge vector
+(l2) → receiver irrep l3 through the real-CG intertwiners, with per-path,
+per-channel weights produced by an MLP on the radial basis ('uvu'
+channel-wise tensor product).  Aggregation is ``jax.ops.segment_sum`` over
+the edge list (JAX-native scatter — the GNN message-passing primitive; no
+sparse formats needed).
+
+Features are a dict {l: (N, C, 2l+1)}.  CompresSAE is INAPPLICABLE to this
+arch (DESIGN.md §Arch-applicability): there is no catalog-scale embedding
+table, and compressing equivariant features would break E(3) symmetry.
+
+Two task heads (driven by the shape cell):
+  * node_classify — logits from invariant (l=0) features (cora/ogb cells),
+  * graph_regress — per-graph energy = sum of per-node scalars (molecule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.equivariant import real_cg, spherical_harmonics
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16              # raw node-feature dim (shape-cell specific)
+    n_out: int = 16               # classes (node_classify) / 1 (graph_regress)
+    task: str = "node_classify"   # or "graph_regress"
+    radial_hidden: int = 64
+    avg_degree: float = 8.0
+    param_dtype: Any = jnp.float32
+    # feature/message dtype: bf16 for web-scale graphs (ogb_products:
+    # 2.4M-node feature arrays + their AD cotangents dominate HBM; params
+    # and the task head stay f32)
+    feature_dtype: Any = jnp.float32
+
+    @property
+    def ls(self) -> Tuple[int, ...]:
+        return tuple(range(self.l_max + 1))
+
+    @property
+    def paths(self) -> Tuple[Tuple[int, int, int], ...]:
+        ps = []
+        for l1 in self.ls:
+            for l2 in self.ls:          # SH order
+                for l3 in self.ls:
+                    if abs(l1 - l2) <= l3 <= l1 + l2:
+                        ps.append((l1, l2, l3))
+        return tuple(ps)
+
+
+# ------------------------------------------------------------------- init
+def nequip_init(cfg: NequIPConfig, key: jax.Array) -> Params:
+    c = cfg.d_hidden
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    params: Params = {
+        "embed": jax.random.normal(ks[0], (cfg.d_feat, c), cfg.param_dtype)
+        / math.sqrt(cfg.d_feat),
+        "out_w": jax.random.normal(ks[1], (c, cfg.n_out), cfg.param_dtype)
+        / math.sqrt(c),
+        "out_b": jnp.zeros((cfg.n_out,), cfg.param_dtype),
+        "layers": [],
+    }
+    n_paths = len(cfg.paths)
+    for i in range(cfg.n_layers):
+        k = ks[4 + i]
+        kk = jax.random.split(k, 8)
+        layer = {
+            # radial MLP: rbf -> hidden -> per-(path, channel) weights
+            "rad_w1": jax.random.normal(
+                kk[0], (cfg.n_rbf, cfg.radial_hidden), cfg.param_dtype
+            ) / math.sqrt(cfg.n_rbf),
+            "rad_b1": jnp.zeros((cfg.radial_hidden,), cfg.param_dtype),
+            "rad_w2": jax.random.normal(
+                kk[1], (cfg.radial_hidden, n_paths * c), cfg.param_dtype
+            ) / math.sqrt(cfg.radial_hidden),
+            # per-l self-interaction (channel mix) before and after TP
+            "self1": {
+                str(l): jax.random.normal(kk[2 + l], (c, c), cfg.param_dtype)
+                / math.sqrt(c)
+                for l in cfg.ls
+            },
+            "self2": {
+                str(l): jax.random.normal(kk[5 + (l % 3)], (c, c), cfg.param_dtype)
+                / math.sqrt(c) * (0.5 if l else 1.0)
+                for l in cfg.ls
+            },
+            # gates for l>0 from scalars
+            "gate_w": jax.random.normal(kk[7], (c, c * cfg.l_max), cfg.param_dtype)
+            / math.sqrt(c),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+# ------------------------------------------------------------ radial basis
+def bessel_rbf(r: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """Bessel basis sin(nπr/rc)/r with smooth polynomial cutoff envelope."""
+    r = jnp.maximum(r, 1e-9)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n * jnp.pi * r[..., None] / cutoff
+    ) / r[..., None]
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5   # poly envelope p=3
+    return basis * env[..., None]
+
+
+# ---------------------------------------------------------------- forward
+def _feature_dict(x0: jax.Array, cfg: NequIPConfig) -> Dict[int, jax.Array]:
+    n, c = x0.shape
+    feats = {0: x0[..., None]}                       # (N, C, 1)
+    for l in cfg.ls[1:]:
+        feats[l] = jnp.zeros((n, c, 2 * l + 1), x0.dtype)
+    return feats
+
+
+def nequip_forward(
+    params: Params,
+    node_feat: jax.Array,      # (N, d_feat)
+    edge_index: jax.Array,     # (2, E) int32 [src, dst]
+    positions: jax.Array,      # (N, 3)
+    cfg: NequIPConfig,
+    edge_mask: Optional[jax.Array] = None,   # (E,) 1.0 = real, 0.0 = padding
+) -> jax.Array:
+    """Returns per-node outputs (N, n_out)."""
+    n = node_feat.shape[0]
+    c = cfg.d_hidden
+    src, dst = edge_index[0], edge_index[1]
+    rel = positions[dst] - positions[src]             # (E, 3)
+    r = jnp.linalg.norm(rel, axis=-1)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)        # (E, n_rbf)
+    sh = {l: spherical_harmonics(l, rel) for l in cfg.ls}   # (E, 2l+1)
+    cg = {p: jnp.asarray(real_cg(*p)) for p in cfg.paths}
+
+    feats = _feature_dict(node_feat @ params["embed"], cfg)
+    inv_sqrt_deg = 1.0 / math.sqrt(cfg.avg_degree)
+
+    for layer in params["layers"]:
+        # radial weights per (path, channel)
+        hidden = jax.nn.silu(rbf @ layer["rad_w1"] + layer["rad_b1"])
+        rad = (hidden @ layer["rad_w2"]).reshape(-1, len(cfg.paths), c)  # (E,P,C)
+
+        # self-interaction 1 (per-l channel mix)
+        f1 = {l: jnp.einsum("ncm,cd->ndm", feats[l], layer["self1"][str(l)])
+              for l in cfg.ls}
+
+        # tensor-product messages + scatter aggregation
+        agg = {l: jnp.zeros((n, c, 2 * l + 1), node_feat.dtype) for l in cfg.ls}
+        for pi, (l1, l2, l3) in enumerate(cfg.paths):
+            sender = f1[l1][src]                      # (E, C, 2l1+1)
+            msg = jnp.einsum(
+                "eca,eb,abz->ecz", sender, sh[l2], cg[(l1, l2, l3)]
+            )                                          # (E, C, 2l3+1)
+            msg = msg * rad[:, pi, :, None]
+            if edge_mask is not None:
+                msg = msg * edge_mask[:, None, None]
+            agg[l3] = agg[l3] + jax.ops.segment_sum(
+                msg, dst, num_segments=n
+            )
+        agg = {l: a * inv_sqrt_deg for l, a in agg.items()}
+
+        # self-interaction 2 + gated nonlinearity + residual
+        from repro.distributed.sharding import shard_hint
+
+        agg = {l: shard_hint(a, "gnn_feat") for l, a in agg.items()}
+        upd = {l: jnp.einsum("ncm,cd->ndm", agg[l], layer["self2"][str(l)])
+               for l in cfg.ls}
+        scalars = upd[0][..., 0]                      # (N, C)
+        new0 = feats[0] + jax.nn.silu(scalars)[..., None]
+        gates = jax.nn.sigmoid(scalars @ layer["gate_w"])   # (N, C·l_max)
+        new = {0: new0}
+        for li, l in enumerate(cfg.ls[1:]):
+            g = gates[:, li * c : (li + 1) * c]
+            new[l] = feats[l] + upd[l] * g[..., None]
+        feats = new
+
+    out = feats[0][..., 0] @ params["out_w"] + params["out_b"]
+    return out
+
+
+def nequip_forward_sharded(
+    params: Params,
+    node_feat: jax.Array,
+    edge_index: jax.Array,
+    positions: jax.Array,
+    cfg: NequIPConfig,
+    edge_mask: Optional[jax.Array],
+    *,
+    node_axes: tuple = ("data",),
+    model_axis: str = "model",
+) -> jax.Array:
+    """Distributed NequIP via shard_map (DESIGN.md §5).
+
+    Partitioning contract (the data pipeline enforces it — see
+    repro.data.sampler.partition_edges_by_dst):
+      * node features sharded over ``node_axes`` (contiguous blocks),
+      * edges sharded over (node_axes…, model) with edges PRE-PARTITIONED
+        by destination shard: device (i, j) only holds edges whose dst
+        lies in node shard i (padded per shard with edge_mask=0).
+
+    Per layer: all-gather node features over ``node_axes`` (so local edges
+    can gather any *sender*), local tensor-product messages, local
+    segment_sum directly into the (n_loc, C, 2l+1) destination shard, and
+    a psum over ``model_axis`` only.  No (N, …)-sized aggregation buffer
+    ever exists.  Plain GSPMD replicates every scatter operand instead
+    (139 GiB/device at ogb_products scale, EXPERIMENTS.md §Perf).
+    """
+    n = node_feat.shape[0]
+    c = cfg.d_hidden
+    cg = {p: jnp.asarray(real_cg(*p)) for p in cfg.paths}
+    inv_sqrt_deg = 1.0 / math.sqrt(cfg.avg_degree)
+    nspec = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
+    espec = (*node_axes, model_axis)
+
+    def local_fn(prm, nf_l, ei_l, pos_full, em_l):
+        n_loc = nf_l.shape[0]
+        # global -> shard-local destination ids
+        shard_idx = jax.lax.axis_index(node_axes[0])
+        for ax in node_axes[1:]:
+            shard_idx = shard_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        dst_off = shard_idx.astype(jnp.int32) * n_loc
+        src, dst = ei_l[0], ei_l[1]
+        dst_l = jnp.clip(dst - dst_off, 0, n_loc - 1)
+        # contract check baked into the mask: out-of-shard dst contribute 0
+        in_shard = (dst >= dst_off) & (dst < dst_off + n_loc)
+        em = in_shard.astype(nf_l.dtype)
+        if em_l is not None:
+            em = em * em_l
+
+        rel = pos_full[dst] - pos_full[src]
+        r = jnp.linalg.norm(rel, axis=-1)
+        rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+        sh = {l: spherical_harmonics(l, rel) for l in cfg.ls}
+
+        fdt = cfg.feature_dtype
+        x0 = (nf_l.astype(fdt)) @ prm["embed"].astype(fdt)   # (n_loc, C)
+        feats = _feature_dict(x0, cfg)
+
+        def layer_fn(feats, layer):
+            hidden = jax.nn.silu(rbf @ layer["rad_w1"] + layer["rad_b1"])
+            rad = (hidden @ layer["rad_w2"]).reshape(-1, len(cfg.paths), c)
+            rad = rad.astype(fdt)
+            # Sender gather grouped by l1 so at most ONE all-gathered
+            # (N, C, 2l+1) array is live at a time.
+            e_loc = src.shape[0]
+            msgs = {l: jnp.zeros((e_loc, c, 2 * l + 1), fdt) for l in cfg.ls}
+            for l1 in cfg.ls:
+                f1 = jnp.einsum(
+                    "ncm,cd->ndm", feats[l1], layer["self1"][str(l1)].astype(fdt)
+                )
+                for ax in reversed(node_axes):
+                    f1 = jax.lax.all_gather(f1, ax, axis=0, tiled=True)
+                sender = f1[src]
+                for pi, (p1, l2, l3) in enumerate(cfg.paths):
+                    if p1 != l1:
+                        continue
+                    msg = jnp.einsum(
+                        "eca,eb,abz->ecz", sender, sh[l2].astype(fdt),
+                        cg[(l1, l2, l3)].astype(fdt),
+                    )
+                    msgs[l3] = msgs[l3] + msg * rad[:, pi, :, None]
+            out = {}
+            for l in cfg.ls:
+                m = msgs[l] * em.astype(fdt)[:, None, None]
+                a = jax.ops.segment_sum(m, dst_l, num_segments=n_loc)
+                a = jax.lax.psum(a, model_axis)
+                out[l] = a * jnp.asarray(inv_sqrt_deg, fdt)   # (n_loc, C, 2l+1)
+            upd = {l: jnp.einsum("ncm,cd->ndm", out[l],
+                                 layer["self2"][str(l)].astype(fdt))
+                   for l in cfg.ls}
+            scalars = upd[0][..., 0]
+            new = {0: feats[0] + jax.nn.silu(scalars)[..., None]}
+            gates = jax.nn.sigmoid(scalars @ layer["gate_w"].astype(fdt))
+            for li, l in enumerate(cfg.ls[1:]):
+                g = gates[:, li * c : (li + 1) * c]
+                new[l] = feats[l] + upd[l] * g[..., None]
+            return new
+
+        for layer in prm["layers"]:
+            feats = jax.checkpoint(layer_fn)(feats, layer)
+        return (feats[0][..., 0].astype(jnp.float32) @ prm["out_w"]
+                + prm["out_b"])
+
+    return jax.shard_map(
+        local_fn,
+        in_specs=(
+            jax.tree.map(lambda _: jax.P(), params),
+            jax.P(nspec, None),
+            jax.P(None, espec),
+            jax.P(None, None),
+            (jax.P(espec) if edge_mask is not None else None),
+        ),
+        out_specs=jax.P(nspec, None),
+    )(params, node_feat, edge_index, positions, edge_mask)
+
+
+def nequip_loss(params: Params, batch: Dict, cfg: NequIPConfig):
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+    if rules is not None:
+        batch_axes = tuple(rules.batch) if isinstance(rules.batch, tuple) \
+            else (rules.batch,)
+        out = nequip_forward_sharded(
+            params, batch["node_feat"], batch["edge_index"], batch["positions"],
+            cfg, batch.get("edge_mask"),
+            node_axes=batch_axes, model_axis=rules.model,
+        )
+        return _nequip_task_loss(out, batch, cfg)
+    out = nequip_forward(
+        params, batch["node_feat"], batch["edge_index"], batch["positions"], cfg,
+        edge_mask=batch.get("edge_mask"),
+    )
+    return _nequip_task_loss(out, batch, cfg)
+
+
+def _nequip_task_loss(out: jax.Array, batch: Dict, cfg: NequIPConfig):
+    if cfg.task == "node_classify":
+        labels = batch["labels"]                       # (N,) int32; -1 = unlabeled
+        mask = labels >= 0
+        logz = jax.nn.logsumexp(out, axis=-1)
+        ll = jnp.take_along_axis(out, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+        loss = jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1)
+    else:  # graph_regress: segment-sum node scalars into per-graph energies
+        energies = jax.ops.segment_sum(
+            out[:, 0], batch["graph_ids"], num_segments=batch["energies"].shape[0]
+        )
+        loss = jnp.mean(jnp.square(energies - batch["energies"]))
+    return loss, {"loss": loss}

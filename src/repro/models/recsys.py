@@ -1,0 +1,404 @@
+"""RecSys architectures: DLRM (MLPerf), DeepFM, DIN, BERT4Rec.
+
+These are the paper's home domain.  Every model exposes:
+
+    init_params(cfg, key)          — parameter pytree
+    loss(params, batch, cfg)       — training objective (BCE / sampled xent)
+    serve(params, batch, cfg)      — pointwise scoring (serve_p99/serve_bulk)
+    user_vector(params, batch, cfg)— query-side representation for retrieval
+    retrieval head                 — see ``retrieval.py`` in this package:
+        dense scoring (baseline) and CompresSAE-compressed scoring (the
+        paper's production use case: the item catalog is stored as fixed-k
+        sparse codes and scored with the sparse_dot SpMV).
+
+Embedding lookups go through repro.layers.embedding (gather + segment_sum —
+JAX has no native EmbeddingBag; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.embedding import embedding_bag_fixed, embedding_lookup
+from repro.layers.mlp import mlp_stack
+
+Params = Dict[str, Any]
+
+# MLPerf DLRM (Criteo Terabyte) per-table vocabulary sizes, 26 tables.
+MLPERF_VOCAB_SIZES: Tuple[int, ...] = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+def _bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def _init_mlp(key, sizes: List[int], dtype) -> Tuple[list, list]:
+    ws, bs = [], []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        ws.append(jax.random.normal(k, (a, b), dtype) * math.sqrt(2.0 / a))
+        bs.append(jnp.zeros((b,), dtype))
+    return ws, bs
+
+
+# =============================================================== DLRM (MLPerf)
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: Tuple[int, ...] = MLPERF_VOCAB_SIZES
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    # fields treated as query-side for the two-tower retrieval head
+    n_user_fields: int = 13
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+
+def dlrm_init(cfg: DLRMConfig, key: jax.Array) -> Params:
+    kt, kb, ku = jax.random.split(key, 3)
+    tables = {
+        f"table_{i}": jax.random.normal(
+            jax.random.fold_in(kt, i), (v, cfg.embed_dim), cfg.param_dtype
+        ) / math.sqrt(cfg.embed_dim)
+        for i, v in enumerate(cfg.vocab_sizes)
+    }
+    bw, bb = _init_mlp(kb, [cfg.n_dense, *cfg.bot_mlp], cfg.param_dtype)
+    n_f = cfg.n_sparse + 1
+    n_inter = n_f * (n_f - 1) // 2
+    tw, tb = _init_mlp(ku, [cfg.bot_mlp[-1] + n_inter, *cfg.top_mlp], cfg.param_dtype)
+    return {"tables": tables, "bot_w": bw, "bot_b": bb, "top_w": tw, "top_b": tb}
+
+
+def _dlrm_features(params: Params, batch: Dict, cfg: DLRMConfig):
+    dense_out = mlp_stack(batch["dense"], params["bot_w"], params["bot_b"],
+                          final_activation=True)               # (B, 128)
+    embs = jnp.stack(
+        [embedding_lookup(params["tables"][f"table_{i}"], batch["cat"][:, i])
+         for i in range(cfg.n_sparse)],
+        axis=1,
+    )                                                           # (B, 26, 128)
+    return dense_out, embs
+
+
+def dlrm_forward(params: Params, batch: Dict, cfg: DLRMConfig) -> jax.Array:
+    dense_out, embs = _dlrm_features(params, batch, cfg)
+    z = jnp.concatenate([dense_out[:, None, :], embs], axis=1)  # (B, 27, 128)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)                    # (B, 27, 27)
+    n_f = z.shape[1]
+    iu, ju = jnp.triu_indices(n_f, k=1)
+    flat_inter = inter[:, iu, ju]                               # (B, 351)
+    top_in = jnp.concatenate([dense_out, flat_inter], axis=-1)
+    return mlp_stack(top_in, params["top_w"], params["top_b"])[:, 0]
+
+
+def dlrm_loss(params: Params, batch: Dict, cfg: DLRMConfig):
+    logits = dlrm_forward(params, batch, cfg)
+    loss = _bce_with_logits(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+def dlrm_serve(params: Params, batch: Dict, cfg: DLRMConfig) -> jax.Array:
+    return jax.nn.sigmoid(dlrm_forward(params, batch, cfg))
+
+
+def dlrm_user_vector(params: Params, batch: Dict, cfg: DLRMConfig) -> jax.Array:
+    """Two-tower query vector: bottom-MLP output + sum of user-side
+    embeddings (first n_user_fields tables) — DESIGN.md §Arch-applicability."""
+    dense_out, embs = _dlrm_features(params, batch, cfg)
+    return dense_out + jnp.sum(embs[:, : cfg.n_user_fields], axis=1)
+
+
+# ==================================================================== DeepFM
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    vocab_sizes: Tuple[int, ...] = tuple([1000] * 13 + [100000] * 26)  # 39 fields
+    embed_dim: int = 10
+    mlp: Tuple[int, ...] = (400, 400, 400)
+    n_user_fields: int = 20
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+
+def deepfm_init(cfg: DeepFMConfig, key: jax.Array) -> Params:
+    kt, kw, km = jax.random.split(key, 3)
+    tables = {
+        f"table_{i}": jax.random.normal(
+            jax.random.fold_in(kt, i), (v, cfg.embed_dim), cfg.param_dtype
+        ) / math.sqrt(cfg.embed_dim)
+        for i, v in enumerate(cfg.vocab_sizes)
+    }
+    lin = {
+        f"lin_{i}": jnp.zeros((v, 1), cfg.param_dtype)
+        for i, v in enumerate(cfg.vocab_sizes)
+    }
+    mw, mb = _init_mlp(km, [cfg.n_sparse * cfg.embed_dim, *cfg.mlp, 1],
+                       cfg.param_dtype)
+    return {"tables": tables, "lin": lin, "bias": jnp.zeros((), cfg.param_dtype),
+            "mlp_w": mw, "mlp_b": mb}
+
+
+def deepfm_forward(params: Params, batch: Dict, cfg: DeepFMConfig) -> jax.Array:
+    cat = batch["cat"]                                          # (B, 39)
+    embs = jnp.stack(
+        [embedding_lookup(params["tables"][f"table_{i}"], cat[:, i])
+         for i in range(cfg.n_sparse)],
+        axis=1,
+    )                                                           # (B, 39, 10)
+    first = params["bias"] + sum(
+        embedding_lookup(params["lin"][f"lin_{i}"], cat[:, i])[:, 0]
+        for i in range(cfg.n_sparse)
+    )                                                           # (B,)
+    s = jnp.sum(embs, axis=1)
+    fm = 0.5 * jnp.sum(jnp.square(s) - jnp.sum(jnp.square(embs), axis=1), axis=-1)
+    deep_in = embs.reshape(embs.shape[0], -1)
+    deep = mlp_stack(deep_in, params["mlp_w"], params["mlp_b"])[:, 0]
+    return first + fm + deep
+
+
+def deepfm_loss(params: Params, batch: Dict, cfg: DeepFMConfig):
+    logits = deepfm_forward(params, batch, cfg)
+    loss = _bce_with_logits(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+def deepfm_serve(params: Params, batch: Dict, cfg: DeepFMConfig) -> jax.Array:
+    return jax.nn.sigmoid(deepfm_forward(params, batch, cfg))
+
+
+def deepfm_user_vector(params: Params, batch: Dict, cfg: DeepFMConfig) -> jax.Array:
+    cat = batch["cat"]
+    embs = jnp.stack(
+        [embedding_lookup(params["tables"][f"table_{i}"], cat[:, i])
+         for i in range(cfg.n_user_fields)],
+        axis=1,
+    )
+    return jnp.sum(embs, axis=1)                                # (B, 10)
+
+
+# ======================================================================== DIN
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    param_dtype: Any = jnp.float32
+
+
+def din_init(cfg: DINConfig, key: jax.Array) -> Params:
+    kt, ka, km = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    aw, ab = _init_mlp(ka, [4 * d, *cfg.attn_mlp, 1], cfg.param_dtype)
+    mw, mb = _init_mlp(km, [3 * d, *cfg.mlp, 1], cfg.param_dtype)
+    return {
+        "items": jax.random.normal(kt, (cfg.n_items, d), cfg.param_dtype)
+        / math.sqrt(d),
+        "attn_w": aw, "attn_b": ab, "mlp_w": mw, "mlp_b": mb,
+    }
+
+
+def _din_user_vec(params: Params, hist_emb, hist_mask, target_emb):
+    """Target-aware attention pooling.  hist_emb (B, T, d); target (B, d)
+    (or (B, C, d) for batched candidate scoring via leading broadcast)."""
+    t = jnp.broadcast_to(target_emb[:, None, :], hist_emb.shape)
+    feats = jnp.concatenate(
+        [hist_emb, t, hist_emb * t, hist_emb - t], axis=-1
+    )                                                           # (B, T, 4d)
+    w = mlp_stack(feats, params["attn_w"], params["attn_b"])[..., 0]  # (B, T)
+    w = jnp.where(hist_mask, w, 0.0)            # DIN: no softmax normalization
+    return jnp.einsum("bt,btd->bd", w, hist_emb)
+
+
+def din_forward(params: Params, batch: Dict, cfg: DINConfig) -> jax.Array:
+    hist = batch["hist"]                                        # (B, T) -1 pad
+    target = batch["target"]                                    # (B,)
+    hist_emb = embedding_lookup(params["items"], jnp.maximum(hist, 0))
+    mask = hist >= 0
+    hist_emb = hist_emb * mask[..., None]
+    t_emb = embedding_lookup(params["items"], target)
+    u = _din_user_vec(params, hist_emb, mask, t_emb)
+    x = jnp.concatenate([u, t_emb, u * t_emb], axis=-1)
+    return mlp_stack(x, params["mlp_w"], params["mlp_b"])[:, 0]
+
+
+def din_loss(params: Params, batch: Dict, cfg: DINConfig):
+    logits = din_forward(params, batch, cfg)
+    loss = _bce_with_logits(logits, batch["label"])
+    return loss, {"loss": loss}
+
+
+def din_serve(params: Params, batch: Dict, cfg: DINConfig) -> jax.Array:
+    return jax.nn.sigmoid(din_forward(params, batch, cfg))
+
+
+def din_score_candidate_embs(
+    params: Params, batch: Dict, c_emb: jax.Array, cfg: DINConfig
+) -> jax.Array:
+    """Exact vectorized DIN scoring given candidate embeddings (C, d):
+    target-aware attention recomputed per candidate — batched einsum,
+    not a loop.  Returns (1, C)."""
+    hist = batch["hist"]                                        # (1, T)
+    hist_emb = embedding_lookup(params["items"], jnp.maximum(hist, 0))
+    mask = hist >= 0
+    hist_emb = hist_emb * mask[..., None]
+    t = c_emb[None, :, None, :]                                 # (1, C, 1, d)
+    h = hist_emb[:, None, :, :]                                 # (1, 1, T, d)
+    hb = jnp.broadcast_to(h, (1, c_emb.shape[0], *hist_emb.shape[1:]))
+    tb = jnp.broadcast_to(t, hb.shape)
+    feats = jnp.concatenate([hb, tb, hb * tb, hb - tb], axis=-1)
+    w = mlp_stack(feats, params["attn_w"], params["attn_b"])[..., 0]  # (1,C,T)
+    w = jnp.where(mask[:, None, :], w, 0.0)
+    u = jnp.einsum("bct,btd->bcd", w, hist_emb)                 # (1, C, d)
+    x = jnp.concatenate([u, tb[:, :, 0, :], u * tb[:, :, 0, :]], axis=-1)
+    return mlp_stack(x, params["mlp_w"], params["mlp_b"])[..., 0]  # (1, C)
+
+
+def din_score_candidates(
+    params: Params, batch: Dict, candidates: jax.Array, cfg: DINConfig
+) -> jax.Array:
+    """retrieval_cand cell: candidates (C,) item ids -> scores (1, C)."""
+    c_emb = embedding_lookup(params["items"], candidates)       # (C, d)
+    return din_score_candidate_embs(params, batch, c_emb, cfg)
+
+
+def din_user_vector(params: Params, batch: Dict, cfg: DINConfig) -> jax.Array:
+    """Sum-pooled user vector (two-tower mode for compressed retrieval)."""
+    hist = batch["hist"]
+    hist_emb = embedding_lookup(params["items"], jnp.maximum(hist, 0))
+    mask = (hist >= 0)[..., None]
+    return jnp.sum(hist_emb * mask, axis=1)
+
+
+# =================================================================== BERT4Rec
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: int = 256
+    n_negatives: int = 1024
+    param_dtype: Any = jnp.float32
+
+    @property
+    def vocab(self) -> int:
+        return self.n_items + 2          # + padding id, + [MASK] id
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items + 1
+
+
+def bert4rec_init(cfg: Bert4RecConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    d = cfg.embed_dim
+    params: Params = {
+        "items": jax.random.normal(ks[0], (cfg.vocab, d), cfg.param_dtype)
+        / math.sqrt(d),
+        "pos": 0.02 * jax.random.normal(ks[1], (cfg.seq_len, d), cfg.param_dtype),
+        "ln_f": jnp.zeros((d,), cfg.param_dtype),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        k = ks[4 + i]
+        kk = jax.random.split(k, 6)
+        std = 0.02
+        params["blocks"].append({
+            "ln1": jnp.zeros((d,), cfg.param_dtype),
+            "ln2": jnp.zeros((d,), cfg.param_dtype),
+            "wq": std * jax.random.normal(kk[0], (d, d), cfg.param_dtype),
+            "wk": std * jax.random.normal(kk[1], (d, d), cfg.param_dtype),
+            "wv": std * jax.random.normal(kk[2], (d, d), cfg.param_dtype),
+            "wo": std * jax.random.normal(kk[3], (d, d), cfg.param_dtype),
+            "w_in": std * jax.random.normal(kk[4], (d, cfg.d_ff), cfg.param_dtype),
+            "w_out": std * jax.random.normal(kk[5], (cfg.d_ff, d), cfg.param_dtype),
+        })
+    return params
+
+
+def bert4rec_encode(params: Params, hist: jax.Array, cfg: Bert4RecConfig) -> jax.Array:
+    """Bidirectional encoder over item sequence.  hist (B, S) int32 ids
+    (pad id = n_items).  Returns hidden (B, S, d)."""
+    from repro.layers.attention import flash_attention
+    from repro.layers.norms import layer_norm
+
+    b, s = hist.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    x = embedding_lookup(params["items"], hist) + params["pos"][None, :s]
+    for blk in params["blocks"]:
+        hn = layer_norm(x, 1.0 + blk["ln1"])
+        q = (hn @ blk["wq"]).reshape(b, s, h, d // h)
+        k = (hn @ blk["wk"]).reshape(b, s, h, d // h)
+        v = (hn @ blk["wv"]).reshape(b, s, h, d // h)
+        o = flash_attention(q, k, v, causal=False, q_chunk=128, kv_chunk=128)
+        x = x + o.reshape(b, s, d) @ blk["wo"]
+        hn = layer_norm(x, 1.0 + blk["ln2"])
+        x = x + jax.nn.gelu(hn @ blk["w_in"], approximate=True) @ blk["w_out"]
+    return layer_norm(x, 1.0 + params["ln_f"])
+
+
+def bert4rec_loss(params: Params, batch: Dict, cfg: Bert4RecConfig):
+    """Masked-item prediction with shared sampled negatives.
+
+    batch: hist (B, S) with [MASK] tokens already substituted;
+           masked_positions (B, M) indices of the masked slots (fixed M —
+              static shapes; may repeat position 0 with label -1 padding);
+           labels (B, M) true ids at those positions, -1 = padding;
+           negatives (K,) sampled item ids.
+
+    Scoring only the M masked positions (instead of all S) keeps the
+    sampled-softmax logits at (B, M, K) — 5x smaller at the standard 20%
+    mask rate.
+    """
+    hidden = bert4rec_encode(params, batch["hist"], cfg)        # (B, S, d)
+    pos_idx = batch["masked_positions"]                          # (B, M)
+    labels = batch["labels"]                                     # (B, M)
+    h = jnp.take_along_axis(hidden, pos_idx[..., None], axis=1)  # (B, M, d)
+    mask = labels >= 0
+    pos_emb = embedding_lookup(params["items"], jnp.maximum(labels, 0))
+    neg_emb = embedding_lookup(params["items"], batch["negatives"])  # (K, d)
+    pos_logit = jnp.sum(h * pos_emb, axis=-1)                    # (B, M)
+    neg_logit = jnp.einsum("bmd,kd->bmk", h, neg_emb)            # (B, M, K)
+    logz = jax.nn.logsumexp(
+        jnp.concatenate([pos_logit[..., None], neg_logit], axis=-1), axis=-1
+    )
+    nll = (logz - pos_logit) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"loss": loss}
+
+
+def bert4rec_user_vector(params: Params, batch: Dict, cfg: Bert4RecConfig) -> jax.Array:
+    """Next-item query vector: hidden state at the final ([MASK]) position."""
+    hidden = bert4rec_encode(params, batch["hist"], cfg)
+    return hidden[:, -1, :]                                     # (B, d)
+
+
+def bert4rec_serve(params: Params, batch: Dict, cfg: Bert4RecConfig) -> jax.Array:
+    """Score a provided candidate set per user: (B, C)."""
+    u = bert4rec_user_vector(params, batch, cfg)                # (B, d)
+    c_emb = embedding_lookup(params["items"], batch["candidates"])  # (B, C, d)
+    return jnp.einsum("bd,bcd->bc", u, c_emb)

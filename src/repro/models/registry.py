@@ -1,0 +1,670 @@
+"""Arch registry: builds every (architecture × input-shape) cell.
+
+A *cell* is a lowering unit for the dry-run and the roofline pass:
+
+    Cell(fn, abstract_args, in_specs, out_specs, kind, skip)
+
+``abstract_args`` are ShapeDtypeStructs — nothing is allocated; the dry-run
+does ``jax.jit(fn, in_shardings=…, out_shardings=…).lower(*abstract_args)``.
+Smoke tests build the same cells from the *smoke* configs with real
+(tiny) arrays via ``materialize_args``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sae as sae_lib
+from repro.core.types import SAEConfig
+from repro.distributed import sharding as shd
+from repro.optim import AdamConfig, AdamState, adam_init, adam_update
+
+# ---------------------------------------------------------------- plumbing
+_CONFIG_MODULES = {
+    "command-r-35b": "repro.configs.command_r_35b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "nequip": "repro.configs.nequip_cfg",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "din": "repro.configs.din_cfg",
+    "deepfm": "repro.configs.deepfm_cfg",
+    "bert4rec": "repro.configs.bert4rec_cfg",
+}
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+# the paper's own production workloads (beyond the assigned 40 cells):
+# SAE training at the paper's batch size, offline bulk compression of a
+# catalog shard, and sparse retrieval over an O(10^8) catalog (paper §1)
+SAE_SHAPES = ("train_100k", "compress_1m", "retrieval_100m")
+
+TOP_N = 100              # retrieval result size
+SERVE_SLATE = 100        # bert4rec rerank slate
+
+# CompresSAE config per recsys arch for the retrieval_cand cell: k chosen so
+# the compressed code (2k·4 B) is ~8x smaller than the fp32 embedding row,
+# mirroring the paper's 12x point at d=768 (DESIGN.md §4).
+RETRIEVAL_SAE: Dict[str, SAEConfig] = {
+    "dlrm-mlperf": SAEConfig(d=128, h=2048, k=8),
+    "deepfm": SAEConfig(d=10, h=128, k=2, aux_k_mult=4),
+    "bert4rec": SAEConfig(d=64, h=1024, k=4),
+    "din": SAEConfig(d=18, h=256, k=2),
+}
+
+OPT = AdamConfig(lr=1e-4, grad_clip_norm=1.0)
+
+
+def arch_module(arch: str):
+    return importlib.import_module(_CONFIG_MODULES[arch])
+
+
+def all_arch_ids() -> Tuple[str, ...]:
+    return tuple(_CONFIG_MODULES) + ("compressae",)
+
+
+def shapes_for(arch: str) -> Tuple[str, ...]:
+    if arch == "compressae":
+        return SAE_SHAPES
+    fam = arch_module(arch).FAMILY
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}[fam]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                         # train | prefill | decode | serve | retrieval
+    fn: Optional[Callable] = None
+    abstract_args: Optional[tuple] = None
+    in_specs: Any = None
+    out_specs: Any = None
+    skip: Optional[str] = None
+    # metadata for the roofline (model-flops accounting)
+    meta: Optional[Dict[str, Any]] = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: _sds(x.shape, x.dtype), tree)
+
+
+# =================================================================== LM cells
+LM_SHAPE_DEFS = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+    "long_500k": dict(seq=524288, batch=1),
+}
+
+
+def _lm_train_step(cfg, grad_accum: int):
+    from repro.models.transformer import lm_loss
+
+    def step(params, opt, batch):
+        def loss_fn(p, mb):
+            return lm_loss(p, mb, cfg)
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]),
+            batch,
+        )
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (grads, loss), _ = jax.lax.scan(acc, (zeros, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        new_params, new_opt = adam_update(grads, opt, params, OPT)
+        return new_params, new_opt, {"loss": loss / grad_accum}
+
+    return step
+
+
+def _lm_cell(arch: str, shape: str, full: bool) -> Cell:
+    mod = arch_module(arch)
+    if shape in mod.SKIP:
+        return Cell(arch=arch, shape=shape, kind="skip", skip=mod.SKIP[shape])
+    cfg = mod.full() if full else mod.smoke()
+    sdef = LM_SHAPE_DEFS[shape]
+    seq, batch = (sdef["seq"], sdef["batch"]) if full else (64, 8)
+    from repro.models import transformer as T
+
+    params_a = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = shd.lm_param_pspecs(params_a)
+    meta = dict(cfg=cfg, seq=seq, batch=batch)
+
+    if shape == "train_4k":
+        ga = mod.GRAD_ACCUM.get(shape, 1) if full else 1
+        opt_a = jax.eval_shape(lambda: adam_init(params_a))
+        ospecs = AdamState(step=P(), mu=pspecs, nu=pspecs)
+        batch_a = {
+            "tokens": _sds((batch, seq), jnp.int32),
+            "labels": _sds((batch, seq), jnp.int32),
+        }
+        return Cell(
+            arch=arch, shape=shape, kind="train",
+            fn=_lm_train_step(cfg, ga),
+            abstract_args=(params_a, opt_a, batch_a),
+            in_specs=(pspecs, ospecs, shd.lm_batch_pspecs(batch_a)),
+            out_specs=(pspecs, ospecs, P()),
+            meta={**meta, "grad_accum": ga},
+        )
+
+    if shape in ("prefill_32k",):
+        tokens_a = _sds((batch, seq), jnp.int32)
+        cspec = shd.cache_pspec(cfg.n_kv_heads)
+        cache_specs = [(cspec, cspec) for _ in range(cfg.group_size)]
+        fn = lambda p, t: T.prefill(p, t, cfg)
+        return Cell(
+            arch=arch, shape=shape, kind="prefill",
+            fn=fn,
+            abstract_args=(params_a, tokens_a),
+            in_specs=(pspecs, P(("pod", "data"), None)),
+            out_specs=(P(("pod", "data"), "model"), cache_specs),
+            meta=meta,
+        )
+
+    # decode shapes: one new token, cache of length seq
+    caches_a = [
+        (
+            _sds((cfg.n_groups, batch, seq, cfg.n_kv_heads, cfg.hd), cfg.compute_dtype),
+            _sds((cfg.n_groups, batch, seq, cfg.n_kv_heads, cfg.hd), cfg.compute_dtype),
+        )
+        for _ in range(cfg.group_size)
+    ]
+    token_a = _sds((batch, 1), jnp.int32)
+    pos_a = _sds((), jnp.int32)
+    cspec = shd.cache_pspec(cfg.n_kv_heads)
+    cache_specs = [(cspec, cspec) for _ in range(cfg.group_size)]
+    fn = lambda p, t, c, pos: T.decode_step(p, t, c, pos, cfg)
+    return Cell(
+        arch=arch, shape=shape, kind="decode",
+        fn=fn,
+        abstract_args=(params_a, token_a, caches_a, pos_a),
+        in_specs=(pspecs, P(("pod", "data"), None), cache_specs, P()),
+        out_specs=(P(("pod", "data"), "model"), cache_specs),
+        meta=meta,
+    )
+
+
+# ================================================================== GNN cells
+GNN_SHAPE_DEFS = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556),
+    "minibatch_lg": dict(batch_nodes=1024, fanouts=(15, 10)),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140),
+    "molecule": dict(n_graphs=128, nodes_per=30, edges_per=64),
+}
+
+
+def _gnn_train_step(cfg):
+    from repro.models.nequip import nequip_loss
+
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: nequip_loss(p, batch, cfg), has_aux=True
+        )(params)
+        new_params, new_opt = adam_update(grads, opt, params, OPT)
+        return new_params, new_opt, {"loss": loss}
+
+    return step
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _gnn_cell(arch: str, shape: str, full: bool) -> Cell:
+    mod = arch_module(arch)
+    from repro.models import nequip as N
+
+    cfg = mod.full(shape) if full else mod.smoke()
+    sdef = GNN_SHAPE_DEFS[shape]
+    if shape == "minibatch_lg":
+        from repro.data.sampler import subgraph_shapes
+
+        bn, fo = (sdef["batch_nodes"], sdef["fanouts"]) if full else (8, (3, 2))
+        n, e = subgraph_shapes(bn, fo)
+    elif shape == "molecule":
+        ng, npn, epn = (
+            (sdef["n_graphs"], sdef["nodes_per"], sdef["edges_per"])
+            if full else (4, 6, 10)
+        )
+        n, e = ng * npn, ng * epn
+    else:
+        n, e = (sdef["n_nodes"], sdef["n_edges"]) if full else (64, 256)
+
+    # pad node arrays to ×64 (shardable over pod·data on both meshes) and
+    # edge arrays to ×512 (shardable over the full device set); padded
+    # edges are masked via edge_mask, padded nodes carry label -1
+    if full:
+        n, e = _pad_to(n, 64), _pad_to(e, 512)
+
+    batch_a: Dict[str, Any] = {
+        "node_feat": _sds((n, cfg.d_feat), jnp.float32),
+        "edge_index": _sds((2, e), jnp.int32),
+        "edge_mask": _sds((e,), jnp.float32),
+        "positions": _sds((n, 3), jnp.float32),
+    }
+    if cfg.task == "node_classify":
+        batch_a["labels"] = _sds((n,), jnp.int32)
+    else:
+        ng = sdef["n_graphs"] if full else 4
+        batch_a["graph_ids"] = _sds((n,), jnp.int32)
+        batch_a["energies"] = _sds((ng,), jnp.float32)
+
+    params_a = jax.eval_shape(lambda: N.nequip_init(cfg, jax.random.PRNGKey(0)))
+    opt_a = jax.eval_shape(lambda: adam_init(params_a))
+    pspecs = shd.tree_replicated(params_a)     # tiny model: replicate params
+    ospecs = AdamState(step=P(), mu=pspecs, nu=pspecs)
+    bspecs = shd.gnn_batch_pspecs(batch_a)
+    return Cell(
+        arch=arch, shape=shape, kind="train",
+        fn=_gnn_train_step(cfg),
+        abstract_args=(params_a, opt_a, batch_a),
+        in_specs=(pspecs, ospecs, bspecs),
+        out_specs=(pspecs, ospecs, P()),
+        meta=dict(cfg=cfg, n_nodes=n, n_edges=e),
+    )
+
+
+# =============================================================== recsys cells
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(batch=65536),
+    "serve_p99": dict(batch=512),
+    "serve_bulk": dict(batch=262144),
+    # 1M candidates padded to ×512 so the candidate axis shards over the
+    # full 512-chip multi-pod device set (padding masked at score time)
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_448),
+}
+
+
+def _recsys_batch_specs(arch: str, cfg, batch: int, with_label: bool):
+    if arch == "dlrm-mlperf":
+        b = {
+            "dense": _sds((batch, cfg.n_dense), jnp.float32),
+            "cat": _sds((batch, cfg.n_sparse), jnp.int32),
+        }
+    elif arch == "deepfm":
+        b = {"cat": _sds((batch, cfg.n_sparse), jnp.int32)}
+    elif arch == "din":
+        b = {
+            "hist": _sds((batch, cfg.seq_len), jnp.int32),
+            "target": _sds((batch,), jnp.int32),
+        }
+    else:  # bert4rec
+        b = {"hist": _sds((batch, cfg.seq_len), jnp.int32)}
+    if with_label:
+        if arch == "bert4rec":
+            m = max(1, cfg.seq_len // 5)    # 20% mask rate, static M
+            b["masked_positions"] = _sds((batch, m), jnp.int32)
+            b["labels"] = _sds((batch, m), jnp.int32)
+            b["negatives"] = _sds((cfg.n_negatives,), jnp.int32)
+        else:
+            b["label"] = _sds((batch,), jnp.float32)
+    return b
+
+
+def _recsys_fns(arch: str):
+    from repro.models import recsys as R
+
+    return {
+        "dlrm-mlperf": (R.dlrm_init, R.dlrm_loss, R.dlrm_serve, R.dlrm_user_vector),
+        "deepfm": (R.deepfm_init, R.deepfm_loss, R.deepfm_serve, R.deepfm_user_vector),
+        "din": (R.din_init, R.din_loss, R.din_serve, R.din_user_vector),
+        "bert4rec": (
+            R.bert4rec_init, R.bert4rec_loss, R.bert4rec_serve,
+            R.bert4rec_user_vector,
+        ),
+    }[arch]
+
+
+def _recsys_cell(arch: str, shape: str, full: bool) -> Cell:
+    mod = arch_module(arch)
+    cfg = mod.full() if full else mod.smoke()
+    init_fn, loss_fn, serve_fn, uvec_fn = _recsys_fns(arch)
+    sdef = RECSYS_SHAPE_DEFS[shape]
+    batch = sdef["batch"] if full else min(sdef["batch"], 16)
+    params_a = jax.eval_shape(lambda: init_fn(cfg, jax.random.PRNGKey(0)))
+    pspecs = shd.recsys_param_pspecs(params_a)
+    bspec_batched = P(("pod", "data"))
+    meta = dict(cfg=cfg, batch=batch)
+
+    if shape == "train_batch":
+        batch_a = _recsys_batch_specs(arch, cfg, batch, with_label=True)
+        opt_a = jax.eval_shape(lambda: adam_init(params_a))
+        ospecs = AdamState(step=P(), mu=pspecs, nu=pspecs)
+
+        def step(params, opt, b):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, b, cfg), has_aux=True
+            )(params)
+            new_params, new_opt = adam_update(grads, opt, params, OPT)
+            return new_params, new_opt, {"loss": loss}
+
+        bspecs = {
+            k: (P(("pod", "data"), *([None] * (v.ndim - 1))) if v.shape[0] == batch
+                else P())
+            for k, v in batch_a.items()
+        }
+        return Cell(
+            arch=arch, shape=shape, kind="train",
+            fn=step,
+            abstract_args=(params_a, opt_a, batch_a),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, P()),
+            meta=meta,
+        )
+
+    if shape in ("serve_p99", "serve_bulk"):
+        batch_a = _recsys_batch_specs(arch, cfg, batch, with_label=False)
+        if arch == "bert4rec":
+            batch_a["candidates"] = _sds((batch, SERVE_SLATE), jnp.int32)
+
+        def serve(params, b):
+            return serve_fn(params, b, cfg)
+
+        # Serving sharding (EXPERIMENTS.md §Perf, bert4rec hillclimb):
+        # small-parameter models (bert4rec 64 MB, din 720 MB) REPLICATE
+        # params and batch-shard over the FULL device set — model-sharding
+        # a d=64 tower makes every layer a collective.  Big-table models
+        # (dlrm, deepfm) keep table sharding and (pod, data) batch.
+        small_model = arch in ("bert4rec", "din")
+        batch_axes = ("pod", "data", "model") if small_model else ("pod", "data")
+        serve_pspecs = shd.tree_replicated(params_a) if small_model else pspecs
+        bspecs = {
+            k: (P(batch_axes, *([None] * (v.ndim - 1))) if v.shape[0] == batch
+                else P())
+            for k, v in batch_a.items()
+        }
+        out = P(batch_axes) if arch != "bert4rec" else P(batch_axes, None)
+        return Cell(
+            arch=arch, shape=shape, kind="serve",
+            fn=serve,
+            abstract_args=(params_a, batch_a),
+            in_specs=(serve_pspecs, bspecs),
+            out_specs=out,
+            meta=meta,
+        )
+
+    # ---- retrieval_cand
+    n_cand = sdef["n_candidates"] if full else 512
+    if arch == "din":
+        # exact vectorized target-aware scoring (SAE inapplicable to DIN's
+        # per-candidate attention; DESIGN.md §Arch-applicability).  The
+        # candidate axis is shard_map'd over the whole device set: local
+        # scoring + local top-n, merged with one small gather — GSPMD
+        # replicates the (C, T, 4d) attention features otherwise.
+        from repro.models.recsys import din_score_candidate_embs
+        from repro.layers.embedding import embedding_lookup
+
+        batch_a = _recsys_batch_specs(arch, cfg, 1, with_label=False)
+        del batch_a["target"]
+        cands_a = _sds((n_cand,), jnp.int32)
+        all_axes = ("pod", "data", "model")
+
+        def retrieve(params, b, cands):
+            from repro.distributed.sharding import current_rules, shard_hint
+
+            rules = current_rules()
+            c_emb = shard_hint(
+                embedding_lookup(params["items"], cands), "cand_rows"
+            )
+            if rules is None:
+                from repro.core.retrieval import top_n
+
+                scores = din_score_candidate_embs(params, b, c_emb, cfg)
+                return top_n(scores, TOP_N)
+
+            axes = rules._all_axes()
+            small = {k: v for k, v in params.items() if k != "items"}
+            hist_emb_params = {"items": params["items"]}
+
+            def local(prm_small, hist_emb, bb, ce_l):
+                prm = {**prm_small, "items": hist_emb}
+                s = din_score_candidate_embs(prm, bb, ce_l, cfg)  # (1, C_loc)
+                v, i = jax.lax.top_k(s, TOP_N)
+                shard = jax.lax.axis_index(axes[0])
+                for ax in axes[1:]:
+                    shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+                return v, i + shard.astype(jnp.int32) * ce_l.shape[0]
+
+            # only the hist rows of the items table are needed inside:
+            # gather them up front (T rows) instead of replicating 10M rows
+            hist_rows = embedding_lookup(
+                params["items"], jnp.maximum(b["hist"], 0)
+            )[0]                                            # (T, d)
+            bb = {"hist": jnp.where(b["hist"] >= 0,
+                                    jnp.arange(b["hist"].shape[1])[None], -1)}
+            vs, ids = jax.shard_map(
+                local,
+                in_specs=(
+                    jax.tree.map(lambda _: P(), small),
+                    P(None, None), {"hist": P(None, None)},
+                    P(axes, None),
+                ),
+                out_specs=(P(None, axes), P(None, axes)),
+            )(small, hist_rows, bb, c_emb)
+            v, sel = jax.lax.top_k(vs, TOP_N)
+            return v, jnp.take_along_axis(ids, sel, axis=-1)
+
+        return Cell(
+            arch=arch, shape=shape, kind="retrieval",
+            fn=retrieve,
+            abstract_args=(params_a, batch_a, cands_a),
+            in_specs=(pspecs, {"hist": P()}, P(("pod", "data", "model"))),
+            out_specs=(P(), P()),
+            meta={**meta, "n_candidates": n_cand, "variant": "exact-din"},
+        )
+
+    # paper path: catalog stored as fixed-k CompresSAE codes
+    sae_cfg = RETRIEVAL_SAE[arch] if full else SAEConfig(d=_uvec_dim(arch, cfg), h=64, k=2)
+    from repro.models.retrieval_head import compressed_retrieval
+
+    batch_a = _recsys_batch_specs(arch, cfg, 1, with_label=False)
+    codes_vals_a = _sds((n_cand, sae_cfg.k), jnp.float32)
+    codes_idx_a = _sds((n_cand, sae_cfg.k), jnp.int32)
+    norms_a = _sds((n_cand,), jnp.float32)
+    sae_a = jax.eval_shape(lambda: sae_lib.init_params(sae_cfg, jax.random.PRNGKey(0)))
+
+    def retrieve(params, sae_params, vals, idx, norms, b):
+        from repro.core.types import SparseCodes
+
+        uvec = uvec_fn(params, b, cfg)
+        codes = SparseCodes(values=vals, indices=idx, dim=sae_cfg.h)
+        return compressed_retrieval(uvec, sae_params, codes, norms, TOP_N, sae_cfg.k)
+
+    cand_spec = P(("pod", "data", "model"))
+    return Cell(
+        arch=arch, shape=shape, kind="retrieval",
+        fn=retrieve,
+        abstract_args=(params_a, sae_a, codes_vals_a, codes_idx_a, norms_a, batch_a),
+        in_specs=(
+            pspecs, shd.tree_replicated(sae_a),
+            P(("pod", "data", "model"), None),
+            P(("pod", "data", "model"), None),
+            cand_spec,
+            {k: P() for k in batch_a},
+        ),
+        out_specs=(P(), P()),
+        meta={**meta, "n_candidates": n_cand, "sae": sae_cfg, "variant": "compressed"},
+    )
+
+
+def _uvec_dim(arch: str, cfg) -> int:
+    return {"dlrm-mlperf": cfg.bot_mlp[-1] if hasattr(cfg, "bot_mlp") else 16,
+            "deepfm": cfg.embed_dim, "bert4rec": cfg.embed_dim,
+            "din": cfg.embed_dim}[arch]
+
+
+# ========================================================== CompresSAE cells
+def _sae_cell(shape: str, full: bool) -> Cell:
+    """The paper's production workloads on the production mesh."""
+    from repro.core import sae as sae_lib2
+    from repro.core.train import TrainState, init_train_state, train_step
+    from repro.core.types import SAEConfig as SC
+
+    # topk_groups=16 matches the model-axis size: the heavy top-k stage
+    # runs on the h-shards locally (§Perf hillclimb 4)
+    cfg = SC(d=768, h=4096, k=32, topk_groups=16) if full \
+        else SC(d=32, h=128, k=4)
+    sae_a = jax.eval_shape(lambda: sae_lib2.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = shd.sae_param_pspecs(sae_a)
+
+    if shape == "train_100k":
+        batch = 100_096 if full else 64       # paper: 100k rows/step (pad ×512)
+        state_a = jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+        sspecs = TrainState(
+            params=pspecs,
+            opt=AdamState(step=P(), mu=pspecs, nu=pspecs),
+            steps_since_fired=P("model"),
+        )
+        x_a = _sds((batch, cfg.d), jnp.float32)
+
+        def step(state, x):
+            return train_step(state, x, cfg, OPT)
+
+        return Cell(
+            arch="compressae", shape=shape, kind="train",
+            fn=step,
+            abstract_args=(state_a, x_a),
+            in_specs=(sspecs, P(("pod", "data"), None)),
+            out_specs=(sspecs, P()),
+            meta=dict(cfg=cfg, batch=batch),
+        )
+
+    if shape == "compress_1m":
+        batch = 1_048_576 if full else 256    # offline catalog compression
+
+        def compress(params, x):
+            from repro.distributed.sharding import current_rules
+
+            rules = current_rules()
+            if rules is not None:
+                codes = sae_lib2.encode_sharded(
+                    params, x, cfg.k,
+                    batch_axes=tuple(rules.batch) if isinstance(rules.batch, tuple)
+                    else (rules.batch,),
+                    model_axis=rules.model, chunk=8192,
+                )
+            else:
+                codes = sae_lib2.encode_chunked(params, x, cfg.k, chunk=8192,
+                                                groups=cfg.topk_groups)
+            return codes.values, codes.indices
+
+        x_a = _sds((batch, cfg.d), jnp.float32)
+        return Cell(
+            arch="compressae", shape=shape, kind="serve",
+            fn=compress,
+            abstract_args=(sae_a, x_a),
+            in_specs=(pspecs, P(("pod", "data"), None)),
+            out_specs=(P(("pod", "data"), None), P(("pod", "data"), None)),
+            meta=dict(cfg=cfg, batch=batch),
+        )
+
+    # retrieval_100m: O(10^8)-item catalog (paper §1), 256 queries.
+    # The catalog axis is shard_map'd over the whole device set (local
+    # scatter-query SpMV + local top-n + one small merge): a global
+    # lax.top_k over the sharded candidate axis would replicate the
+    # (Q, 100M) score matrix (190 GiB/device measured).
+    n_cand = 100_000_256 if full else 4096
+    nq = 256 if full else 4
+    from repro.core.retrieval import sparse_dot_dense_query
+    from repro.core import sparse as sparse_lib2
+    from repro.core.types import SparseCodes
+
+    all_axes = ("pod", "data", "model")
+
+    def retrieve(params, vals, idx, norms, queries):
+        from repro.distributed.sharding import current_rules
+
+        q_codes = sae_lib2.encode(params, queries, cfg.k)
+        q_dense = sparse_lib2.densify(q_codes)
+        q_norm = jnp.linalg.norm(q_codes.values, axis=-1)
+        rules = current_rules()
+        axes = rules._all_axes() if rules is not None else ()
+
+        def local(vals_l, idx_l, norms_l, qd, qn):
+            codes = SparseCodes(values=vals_l, indices=idx_l, dim=cfg.h)
+            dots = sparse_dot_dense_query(codes, qd)
+            scores = dots / jnp.maximum(qn[:, None] * norms_l[None, :], 1e-8)
+            v, i = jax.lax.top_k(scores, TOP_N)
+            if axes:
+                shard = jax.lax.axis_index(axes[0])
+                for ax in axes[1:]:
+                    shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+                i = i + shard.astype(jnp.int32) * vals_l.shape[0]
+            return v, i
+
+        if not axes:
+            v, i = local(vals, idx, norms, q_dense, q_norm)
+            return v, i
+        vs, ids = jax.shard_map(
+            local,
+            in_specs=(P(axes, None), P(axes, None), P(axes),
+                      P(None, None), P(None)),
+            out_specs=(P(None, axes), P(None, axes)),
+        )(vals, idx, norms, q_dense, q_norm)
+        v, sel = jax.lax.top_k(vs, TOP_N)
+        return v, jnp.take_along_axis(ids, sel, axis=-1)
+
+    return Cell(
+        arch="compressae", shape=shape, kind="retrieval",
+        fn=retrieve,
+        abstract_args=(
+            sae_a,
+            _sds((n_cand, cfg.k), jnp.float32),
+            _sds((n_cand, cfg.k), jnp.int32),
+            _sds((n_cand,), jnp.float32),
+            _sds((nq, cfg.d), jnp.float32),
+        ),
+        in_specs=(pspecs, P(("pod", "data", "model"), None),
+                  P(("pod", "data", "model"), None), P(("pod", "data", "model")),
+                  P()),
+        out_specs=(P(), P()),
+        meta=dict(cfg=cfg, n_candidates=n_cand, variant="compressed",
+                  sae=cfg, batch=nq),
+    )
+
+
+# ------------------------------------------------------------------- public
+def build_cell(arch: str, shape: str, full: bool = True) -> Cell:
+    if arch == "compressae":
+        return _sae_cell(shape, full)
+    fam = arch_module(arch).FAMILY
+    if fam == "lm":
+        return _lm_cell(arch, shape, full)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape, full)
+    return _recsys_cell(arch, shape, full)
+
+
+def all_cells(full: bool = True):
+    for arch in all_arch_ids():
+        for shape in shapes_for(arch):
+            yield build_cell(arch, shape, full)
+
+
+def count_cells(full: bool = True) -> Dict[str, int]:
+    """Cell census: {live, skipped} across all archs × shapes."""
+    live = skipped = 0
+    for cell in all_cells(full):
+        if cell.skip:
+            skipped += 1
+        else:
+            live += 1
+    return {"live": live, "skipped": skipped}

@@ -1,0 +1,57 @@
+"""Retrieval heads shared by the recsys archs (the paper's use case).
+
+`retrieval_cand` cells score one query against ~10⁶ candidates.  Two paths:
+
+  * dense   — exact cosine against the fp32 item table (baseline; what the
+              paper's SBERT/Nomic rows do).
+  * sparse  — the paper: the catalog is stored as fixed-k CompresSAE codes
+              (12× smaller); the query embedding is encoded on the fly and
+              scored with the scatter-query SpMV (sparse_dot kernel), then
+              exact top-n.
+
+Both are pure functions suitable for pjit with the candidate axis sharded
+(embarrassingly parallel; top-n merges with lax.top_k after a gather).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sae as sae_lib
+from repro.core import sparse as sparse_lib
+from repro.core.retrieval import sparse_dot_dense_query, top_n
+from repro.core.types import SparseCodes
+
+
+def dense_retrieval(
+    user_vec: jax.Array, item_table: jax.Array, n: int
+) -> Tuple[jax.Array, jax.Array]:
+    """user_vec (Q, d); item_table (N, d).  Exact cosine top-n."""
+    u = user_vec / jnp.maximum(jnp.linalg.norm(user_vec, axis=-1, keepdims=True), 1e-8)
+    it = item_table / jnp.maximum(
+        jnp.linalg.norm(item_table, axis=-1, keepdims=True), 1e-8
+    )
+    scores = u @ it.T
+    return top_n(scores, n)
+
+
+def compressed_retrieval(
+    user_vec: jax.Array,
+    sae_params: dict,
+    codes: SparseCodes,
+    code_norms: jax.Array,
+    n: int,
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """The paper's sparse-space retrieval: encode query, SpMV, top-n.
+
+    user_vec (Q, d); codes (N, k) fixed-k catalog; code_norms (N,) ‖s_c‖.
+    """
+    q_codes = sae_lib.encode(sae_params, user_vec, k)
+    q_dense = sparse_lib.densify(q_codes)                    # (Q, h)
+    q_norm = jnp.linalg.norm(q_codes.values, axis=-1)        # (Q,)
+    dots = sparse_dot_dense_query(codes, q_dense)            # (Q, N)
+    scores = dots / jnp.maximum(q_norm[:, None] * code_norms[None, :], 1e-8)
+    return top_n(scores, n)

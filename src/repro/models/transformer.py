@@ -1,0 +1,457 @@
+"""Configurable decoder-only LM transformer (the 5 assigned LM archs).
+
+Features driven by config: GQA, explicit head_dim, qk-norm (Qwen3),
+attention-logit + final-logit soft-capping (Gemma-2), sliding-window /
+full alternation via ``window_pattern`` (Gemma-2 local+global), SwiGLU or
+MoE FFN (Qwen3-MoE 128e top-8, Llama4-Scout 16e top-1 + shared expert),
+RoPE, RMSNorm, optional tied embeddings, no biases anywhere (all five
+assigned archs are bias-free).
+
+Scaling discipline:
+  * Layers are stacked into *groups* of ``len(window_pattern)`` sub-layers
+    and scanned with ``jax.lax.scan`` — compile time is O(1) in depth and
+    the HLO stays small enough to lower 40–48-layer models with 512
+    placeholder devices.
+  * Each group is wrapped in ``jax.checkpoint`` (remat) during training.
+  * The loss never materializes (tokens, vocab) logits: cross-entropy is
+    computed in token chunks (``loss_chunk``) inside a scan.
+  * Forward activations in bf16; losses/softmax statistics in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import decode_attention, flash_attention, rope
+from repro.layers.moe import moe_ffn
+from repro.layers.norms import rms_norm, softcap
+from repro.layers.mlp import swiglu
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    # one entry per sub-layer in a repeating group; None = full attention
+    window_pattern: Tuple[Optional[int], ...] = (None,)
+    moe: Optional[MoESpec] = None
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # sequence-shard the residual carried between layer groups (Megatron
+    # SP).  Arch-dependent trade (EXPERIMENTS.md §Perf): big wins for
+    # small-d archs (qwen3 11.5->3.2 GiB) and required by the shard_map
+    # MoE token layout; for wide dense archs GSPMD propagation from the
+    # attention hints alone is strictly better (command-r: 8.1->5.5 GiB
+    # AND 10.2->7.1 TB collectives).
+    residual_hint: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    loss_chunk: int = 2048
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        return len(self.window_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0
+        return self.n_layers // self.group_size
+
+    def param_count(self) -> int:
+        leaves = jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(self, jax.random.PRNGKey(0)))
+        )
+        return sum(int(math.prod(l.shape)) for l in leaves)
+
+
+# ------------------------------------------------------------------- init
+def _layer_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    """One sub-layer's params with a leading n_groups axis added by vmap."""
+    d, hd = cfg.d_model, cfg.hd
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 12)
+    std = 0.02
+    p: Params = {
+        "ln1": jnp.zeros((d,), cfg.param_dtype),
+        "ln2": jnp.zeros((d,), cfg.param_dtype),
+        "wq": std * jax.random.normal(ks[0], (d, hq * hd), cfg.param_dtype),
+        "wk": std * jax.random.normal(ks[1], (d, hkv * hd), cfg.param_dtype),
+        "wv": std * jax.random.normal(ks[2], (d, hkv * hd), cfg.param_dtype),
+        "wo": std * jax.random.normal(ks[3], (hq * hd, d), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+    if cfg.moe is None:
+        p["w_gate"] = std * jax.random.normal(ks[4], (d, cfg.d_ff), cfg.param_dtype)
+        p["w_up"] = std * jax.random.normal(ks[5], (d, cfg.d_ff), cfg.param_dtype)
+        p["w_down"] = std * jax.random.normal(ks[6], (cfg.d_ff, d), cfg.param_dtype)
+    else:
+        m = cfg.moe
+        p["router"] = std * jax.random.normal(ks[7], (d, m.n_experts), jnp.float32)
+        p["moe_gate"] = std * jax.random.normal(
+            ks[8], (m.n_experts, d, m.d_ff_expert), cfg.param_dtype
+        )
+        p["moe_up"] = std * jax.random.normal(
+            ks[9], (m.n_experts, d, m.d_ff_expert), cfg.param_dtype
+        )
+        p["moe_down"] = std * jax.random.normal(
+            ks[10], (m.n_experts, m.d_ff_expert, d), cfg.param_dtype
+        )
+        if m.n_shared:
+            f = m.d_ff_expert * m.n_shared
+            p["w_gate"] = std * jax.random.normal(ks[4], (d, f), cfg.param_dtype)
+            p["w_up"] = std * jax.random.normal(ks[5], (d, f), cfg.param_dtype)
+            p["w_down"] = std * jax.random.normal(ks[6], (f, d), cfg.param_dtype)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    k_emb, k_out, k_layers = jax.random.split(key, 3)
+    # blocks[i] = params of sub-layer position i, stacked over n_groups
+    blocks = []
+    for i in range(cfg.group_size):
+        keys = jax.random.split(jax.random.fold_in(k_layers, i), cfg.n_groups)
+        blocks.append(jax.vmap(lambda k: _layer_params(cfg, k))(keys))
+    params: Params = {
+        "embed": 0.02 * jax.random.normal(
+            k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype
+        ),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = 0.02 * jax.random.normal(
+            k_out, (cfg.d_model, cfg.vocab), cfg.param_dtype
+        )
+    return params
+
+
+# ----------------------------------------------------------------- blocks
+def _attn(
+    x: jax.Array,
+    p: Params,
+    cfg: TransformerConfig,
+    window: Optional[int],
+    positions: jax.Array,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_len: Optional[jax.Array] = None,
+):
+    """Self-attention sub-block.  Returns (out, (k, v) for cache build)."""
+    from repro.distributed.sharding import shard_hint
+
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cdt = cfg.compute_dtype
+    h = rms_norm(x, p["ln1"])
+    q = shard_hint((h @ p["wq"].astype(cdt)).reshape(b, s, hq, hd), "attn_q")
+    k = shard_hint((h @ p["wk"].astype(cdt)).reshape(b, s, hkv, hd), "attn_kv_small")
+    v = shard_hint((h @ p["wv"].astype(cdt)).reshape(b, s, hkv, hd), "attn_kv_small")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        # GQA expand to full query heads at the layer level (DESIGN.md §5):
+        # every attention tensor then carries the shardable n_heads axis
+        # (n_kv_heads < mesh model-size would force GSPMD replication).
+        kvm = jnp.repeat(jnp.arange(hkv, dtype=jnp.int32), hq // hkv)
+        kx = shard_hint(k[:, :, kvm, :], "attn_q")
+        vx = shard_hint(v[:, :, kvm, :], "attn_q")
+        o = flash_attention(
+            q, kx, vx, causal=True, window=window,
+            logit_softcap=cfg.attn_softcap,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    else:
+        kc, vc = cache
+        # decode: all rows share the same write position (scalar index);
+        # the new k/v slice adopts the cache's sharding so the dynamic
+        # update stays shard-local
+        k = shard_hint(k, "attn_kv_decode")
+        v = shard_hint(v, "attn_kv_decode")
+        pos = positions.reshape(-1)[0]
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        from repro.distributed.sharding import MESH_DIV
+        from repro.layers.attention import decode_attention_grouped
+
+        decode_fn = (
+            decode_attention_grouped if hkv % MESH_DIV == 0 else decode_attention
+        )
+        o = decode_fn(
+            q, kc, vc, length=cache_len,
+            window=window, logit_softcap=cfg.attn_softcap,
+        )
+        k, v = kc, vc
+    out = o.reshape(b, s, hq * hd) @ p["wo"].astype(cdt)
+    return out, (k, v)
+
+
+def _ffn(x: jax.Array, p: Params, cfg: TransformerConfig):
+    """FFN sub-block on normalized input.  Returns (out, aux_loss)."""
+    cdt = cfg.compute_dtype
+    b, s, d = x.shape
+    h = rms_norm(x, p["ln2"])
+    if cfg.moe is None:
+        y = swiglu(h, p["w_gate"].astype(cdt), p["w_up"].astype(cdt),
+                   p["w_down"].astype(cdt))
+        return y, jnp.zeros((), jnp.float32)
+    m = cfg.moe
+    flat = h.reshape(b * s, d)
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+    if rules is not None:
+        # distributed path: explicit expert-parallel shard_map dispatch
+        from repro.layers.moe import moe_ffn_sharded
+
+        out = moe_ffn_sharded(
+            flat, p["router"],
+            p["moe_gate"].astype(cdt), p["moe_up"].astype(cdt),
+            p["moe_down"].astype(cdt),
+            top_k=m.top_k, capacity_factor=m.capacity_factor,
+            batch_axes=tuple(rules.batch) if isinstance(rules.batch, tuple)
+            else (rules.batch,),
+            model_axis=rules.model,
+        )
+    else:
+        out = moe_ffn(
+            flat, p["router"],
+            p["moe_gate"].astype(cdt), p["moe_up"].astype(cdt),
+            p["moe_down"].astype(cdt),
+            top_k=m.top_k, capacity_factor=m.capacity_factor,
+        )
+    y = out.y.reshape(b, s, d)
+    if m.n_shared:
+        y = y + swiglu(h, p["w_gate"].astype(cdt), p["w_up"].astype(cdt),
+                       p["w_down"].astype(cdt))
+    return y, out.aux_loss
+
+
+def _group_forward(
+    x: jax.Array,
+    gp: list[Params],
+    cfg: TransformerConfig,
+    positions: jax.Array,
+    caches=None,
+    cache_len=None,
+):
+    """Apply one group (len(window_pattern) sub-layers).  Returns
+    (x, aux_loss_sum, new_caches)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, window in enumerate(cfg.window_pattern):
+        cache_i = None if caches is None else caches[i]
+        a, kv = _attn(x, gp[i], cfg, window, positions, cache_i, cache_len)
+        x = x + a
+        f, al = _ffn(x, gp[i], cfg)
+        x = x + f
+        aux = aux + al
+        new_caches.append(kv)
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------- forward
+def _unembed_weight(params: Params, cfg: TransformerConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def forward_hidden(
+    params: Params, tokens: jax.Array, cfg: TransformerConfig
+) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> final hidden states (B, S, d), aux_loss."""
+    from repro.distributed.sharding import shard_hint
+
+    b, s = tokens.shape
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    if cfg.residual_hint:
+        x = shard_hint(x, "residual")
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def group_fn(x, gp):
+        # barrier: blocks XLA's loop-invariant code motion from hoisting the
+        # bf16->f32 upcast of the carry out of the backward while-loop —
+        # without it the (n_groups, B, S, d) residual stack is materialized
+        # TWICE (bf16 + converted f32), ~2.5x activation memory
+        x = jax.lax.optimization_barrier(x)
+        y, aux, _ = _group_forward(x, gp, cfg, positions)
+        return y, aux
+
+    if cfg.remat:
+        group_fn = jax.checkpoint(group_fn)
+
+    def scan_body(carry, gp):
+        x, aux = carry
+        y, a = group_fn(x, gp)
+        return (y, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rms_norm(x, params["ln_f"])
+    return x, aux
+
+
+def chunked_xent_loss(
+    hidden: jax.Array, w_out: jax.Array, labels: jax.Array, cfg: TransformerConfig
+) -> jax.Array:
+    """Cross-entropy without materializing (tokens, vocab) logits.
+
+    Chunks over the SEQUENCE axis (batch stays intact) so the scanned axis
+    is replicated and the batch sharding survives into every chunk — a
+    scan over a batch-sharded axis forces GSPMD to replicate the
+    (chunk, vocab) logits per device.
+    """
+    b, s, d = hidden.shape
+    s_chunk = max(1, min(cfg.loss_chunk // b, s))
+    while s % s_chunk:
+        s_chunk -= 1
+    n_chunks = s // s_chunk
+    hs = jnp.moveaxis(hidden.reshape(b, n_chunks, s_chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n_chunks, s_chunk), 1, 0)
+    cdt = cfg.compute_dtype
+
+    # remat: without this, the scan's backward saves the (B, s_chunk, vocab)
+    # logits of EVERY chunk (≈ tokens·vocab·4 bytes — hundreds of GB at
+    # 151k vocab); recomputing logits in the backward costs one extra
+    # matmul per chunk and keeps residuals at (B, s_chunk, d)
+    @jax.checkpoint
+    def chunk_loss(hc, lc):
+        logits = (hc @ w_out.astype(cdt)).astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = softcap(logits, cfg.final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - ll)
+
+    def step(total, hl):
+        hc, lc = hl
+        return total + chunk_loss(hc, lc), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: TransformerConfig):
+    hidden, aux = forward_hidden(params, batch["tokens"], cfg)
+    xent = chunked_xent_loss(hidden, _unembed_weight(params, cfg),
+                             batch["labels"], cfg)
+    loss = xent + 0.01 * aux
+    return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+
+# ------------------------------------------------------------------ serve
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int) -> list:
+    """KV cache: per sub-layer position, stacked over groups:
+    list[group_size] of (k, v) with shape (n_groups, B, S, Hkv, hd)."""
+    shape = (cfg.n_groups, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return [
+        (jnp.zeros(shape, cfg.compute_dtype), jnp.zeros(shape, cfg.compute_dtype))
+        for _ in range(cfg.group_size)
+    ]
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig):
+    """Full-sequence forward; returns (last-position logits (B, V), caches)."""
+    b, s = tokens.shape
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def scan_body(x, gp):
+        y, _, kvs = _group_forward(x, gp, cfg, positions)
+        flat_kv = []
+        for k, v in kvs:
+            flat_kv.append(k)
+            flat_kv.append(v)
+        return y, tuple(flat_kv)
+
+    x, stacked = jax.lax.scan(scan_body, x, params["blocks"])
+    caches = [
+        (stacked[2 * i], stacked[2 * i + 1]) for i in range(cfg.group_size)
+    ]
+    x = rms_norm(x, params["ln_f"])
+    logits = (x[:, -1, :] @ _unembed_weight(params, cfg).astype(cdt)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, caches
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,
+    caches: list,
+    position: jax.Array,
+    cfg: TransformerConfig,
+):
+    """One decode step.  token (B, 1) int32; position scalar int32 (current
+    write index; cache entries < position+1 are valid).  Returns
+    (logits (B, V), new caches)."""
+    b = token.shape[0]
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], token, axis=0).astype(cdt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    positions = jnp.broadcast_to(position[None, None], (b, 1)).astype(jnp.int32)
+    cache_len = position + 1
+
+    def scan_body(x, gp_and_cache):
+        gp, caches_g = gp_and_cache
+        y, _, kvs = _group_forward(
+            x, gp, cfg, positions,
+            caches=[(caches_g[2 * i], caches_g[2 * i + 1])
+                    for i in range(cfg.group_size)],
+            cache_len=cache_len,
+        )
+        flat = []
+        for k, v in kvs:
+            flat.extend((k, v))
+        return y, tuple(flat)
+
+    flat_caches = []
+    for k, v in caches:
+        flat_caches.extend((k, v))
+    x, stacked = jax.lax.scan(scan_body, x, (params["blocks"], tuple(flat_caches)))
+    new_caches = [(stacked[2 * i], stacked[2 * i + 1])
+                  for i in range(cfg.group_size)]
+    x = rms_norm(x, params["ln_f"])
+    logits = (x[:, 0, :] @ _unembed_weight(params, cfg).astype(cdt)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, new_caches

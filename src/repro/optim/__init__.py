@@ -1,0 +1,12 @@
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.schedules import constant, cosine_decay, linear_warmup
+
+__all__ = [
+    "AdamConfig",
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "constant",
+    "cosine_decay",
+    "linear_warmup",
+]

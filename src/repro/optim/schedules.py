@@ -1,0 +1,21 @@
+"""Learning-rate schedules as step -> scale multipliers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+
+def linear_warmup(step, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_decay(step, total_steps: int, warmup_steps: int = 0, floor: float = 0.0):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps) if warmup_steps else 1.0
+    frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos

@@ -1,0 +1,93 @@
+"""Property tests: chunked flash attention vs the naive softmax oracle."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+
+from repro.layers.attention import (
+    decode_attention, decode_attention_grouped, flash_attention,
+)
+
+hypothesis.settings.register_profile("attn", deadline=None, max_examples=10,
+                                     derandomize=True)
+hypothesis.settings.load_profile("attn")
+
+
+def naive(q, k, v, causal=True, window=None, cap=None):
+    b, s, hq, d = q.shape
+    g = hq // k.shape[2]
+    kx = jnp.repeat(k, g, axis=2)
+    vx = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q * d ** -0.5, kx)
+    if cap:
+        scores = cap * jnp.tanh(scores / cap)
+    row = jnp.arange(s)[:, None]
+    col = jnp.arange(s)[None, :]
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m &= col <= row
+    if window is not None:
+        m &= col > row - window
+    scores = jnp.where(m, scores, -1e30)
+    p = jax.nn.softmax(scores, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+
+
+@st.composite
+def attn_case(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    s = draw(st.integers(3, 48))
+    hkv = draw(st.sampled_from([1, 2, 4]))
+    g = draw(st.sampled_from([1, 2, 4]))
+    d = draw(st.sampled_from([4, 8, 16]))
+    qc = draw(st.sampled_from([4, 8, 16]))
+    kc = draw(st.sampled_from([4, 8, 16]))
+    causal = draw(st.booleans())
+    window = draw(st.one_of(st.none(), st.integers(1, s)))
+    cap = draw(st.one_of(st.none(), st.just(5.0)))
+    return seed, s, hkv, g, d, qc, kc, causal, window, cap
+
+
+@given(attn_case())
+def test_flash_matches_naive(case):
+    seed, s, hkv, g, d, qc, kc, causal, window, cap = case
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, hq = 2, hkv * g
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          logit_softcap=cap, q_chunk=qc, kv_chunk=kc)
+    want = naive(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]),
+       st.sampled_from([2, 4]))
+def test_decode_variants_agree(seed, hkv, g):
+    """Grouped and expand decode paths must produce identical outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, s, d, hq = 2, 24, 8, hkv * g
+    q = jax.random.normal(ks[0], (b, 1, hq, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    a = decode_attention(q, kc, vc, length=17)
+    bb = decode_attention_grouped(q, kc, vc, length=17)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                               rtol=2e-5, atol=2e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_flash_is_permutation_equivariant_over_batch(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, s, h, d = 4, 16, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), b)
+    a = flash_attention(q, k, v, q_chunk=8, kv_chunk=8)[perm]
+    bb = flash_attention(q[perm], k[perm], v[perm], q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-6)

@@ -1,0 +1,139 @@
+"""Unit tests: CompresSAE core — activation, model, losses, training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SAEConfig,
+    abs_topk,
+    abs_topk_sparse,
+    compressae_loss,
+    decode,
+    decode_dense,
+    encode,
+    encode_dense,
+    init_params,
+    init_train_state,
+    kernel_matrix,
+    normalize_decoder,
+    normalize_input,
+    reconstruct,
+    train_step,
+)
+from repro.core import sparse as sp
+from repro.data import clustered_embeddings
+from repro.optim import AdamConfig
+
+CFG = SAEConfig(d=64, h=256, k=8)
+
+
+def test_abs_topk_keeps_largest_abs_signed():
+    x = jnp.array([3.0, -5.0, 1.0, 0.5, -2.0, 4.0])
+    out = abs_topk(x, 3)
+    np.testing.assert_allclose(out, [3.0, -5.0, 0.0, 0.0, 0.0, 4.0])
+
+
+def test_abs_topk_sparse_roundtrip():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (17, 64))
+    vals, idx = abs_topk_sparse(x, 5)
+    assert vals.shape == (17, 5) and idx.shape == (17, 5)
+    dense = abs_topk(x, 5)
+    # every (val, idx) pair appears in the dense masked version
+    rows = jnp.arange(17)[:, None]
+    np.testing.assert_allclose(dense[rows, idx], vals, rtol=1e-6)
+    # exactly k nonzeros per row
+    assert int((dense != 0).sum()) == 17 * 5
+
+
+def test_encoder_normalizes_input_scale_invariant():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, CFG.d))
+    c1 = encode(params, x, CFG.k)
+    c2 = encode(params, 3.7 * x, CFG.k)
+    np.testing.assert_allclose(c1.values, c2.values, rtol=1e-5)
+    np.testing.assert_array_equal(c1.indices, c2.indices)
+
+
+def test_decoder_rows_unit_norm_after_projection():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    params = {**params, "w_dec": params["w_dec"] * 3.0}
+    params = normalize_decoder(params)
+    norms = jnp.linalg.norm(params["w_dec"], axis=-1)
+    np.testing.assert_allclose(norms, jnp.ones(CFG.h), rtol=1e-6)
+
+
+def test_sparse_decode_matches_dense_decode():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(3), (9, CFG.d))
+    codes = encode(params, x, CFG.k)
+    dense_lat = encode_dense(params, x, CFG.k)
+    np.testing.assert_allclose(
+        decode(params, codes), decode_dense(params, dense_lat), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_densify_from_dense_roundtrip():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(4), (6, CFG.d))
+    codes = encode(params, x, CFG.k)
+    dense = sp.densify(codes)
+    assert dense.shape == (6, CFG.h)
+    codes2 = sp.from_dense(dense, CFG.k)
+    np.testing.assert_allclose(sp.densify(codes2), dense, rtol=1e-6)
+
+
+def test_csr_roundtrip():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, CFG.d))
+    codes = encode(params, x, CFG.k)
+    data, indices, indptr = sp.to_csr(codes)
+    assert indptr[-1] == 8 * CFG.k
+    back = sp.from_csr(data, indices, indptr, CFG.h)
+    np.testing.assert_allclose(sp.densify(back), sp.densify(codes), rtol=1e-6)
+
+
+def test_compression_ratio_paper_arithmetic():
+    # Paper: 768-d fp32 -> 4096-dim k=32 sparse = 12x
+    cfg = SAEConfig(d=768, h=4096, k=32)
+    assert cfg.compression_ratio == pytest.approx(12.0)
+
+
+def test_loss_and_train_step_reduce_loss():
+    key = jax.random.PRNGKey(7)
+    x = clustered_embeddings(key, 512, d=CFG.d, n_clusters=8)
+    state = init_train_state(CFG, jax.random.PRNGKey(8))
+    opt_cfg = AdamConfig(lr=3e-3)
+    loss0, m0 = compressae_loss(state.params, x, CFG)
+    step = jax.jit(
+        lambda s, b: train_step(s, b, CFG, opt_cfg), donate_argnums=(0,)
+    )
+    for _ in range(30):
+        state, metrics = step(state, x)
+    assert float(metrics["loss"]) < float(loss0) * 0.7
+    assert jnp.isfinite(metrics["loss"])
+    # decoder stays row-normalized through training
+    norms = jnp.linalg.norm(state.params["w_dec"], axis=-1)
+    np.testing.assert_allclose(norms, jnp.ones(CFG.h), rtol=1e-5)
+
+
+def test_multi_k_aux_loss_components():
+    key = jax.random.PRNGKey(9)
+    x = clustered_embeddings(key, 128, d=CFG.d, n_clusters=8)
+    params = init_params(CFG, jax.random.PRNGKey(10))
+    loss, m = compressae_loss(params, x, CFG)
+    # total = k-loss + aux-loss (aux_weight=1)
+    np.testing.assert_allclose(
+        float(loss), float(m["cos_loss_k"] + m["cos_loss_aux"]), rtol=1e-6
+    )
+    # 4k reconstruction must be at least as good as k (more capacity)
+    assert float(m["cos_loss_aux"]) <= float(m["cos_loss_k"]) + 1e-6
+
+
+def test_kernel_matrix_symmetry():
+    params = init_params(CFG, jax.random.PRNGKey(11))
+    K = kernel_matrix(params)
+    assert K.shape == (CFG.h, CFG.h)
+    np.testing.assert_allclose(K, K.T, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(jnp.diag(K), jnp.ones(CFG.h), rtol=1e-5)

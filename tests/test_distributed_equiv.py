@@ -1,0 +1,24 @@
+"""Distributed-correctness: shard_map implementations must match their
+single-device oracles bit-for-bit (up to float reassociation).
+
+Runs in a subprocess because the device count must be set before jax
+initializes (the main pytest process is single-device)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_shard_map_implementations_match_oracles():
+    script = pathlib.Path(__file__).with_name("_distributed_equiv_impl.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, str(script)], env=env,
+        capture_output=True, text=True, timeout=570,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL DISTRIBUTED EQUIV OK" in proc.stdout

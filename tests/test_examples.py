@@ -1,0 +1,18 @@
+"""The examples are part of the public API surface — run them."""
+import runpy
+import sys
+import pathlib
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).parents[1] / "examples"
+
+
+@pytest.mark.parametrize("name", [
+    "quickstart", "recsys_catalog_compression", "llm_embedding_compression",
+])
+@pytest.mark.timeout(900)
+def test_example_runs(name, capsys):
+    runpy.run_path(str(EXAMPLES / f"{name}.py"), run_name="__main__")
+    out = capsys.readouterr().out
+    assert "MiB" in out  # every example prints a compression line

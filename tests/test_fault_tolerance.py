@@ -1,0 +1,119 @@
+"""Fault-tolerance substrate tests: checkpoint atomicity, resume,
+elastic restore, deterministic data replay."""
+import os
+import pathlib
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.core import SAEConfig, init_train_state, train_step
+from repro.data import LoaderState, ShardedLoader, clustered_embeddings
+from repro.optim import AdamConfig
+
+CFG = SAEConfig(d=32, h=128, k=4)
+
+
+def _state():
+    return init_train_state(CFG, jax.random.PRNGKey(0))
+
+
+def test_save_load_roundtrip(tmp_path):
+    state = _state()
+    save_pytree(tmp_path / "x.ckpt", state, {"step": 7})
+    loaded, meta = load_pytree(tmp_path / "x.ckpt", like=state)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_partial_files(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = _state()
+    mgr.save(1, state)
+    # simulate a crashed writer: stray tmp file must not be visible as a step
+    (tmp_path / "step_0000000002.ckpt.tmp-999-1").write_bytes(b"garbage")
+    assert mgr.steps() == [1]
+    restored, meta = mgr.restore(state)
+    assert meta["step"] == 1
+
+
+def test_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.steps() == [3, 4]
+
+
+def test_resume_training_bitexact(tmp_path):
+    """Kill/restart at step 5 of 10 == uninterrupted 10 steps (checkpoint +
+    deterministic loader replay)."""
+    opt = AdamConfig(lr=1e-3)
+    loader = ShardedLoader(
+        generate=lambda k, s, n: {"x": clustered_embeddings(k, 64, d=CFG.d)}, seed=3
+    )
+    step_fn = jax.jit(lambda s, b: train_step(s, b, CFG, opt))
+
+    def run(state, lo, hi):
+        for t in range(lo, hi):
+            state, _ = step_fn(state, loader.batch_at(t)["x"])
+        return state
+
+    straight = run(_state(), 0, 10)
+
+    mgr = CheckpointManager(tmp_path)
+    half = run(_state(), 0, 5)
+    mgr.save(5, half)
+    restored, meta = mgr.restore(_state())
+    resumed = run(restored, int(meta["step"]), 10)
+
+    for a, b in zip(jax.tree.leaves(straight.params), jax.tree.leaves(resumed.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_elastic_restore_shape_agnostic(tmp_path):
+    """Checkpoints store full logical arrays — restoring onto a different
+    'device count' (here simulated by restructuring) works unchanged."""
+    state = _state()
+    save_pytree(tmp_path / "e.ckpt", {"w": jnp.arange(64.0).reshape(8, 8)})
+    # a 'resharded' consumer just asks for the same logical array
+    like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    loaded, _ = load_pytree(tmp_path / "e.ckpt", like=like)
+    np.testing.assert_array_equal(np.asarray(loaded["w"]),
+                                  np.arange(64.0).reshape(8, 8))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_pytree(tmp_path / "m.ckpt", {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        load_pytree(tmp_path / "m.ckpt",
+                    like={"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)})
+
+
+def test_async_save_completes(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(3, {"w": jnp.ones((16,))})
+    mgr.wait()
+    assert mgr.steps() == [3]
+
+
+def test_train_launcher_end_to_end(tmp_path, capsys):
+    """Tiny end-to-end run of the production launcher incl. resume."""
+    from repro.launch.train import main
+
+    ckpt = str(tmp_path / "ck")
+    rc = main(["--steps", "30", "--batch", "128", "--d", "32", "--h", "128",
+               "--k", "4", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+               "--log-every", "10"])
+    assert rc == 0
+    # resume: second invocation starts from the final checkpoint
+    rc = main(["--steps", "35", "--batch", "128", "--d", "32", "--h", "128",
+               "--k", "4", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+               "--log-every", "10"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "resumed from step 30" in out

@@ -1,0 +1,60 @@
+"""Inverted-file sparse retrieval (beyond-paper serving structure)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SAEConfig, build_index, encode, init_params, score_sparse, top_n
+from repro.core.inverted_index import (
+    build_inverted_index, expected_scan_fraction, search_inverted,
+)
+
+CFG = SAEConfig(d=32, h=128, k=4)
+
+
+def _setup(n=512, nq=8, seed=0):
+    params = init_params(CFG, jax.random.PRNGKey(seed))
+    corpus = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, CFG.d))
+    queries = jax.random.normal(jax.random.PRNGKey(seed + 2), (nq, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    q = encode(params, queries, CFG.k)
+    return codes, q
+
+
+def test_uncapped_matches_exact_scan():
+    codes, q = _setup()
+    truth = top_n(score_sparse(build_index(codes), q), 5)[1]
+    inv = build_inverted_index(codes, cap=codes.n)
+    _, ids = search_inverted(inv, q, 5)
+    # same candidate sets (scores can tie)
+    for a, b in zip(np.asarray(ids), np.asarray(truth)):
+        assert set(a.tolist()) == set(b.tolist())
+
+
+def test_postings_contain_exactly_the_activating_rows():
+    codes, _ = _setup(n=64)
+    inv = build_inverted_index(codes, cap=64)
+    post = np.asarray(inv.postings)
+    idx = np.asarray(codes.indices)
+    for lat in range(CFG.h):
+        want = {r for r in range(64) if lat in set(idx[r].tolist())}
+        got = {int(x) for x in post[lat] if x >= 0}
+        assert got == want, lat
+
+
+def test_single_query_shape_and_padding_excluded():
+    codes, q = _setup()
+    inv = build_inverted_index(codes, cap=32)
+    v, ids = search_inverted(
+        inv,
+        type(codes)(values=q.values[0], indices=q.indices[0], dim=q.dim),
+        5,
+    )
+    assert v.shape == (5,) and ids.shape == (5,)
+    assert (np.asarray(ids) >= 0).all()   # never returns padding
+
+
+def test_scan_fraction_decreases_with_cap():
+    codes, _ = _setup(n=1024)
+    f_small = expected_scan_fraction(codes, cap=8)
+    f_big = expected_scan_fraction(codes, cap=1024)
+    assert 0 < f_small <= f_big <= codes.k * codes.k / codes.dim * 4 + 1

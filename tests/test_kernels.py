@@ -1,0 +1,142 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode on CPU).
+
+Sweeps shapes/dtypes per the deliverable spec; hypothesis property tests on
+the invariants live in test_properties.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sae import normalize_input
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.fused_encode.ops import fused_encode
+from repro.kernels.fused_encode.ref import fused_encode_ref
+from repro.kernels.sparse_dot.ops import sparse_dot
+from repro.kernels.sparse_dot.ref import sparse_dot_ref
+from repro.kernels.topk_mask.ops import topk_mask
+from repro.kernels.topk_mask.ref import topk_mask_ref
+
+
+# ----------------------------------------------------------------- sparse_dot
+@pytest.mark.parametrize("n", [64, 256, 1000, 4097])
+@pytest.mark.parametrize("k,h", [(8, 256), (32, 4096)])
+def test_sparse_dot_shapes(n, k, h):
+    key = jax.random.PRNGKey(n * k)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.normal(k1, (n, k), jnp.float32)
+    idx = jax.random.randint(k2, (n, k), 0, h, dtype=jnp.int32)
+    q = jax.random.normal(k3, (2, h), jnp.float32)
+    np.testing.assert_allclose(
+        sparse_dot(vals, idx, q), sparse_dot_ref(vals, idx, q), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("qdtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_dot_dtypes(qdtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.normal(k1, (128, 16), jnp.float32)
+    idx = jax.random.randint(k2, (128, 16), 0, 512, dtype=jnp.int32)
+    q = jax.random.normal(k3, (1, 512)).astype(qdtype)
+    got = sparse_dot(vals, idx, q)
+    want = sparse_dot_ref(vals, idx, q)
+    rtol = 1e-5 if qdtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=rtol, atol=rtol
+    )
+
+
+def test_sparse_dot_duplicate_indices_sum():
+    # duplicate column indices in one row must contribute additively
+    vals = jnp.array([[1.0, 2.0, 3.0]])
+    idx = jnp.array([[5, 5, 7]], dtype=jnp.int32)
+    q = jnp.zeros((1, 16)).at[0, 5].set(10.0).at[0, 7].set(1.0)
+    np.testing.assert_allclose(sparse_dot(vals, idx, q), [[33.0]], rtol=1e-6)
+
+
+# ------------------------------------------------------------------ topk_mask
+@pytest.mark.parametrize("b,h,k", [(8, 128, 4), (300, 512, 16), (64, 4096, 32), (257, 640, 1)])
+def test_topk_mask_shapes(b, h, k):
+    x = jax.random.normal(jax.random.PRNGKey(b + h + k), (b, h))
+    np.testing.assert_allclose(topk_mask(x, k), topk_mask_ref(x, k), rtol=1e-6)
+
+
+def test_topk_mask_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 6, 256))
+    np.testing.assert_allclose(topk_mask(x, 8), topk_mask_ref(x, 8), rtol=1e-6)
+
+
+def test_topk_mask_ties_match_lax_topk():
+    # Repeated |values|: kernel must break ties toward the lowest index,
+    # exactly like jax.lax.top_k on |x|.
+    x = jnp.array([[2.0, -2.0, 2.0, 1.0, -2.0, 0.5]] * 8)
+    np.testing.assert_allclose(topk_mask(x, 3), topk_mask_ref(x, 3), rtol=0)
+
+
+# --------------------------------------------------------------- fused_encode
+@pytest.mark.parametrize("b,d,h,k", [(64, 96, 512, 8), (200, 64, 256, 4), (128, 768, 1024, 32)])
+def test_fused_encode_matches_ref(b, d, h, k):
+    key = jax.random.PRNGKey(b + d)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, d))
+    w = jax.random.normal(k2, (d, h)) / np.sqrt(d)
+    bias = 0.01 * jax.random.normal(k3, (h,))
+    codes = fused_encode(x, w, bias, k)
+    rv, ri = fused_encode_ref(normalize_input(x), w, bias, k)
+    # same selected index SET per row, and same (index -> value) mapping
+    got = {}
+    for r in range(b):
+        gi = np.asarray(codes.indices[r])
+        ri_r = np.asarray(ri[r])
+        assert set(gi.tolist()) == set(ri_r.tolist()), f"row {r} index set differs"
+    # values agree after aligning by index
+    dense_got = np.zeros((b, h), np.float32)
+    dense_want = np.zeros((b, h), np.float32)
+    bidx = np.arange(b)[:, None]
+    dense_got[bidx, np.asarray(codes.indices)] = np.asarray(codes.values)
+    dense_want[bidx, np.asarray(ri)] = np.asarray(rv)
+    np.testing.assert_allclose(dense_got, dense_want, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_encode_agrees_with_core_encode():
+    from repro.core import SAEConfig, encode, init_params
+    from repro.core import sparse as sp
+
+    cfg = SAEConfig(d=64, h=256, k=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d))
+    a = encode(params, x, cfg.k)
+    b = fused_encode(x, params["w_enc"], params["b_enc"], cfg.k)
+    np.testing.assert_allclose(sp.densify(a), sp.densify(b), rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------------- embedding_bag
+@pytest.mark.parametrize("v,dim,b,l", [(100, 32, 16, 1), (1000, 64, 37, 5), (5000, 128, 8, 20)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_shapes(v, dim, b, l, mode):
+    kt, ki = jax.random.split(jax.random.PRNGKey(v + b), 2)
+    table = jax.random.normal(kt, (v, dim))
+    ids = jax.random.randint(ki, (b, l), -1, v, dtype=jnp.int32)  # -1 = pad
+    np.testing.assert_allclose(
+        embedding_bag(table, ids, mode),
+        embedding_bag_ref(table, ids, mode),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_embedding_bag_all_padding_row():
+    table = jax.random.normal(jax.random.PRNGKey(0), (10, 16))
+    ids = jnp.full((3, 4), -1, jnp.int32)
+    out = embedding_bag(table, ids, "mean")
+    np.testing.assert_allclose(out, np.zeros((3, 16)), atol=1e-7)
+
+
+def test_embedding_bag_bf16_table():
+    table = jax.random.normal(jax.random.PRNGKey(0), (50, 32)).astype(jnp.bfloat16)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (7, 3), 0, 50, dtype=jnp.int32)
+    got = embedding_bag(table, ids, "sum").astype(jnp.float32)
+    want = embedding_bag_ref(table, ids, "sum").astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

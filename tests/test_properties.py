@@ -1,0 +1,123 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (
+    SAEConfig,
+    abs_topk,
+    abs_topk_sparse,
+    cosine_distance,
+    encode,
+    init_params,
+    normalize_decoder,
+)
+from repro.core import sparse as sp
+from repro.core.types import SparseCodes
+
+hypothesis.settings.register_profile(
+    "repro", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("repro")
+
+
+@st.composite
+def arrays_2d(draw, max_rows=16, max_cols=128, min_cols=4):
+    rows = draw(st.integers(1, max_rows))
+    cols = draw(st.integers(min_cols, max_cols))
+    seed = draw(st.integers(0, 2**31 - 1))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    return x
+
+
+@given(arrays_2d(), st.integers(1, 16))
+def test_abs_topk_invariants(x, k):
+    k = min(k, x.shape[-1])
+    out = abs_topk(x, k)
+    # I1: exactly k nonzeros per row (generic continuous inputs)
+    assert (np.asarray((out != 0).sum(-1)) == k).all()
+    # I2: kept entries equal the input where kept
+    mask = np.asarray(out != 0)
+    np.testing.assert_allclose(np.asarray(out)[mask], np.asarray(x)[mask], rtol=1e-6)
+    # I3: every dropped |entry| <= every kept |entry| (per row)
+    xa = np.abs(np.asarray(x))
+    for r in range(x.shape[0]):
+        kept = xa[r][mask[r]]
+        dropped = xa[r][~mask[r]]
+        if dropped.size and kept.size:
+            assert dropped.max() <= kept.min() + 1e-6
+    # I4: idempotence — φ(φ(x,k),k) = φ(x,k)
+    np.testing.assert_allclose(abs_topk(out, k), out, rtol=1e-6)
+
+
+@given(arrays_2d(), st.integers(1, 8))
+def test_sparse_densify_roundtrip(x, k):
+    k = min(k, x.shape[-1])
+    vals, idx = abs_topk_sparse(x, k)
+    codes = SparseCodes(values=vals, indices=idx, dim=x.shape[-1])
+    dense = sp.densify(codes)
+    np.testing.assert_allclose(dense, abs_topk(x, k), rtol=1e-6)
+    # storage arithmetic: 2 * k * 4 bytes per row
+    assert codes.nbytes_logical == x.shape[0] * 2 * k * 4
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_cosine_distance_bounds_and_self(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 32))
+    y = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 32))
+    d = np.asarray(cosine_distance(x, y))
+    assert (d >= -1e-6).all() and (d <= 2 + 1e-6).all()
+    np.testing.assert_allclose(cosine_distance(x, x), np.zeros(8), atol=1e-6)
+    # scale invariance
+    np.testing.assert_allclose(
+        cosine_distance(3.0 * x, 0.5 * y), d, rtol=1e-5, atol=1e-6
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_encode_is_scale_invariant_and_normalization_idempotent(seed):
+    cfg = SAEConfig(d=32, h=128, k=4)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    params = normalize_decoder(normalize_decoder(params))  # idempotent
+    norms = np.asarray(jnp.linalg.norm(params["w_dec"], axis=-1))
+    np.testing.assert_allclose(norms, np.ones(cfg.h), rtol=1e-6)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 7), (4, cfg.d))
+    c1 = encode(params, x, cfg.k)
+    c2 = encode(params, 100.0 * x, cfg.k)
+    np.testing.assert_array_equal(np.asarray(c1.indices), np.asarray(c2.indices))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+def test_sparse_dot_linearity(seed, k):
+    """sparse_dot is linear in the query: f(a·q1 + q2) = a·f(q1) + f(q2)."""
+    from repro.kernels.sparse_dot.ops import sparse_dot
+
+    h = 64
+    kv, ki, kq = jax.random.split(jax.random.PRNGKey(seed), 3)
+    vals = jax.random.normal(kv, (24, k))
+    idx = jax.random.randint(ki, (24, k), 0, h, dtype=jnp.int32)
+    q1 = jax.random.normal(kq, (1, h))
+    q2 = jnp.roll(q1, 3, axis=-1)
+    lhs = sparse_dot(vals, idx, 2.5 * q1 + q2)
+    rhs = 2.5 * sparse_dot(vals, idx, q1) + sparse_dot(vals, idx, q2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_loader_determinism_and_shard_disjointness(seed):
+    """Resumable loader: batch at step t is reproducible and shard-dependent."""
+    from repro.data import ShardedLoader, clustered_embeddings
+
+    def gen(key, shard, nshards):
+        return {"x": clustered_embeddings(key, 8, d=16, n_clusters=2)}
+
+    l0 = ShardedLoader(generate=gen, seed=seed, shard_id=0, num_shards=2)
+    l0b = ShardedLoader(generate=gen, seed=seed, shard_id=0, num_shards=2)
+    l1 = ShardedLoader(generate=gen, seed=seed, shard_id=1, num_shards=2)
+    b0 = l0.batch_at(5)["x"]
+    np.testing.assert_array_equal(b0, l0b.batch_at(5)["x"])  # deterministic
+    assert not np.allclose(b0, l1.batch_at(5)["x"])          # shard-distinct
+    assert not np.allclose(b0, l0.batch_at(6)["x"])          # step-distinct

@@ -1,0 +1,85 @@
+"""Unit tests for the loop-adjusted HLO cost model (benchmarks/roofline.py)."""
+import math
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "benchmarks"))
+from roofline import (  # noqa: E402
+    _trip_count, collective_bytes, hlo_cost, split_computations,
+)
+
+HLO = """\
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%x), to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (w: f32[16,32], x: f32[8,16]) -> f32[8,16] {
+  %w = f32[16,32]{1,0} parameter(0)
+  %x = f32[8,16]{1,0} parameter(1)
+  %d = f32[8,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%z, %x)
+  %wl = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wl), index=1
+}
+"""
+
+
+def test_split_computations_finds_all():
+    comps = split_computations(HLO)
+    assert set(comps) == {"add", "body.1", "cond.1", "main"}
+
+
+def test_trip_count_from_condition():
+    comps = split_computations(HLO)
+    assert _trip_count(comps["cond.1"]) == 5
+
+
+def test_collective_bytes_loop_adjusted():
+    total, kinds = collective_bytes(HLO)
+    # all-reduce of f32[8,16] = 512 B, wire factor 2, trip count 5
+    assert total == pytest.approx(512 * 2 * 5)
+    assert kinds == {"all-reduce": pytest.approx(512 * 2 * 5)}
+
+
+def test_hlo_cost_dot_flops_and_loop_bytes():
+    cost = hlo_cost(HLO)
+    # dot: 2 * |result 8x32| * contraction 16 = 8192 flops
+    assert cost["flops"] == pytest.approx(2 * 8 * 32 * 16)
+    assert cost["coll"] == pytest.approx(512 * 2 * 5)
+    # bytes include the dot (in+out) and 5x the loop body's AR traffic
+    assert cost["bytes"] >= (8 * 16 + 16 * 32 + 8 * 32) * 4
+
+
+def test_real_artifact_parses():
+    art = pathlib.Path(__file__).parents[1] / "artifacts" / "dryrun"
+    hlos = sorted(art.glob("qwen3-1.7b__train_4k__singlepod.hlo.txt"))
+    if not hlos:
+        pytest.skip("dry-run artifacts not generated")
+    cost = hlo_cost(hlos[0].read_text())
+    # loop-adjusted flops must exceed raw cost_analysis by ~the layer count
+    assert cost["flops"] > 1e13
+    assert cost["coll"] > 0
