@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from repro.core.sae import normalize_input
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.fused_encode.ref import fused_encode_ref
-from repro.kernels.sparse_dot.ops import sparse_dot
-from repro.kernels.sparse_dot.ref import sparse_dot_ref
+from repro.kernels.sparse_dot.ops import fused_retrieve, sparse_dot
+from repro.kernels.sparse_dot.ref import retrieve_ref, sparse_dot_ref
 from repro.kernels.topk_mask.ref import topk_mask_ref
 
 
@@ -31,12 +31,14 @@ def _timeit(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6
 
 
-def main():
+def main(smoke: bool = False):
     key = jax.random.PRNGKey(0)
     print("name,us_per_call,derived")
 
     # sparse_dot: N=100k catalog, k=32, h=4096 (paper's config)
-    n, k, h = 100_000, 32, 4096
+    n, k, h = (8192, 16, 512) if smoke else (100_000, 32, 4096)
+    nq, topn = (16, 5) if smoke else (64, 20)
+    kslice = min(n, 4096)
     k1, k2, k3 = jax.random.split(key, 3)
     vals = jax.random.normal(k1, (n, k))
     idx = jax.random.randint(k2, (n, k), 0, h, dtype=jnp.int32)
@@ -44,10 +46,28 @@ def main():
     ref_fn = jax.jit(sparse_dot_ref)
     us = _timeit(ref_fn, vals, idx, q)
     # agreement with the Pallas kernel (interpret mode) on a slice
-    got = sparse_dot(vals[:4096], idx[:4096], q)
-    want = sparse_dot_ref(vals[:4096], idx[:4096], q)
+    got = sparse_dot(vals[:kslice], idx[:kslice], q)
+    want = sparse_dot_ref(vals[:kslice], idx[:kslice], q)
     err = float(jnp.max(jnp.abs(got - want)))
-    print(f"sparse_dot_100k_k32,{us:.0f},flops={2*n*k:.2e};kernel_err={err:.1e}")
+    print(f"sparse_dot_{n//1000}k_k{k},{us:.0f},flops={2*n*k:.2e};kernel_err={err:.1e}")
+
+    # fused retrieve: multi-query score+select, streaming top-n (never
+    # materializes the (Q, N) score matrix).  jnp chunked path timed; the
+    # Pallas kernel checked for agreement on a slice (interpret mode).
+    qm = jax.random.normal(k3, (nq, h))
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(vals, axis=-1), 1e-8)
+    stream_fn = jax.jit(
+        lambda v, i, w, qq: retrieve_ref(v, i, w, qq, n=topn)
+    )
+    us = _timeit(stream_fn, vals, idx, inv, qm)
+    gv, gi = fused_retrieve(vals[:kslice], idx[:kslice], inv[:kslice], qm, n=topn)
+    rv, ri = retrieve_ref(vals[:kslice], idx[:kslice], inv[:kslice], qm, n=topn)
+    err = float(jnp.max(jnp.abs(gv - rv)))
+    id_match = float(jnp.mean((gi == ri).astype(jnp.float32)))
+    print(f"fused_retrieve_{n//1000}k_q{nq}_n{topn},{us:.0f},"
+          f"flops={2*n*k*nq:.2e};kernel_err={err:.1e};id_match={id_match:.4f}")
+    if smoke:
+        return 0
 
     # dense-dot comparison point (the 12x bytes story)
     dense = jax.random.normal(k1, (n, 768))

@@ -1,10 +1,24 @@
-"""Paper §3.2: the three retrieval modes, timed and scored.
+"""Paper §3.2: the retrieval modes, timed and scored through the serving API.
 
-name,us_per_call,derived-recall CSV per the benchmark harness convention.
-Also verifies the kernel-trick identity numerically at benchmark scale.
+name,us_per_call,derived-recall CSV per the benchmark harness convention,
+plus a BENCH_retrieval.json perf record (name, us_per_call, recall, shape)
+so later PRs have a trajectory to compare against.
+
+Rows:
+  retrieval_dense               — exact dense baseline
+  retrieval_sparse_fullscore    — seed path: full (Q, N) score matrix
+                                  (sparse_dot_dense_query) + lax.top_k
+  retrieval_sparse              — retrieve() fused path (chunked streaming
+                                  top-n on CPU, fused Pallas kernel on TPU)
+  retrieval_reconstructed       — retrieve() kernel-trick mode
+
+Also verifies the kernel-trick identity numerically at benchmark scale and
+that retrieve() returns the same ids as the full-score path.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -12,14 +26,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    SAEConfig, build_index, decode, encode, init_train_state, score_dense,
-    score_reconstructed, score_sparse, top_n, train_step,
+    SAEConfig, build_index, decode, encode, init_train_state, retrieve,
+    score_dense, score_reconstructed, score_sparse, top_n, train_step,
 )
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
 
 D, H, K = 256, 1024, 16
 N, Q, TOPN = 16384, 64, 10
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_retrieval.json"
 
 
 def _timeit(fn, *args, reps=5):
@@ -31,38 +46,61 @@ def _timeit(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6
 
 
-def main():
+def main(smoke: bool = False):
+    n, q_count, topn = (1024, 16, 5) if smoke else (N, Q, TOPN)
+    train_steps = 40 if smoke else 200
     cfg = SAEConfig(d=D, h=H, k=K)
-    corpus = clustered_embeddings(jax.random.PRNGKey(0), N, d=D)
-    queries = clustered_embeddings(jax.random.PRNGKey(1), Q, d=D)
+    corpus = clustered_embeddings(jax.random.PRNGKey(0), n, d=D)
+    queries = clustered_embeddings(jax.random.PRNGKey(1), q_count, d=D)
     state = init_train_state(cfg, jax.random.PRNGKey(2))
     step = jax.jit(lambda s, b: train_step(s, b, cfg, AdamConfig(lr=3e-3)))
-    for i in range(200):
+    for i in range(train_steps):
         idx = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(3), i),
-                                 (4096,), 0, N)
+                                 (min(4096, n),), 0, n)
         state, _ = step(state, corpus[idx])
     params = state.params
     codes = encode(params, corpus, cfg.k)
     index = build_index(codes, params)
-    truth = top_n(score_dense(corpus, queries), TOPN)[1]
+    truth = top_n(score_dense(corpus, queries), topn)[1]
 
     def rec(ids):
         return sum(len(set(a.tolist()) & set(b.tolist()))
                    for a, b in zip(np.asarray(ids), np.asarray(truth))) / truth.size
 
-    dense_fn = jax.jit(lambda q: top_n(score_dense(corpus, q), TOPN))
-    sparse_fn = jax.jit(lambda q: top_n(score_sparse(index, encode(params, q, K)), TOPN))
+    dense_fn = jax.jit(lambda q: top_n(score_dense(corpus, q), topn))
+    # seed path: materialize (Q, N) scores, then select
+    fullscore_fn = jax.jit(
+        lambda q: top_n(score_sparse(index, encode(params, q, K), use_kernel=False), topn)
+    )
+    # serving path: fused score+select (never materializes (Q, N))
+    sparse_fn = jax.jit(
+        lambda q: retrieve(index, encode(params, q, K), topn, mode="sparse")
+    )
     recon_fn = jax.jit(
-        lambda q: top_n(score_reconstructed(index, encode(params, q, K), params), TOPN)
+        lambda q: retrieve(index, encode(params, q, K), topn,
+                           mode="reconstructed", params=params)
     )
 
+    records = []
+    reps = 5 if smoke else 20  # shared-box timing noise: more reps at full size
     print("name,us_per_call,derived")
     for name, fn in [("retrieval_dense", dense_fn),
+                     ("retrieval_sparse_fullscore", fullscore_fn),
                      ("retrieval_sparse", sparse_fn),
                      ("retrieval_reconstructed", recon_fn)]:
-        us = _timeit(fn, queries)
+        us = _timeit(fn, queries, reps=reps)
         r = rec(fn(queries)[1])
-        print(f"{name},{us:.0f},recall@{TOPN}={r:.4f}")
+        print(f"{name},{us:.0f},recall@{topn}={r:.4f}")
+        records.append({"name": name, "us_per_call": round(us, 1),
+                        "recall": round(r, 4),
+                        "n": n, "q": q_count, "topn": topn, "smoke": smoke})
+
+    # fused path must agree with the full-score path (same ids away from ties)
+    ids_full = fullscore_fn(queries)[1]
+    ids_fused = sparse_fn(queries)[1]
+    agree = float(jnp.mean((ids_full == ids_fused).astype(jnp.float32)))
+    print(f"fused_vs_fullscore_id_agreement,0,{agree:.4f}")
+    assert agree > 0.999, f"fused retrieve disagrees with full-score path: {agree}"
 
     # kernel-trick exactness at benchmark scale
     q_codes = encode(params, queries, K)
@@ -71,6 +109,9 @@ def main():
     err = float(jnp.max(jnp.abs(got - want)))
     print(f"kernel_trick_max_abs_err,0,{err:.2e}")
     assert err < 1e-3
+
+    BENCH_JSON.write_text(json.dumps(records, indent=2) + "\n")
+    print(f"[bench] wrote {BENCH_JSON}")
     return 0
 
 

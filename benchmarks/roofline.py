@@ -424,6 +424,52 @@ def _recsys_flops(arch: str, cfg, meta) -> float:
     return per * b * factor
 
 
+# ------------------------------------------------- retrieval traffic model
+def retrieval_traffic(
+    n: int = 100_000, k: int = 32, q: int = 64, topn: int = 20,
+    block_q: int = 8,
+) -> Dict[str, Dict[str, float]]:
+    """Analytic HBM traffic (bytes) for the three retrieval generations.
+
+    All serve Q queries over N fixed-k candidates (values+indices = 8 B per
+    nonzero, f32 scores = 4 B):
+
+      per_query   — seed kernel: grid (Q, N/BLOCK_N) streams every candidate
+                    tile once PER QUERY, then writes the full (Q, N) score
+                    matrix to HBM and re-reads it for lax.top_k.
+      blocked     — multi-query panel: candidates stream once per BLOCK_Q
+                    queries; (Q, N) scores still round-trip HBM.
+      fused       — blocked scoring + streaming top-n epilogue in VMEM:
+                    only (Q, topn) scores+ids ever reach HBM.
+    """
+    cand = n * k * 8                       # values + indices
+    norms = n * 4
+    score_rt = q * n * 4 * 2               # write + re-read for top-k
+    out = q * topn * 8                     # scores + ids
+    panels = -(-q // block_q)              # ceil(Q / BLOCK_Q)
+    variants = {
+        "per_query": cand * q + norms + score_rt + out,
+        "blocked": cand * panels + norms + score_rt + out,
+        "fused": cand * panels + norms + out,
+    }
+    return {
+        name: {"bytes": float(b), "t_mem_ms": b / HBM_BW * 1e3,
+               "speedup_vs_per_query": variants["per_query"] / b}
+        for name, b in variants.items()
+    }
+
+
+def retrieval_traffic_report(n=100_000, k=32, q=64, topn=20, block_q=8) -> str:
+    rows = retrieval_traffic(n, k, q, topn, block_q)
+    out = [f"retrieval HBM traffic model: N={n} k={k} Q={q} topn={topn} "
+           f"BLOCK_Q={block_q} (HBM {HBM_BW/1e9:.0f} GB/s)",
+           "| path | HBM bytes | t_mem (ms) | speedup |", "|---|---|---|---|"]
+    for name, r in rows.items():
+        out.append(f"| {name} | {r['bytes']:.3e} | {r['t_mem_ms']:.3f} "
+                   f"| {r['speedup_vs_per_query']:.1f}x |")
+    return "\n".join(out)
+
+
 # -------------------------------------------------------------------- report
 @dataclasses.dataclass
 class Row:
@@ -503,7 +549,13 @@ def main(argv=None):
     ap.add_argument("--artifacts", default="artifacts/dryrun")
     ap.add_argument("--mesh", default="singlepod")
     ap.add_argument("--out", default="artifacts/roofline.md")
+    ap.add_argument("--retrieval", action="store_true",
+                    help="print the analytic retrieval HBM-traffic model "
+                         "(per-query vs blocked vs fused kernel) and exit")
     args = ap.parse_args(argv)
+    if args.retrieval:
+        print(retrieval_traffic_report())
+        return 0
     rows = analyze(pathlib.Path(args.artifacts), args.mesh)
     md = to_markdown(rows)
     print(md)

@@ -21,18 +21,28 @@ import time
 
 MODULES = ["size_table", "convergence", "tradeoff", "retrieval_modes",
            "kernels_bench", "quantized_codes_bench", "inverted_index_bench"]
+# --smoke: tiny-size perf record (writes BENCH_retrieval.json) — wired into
+# the tier-1 flow as a non-gating step (tests/test_benchmarks_smoke.py)
+SMOKE_MODULES = ["retrieval_modes", "kernels_bench"]
 
 
 def main() -> None:
     args = sys.argv[1:]
-    targets = args if args else MODULES
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    targets = args if args else (SMOKE_MODULES if smoke else MODULES)
     failures = []
     for name in targets:
-        print(f"\n===== benchmarks.{name} =====", flush=True)
+        print(f"\n===== benchmarks.{name}{' (smoke)' if smoke else ''} =====",
+              flush=True)
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            # only the SMOKE_MODULES mains take a smoke flag
+            if smoke and name in SMOKE_MODULES:
+                mod.main(smoke=True)
+            else:
+                mod.main()
             print(f"===== {name} done in {time.time()-t0:.1f}s =====")
         except Exception as e:  # noqa: BLE001 — harness reports and continues
             failures.append((name, e))

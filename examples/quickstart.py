@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    SAEConfig, build_index, encode, init_train_state, score_dense,
+    SAEConfig, build_index, encode, init_train_state, retrieve, score_dense,
     score_reconstructed, score_sparse, top_n, train_step,
 )
 from repro.core import sparse as sparse_fmt
@@ -53,6 +53,13 @@ def main():
     ids_rc = top_n(score_reconstructed(index, q_codes, state.params), 10)[1]
     print(f"recall@10 vs exact dense: sparse-space {recall(ids_sp):.3f}, "
           f"reconstructed-space {recall(ids_rc):.3f}")
+
+    # 5. Serving path: fused score+select — same ids, never materializes
+    #    the (Q, N) score matrix (Pallas kernel on TPU, chunked scan on CPU).
+    _, ids_served = retrieve(index, q_codes, 10, mode="sparse")
+    assert (np.asarray(ids_served) == np.asarray(ids_sp)).all()
+    print(f"retrieve() serving path: recall@10 {recall(ids_served):.3f} "
+          f"(identical ids to the full-score path)")
 
 
 if __name__ == "__main__":

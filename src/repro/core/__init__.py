@@ -26,6 +26,7 @@ from repro.core.train import TrainState, init_train_state, train_step, eval_step
 from repro.core.retrieval import (
     SparseIndex,
     build_index,
+    retrieve,
     score_sparse,
     score_reconstructed,
     score_dense,
@@ -40,6 +41,6 @@ __all__ = [
     "reconstruct", "kernel_matrix", "normalize_decoder", "normalize_input",
     "preactivations", "compressae_loss", "cosine_distance", "TrainState",
     "init_train_state", "train_step", "eval_step", "SparseIndex",
-    "build_index", "score_sparse", "score_reconstructed", "score_dense",
+    "build_index", "retrieve", "score_sparse", "score_reconstructed", "score_dense",
     "sparse_dot_dense_query", "top_n", "sparse", "baselines",
 ]

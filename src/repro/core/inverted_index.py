@@ -39,20 +39,32 @@ class InvertedIndex(NamedTuple):
 
 
 def build_inverted_index(codes: SparseCodes, cap: int = 2048) -> InvertedIndex:
-    """Host-side build: posting list per latent, impact-ordered, capped."""
+    """Host-side build: posting list per latent, impact-ordered, capped.
+
+    Fully vectorized (one lexsort + bincount over the N·k nonzeros) — the
+    former per-entry Python loop dominated index-build time at the paper's
+    N=100k, k=32.  Entries sort by (latent, |value| desc, row desc), the
+    same order the loop's ``entries.sort(reverse=True)`` produced; the
+    position of each entry within its latent group comes from subtracting
+    the group's cumulative start, and entries past ``cap`` are dropped.
+    """
     vals = np.asarray(codes.values)
     idx = np.asarray(codes.indices)
     n, k = vals.shape
     h = codes.dim
-    lists: list[list[tuple[float, int]]] = [[] for _ in range(h)]
-    for row in range(n):
-        for j in range(k):
-            lists[idx[row, j]].append((abs(float(vals[row, j])), row))
+    flat_lat = idx.reshape(-1)
+    flat_abs = np.abs(vals.reshape(-1))
+    flat_row = np.repeat(np.arange(n, dtype=np.int32), k)
+    # lexsort: last key is primary — latent asc, then impact desc, row desc
+    order = np.lexsort((-flat_row, -flat_abs, flat_lat))
+    sorted_lat = flat_lat[order]
+    sorted_row = flat_row[order]
+    counts = np.bincount(flat_lat, minlength=h)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    within = np.arange(n * k, dtype=np.int64) - starts[sorted_lat]
+    keep = within < cap
     postings = np.full((h, cap), -1, dtype=np.int32)
-    for lat, entries in enumerate(lists):
-        entries.sort(reverse=True)               # impact ordering
-        ids = [r for _, r in entries[:cap]]
-        postings[lat, : len(ids)] = ids
+    postings[sorted_lat[keep], within[keep]] = sorted_row[keep]
     norms = jnp.linalg.norm(codes.values, axis=-1)
     return InvertedIndex(postings=jnp.asarray(postings), codes=codes,
                          norms=norms)

@@ -18,18 +18,49 @@ matmuls, with candidate norms √(s_cᵀKs_c) precomputed at index-build time.
 Mode 2 therefore costs the same per-candidate work as mode 1 — this is an
 exact refactoring (associativity), not an approximation.
 
-The primitive has a Pallas kernel (repro.kernels.sparse_dot) and a pure-jnp
-path (used on CPU / in tests); ``use_kernel`` selects.
+Serving goes through ``retrieve(index, q, n, mode)`` — the one-call
+score+select API.  It dispatches on ``use_kernel``:
+
+  * ``"auto"`` (default) — the fused Pallas kernel
+    (repro.kernels.sparse_dot.fused_retrieve: candidate tiles streamed once
+    per query panel, streaming top-n epilogue, no (Q, N) materialization)
+    on TPU; the equivalent chunked-jnp ``retrieve_ref`` elsewhere.
+  * ``True`` / ``False`` — force the kernel (interpret mode off-TPU; slow,
+    for tests) or the jnp path.
+
+Both paths fold precomputed *reciprocal* candidate norms into the scoring
+epilogue and divide by ‖q‖ on the final (Q, n) panel only, so they agree to
+f32 rounding and return identical ids away from ties.
+
+``score_sparse`` / ``score_reconstructed`` return full (Q, N) score
+matrices for evaluation; they accept the same ``use_kernel`` switch to
+route the SpMV through the blocked Pallas kernel or the pure-jnp path.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sae, sparse
 from repro.core.types import SparseCodes
+from repro.kernels.sparse_dot import fused_retrieve, retrieve_ref
+from repro.kernels.sparse_dot import sparse_dot as sparse_dot_kernel
+
+NORM_EPS = 1e-8
+UseKernel = Union[str, bool]  # "auto" | True | False
+
+
+def kernel_path(use_kernel: UseKernel) -> bool:
+    """Resolve the ``use_kernel`` dispatch switch to a concrete backend
+    decision (True = fused/blocked Pallas kernel).  Public so entry points
+    (launch/serve.py) can report which path serves."""
+    if use_kernel == "auto":
+        return jax.default_backend() == "tpu"
+    if not isinstance(use_kernel, bool):
+        raise ValueError(f"use_kernel must be 'auto', True or False: {use_kernel!r}")
+    return use_kernel
 
 
 def sparse_dot_dense_query(
@@ -63,6 +94,15 @@ def sparse_dot_dense_query(
     return out[:q]
 
 
+def _sparse_dot(
+    codes: SparseCodes, q_dense: jax.Array, use_kernel: UseKernel
+) -> jax.Array:
+    """Full-score SpMV dispatch: blocked Pallas kernel or pure jnp."""
+    if kernel_path(use_kernel):
+        return sparse_dot_kernel(codes.values, codes.indices, q_dense)
+    return sparse_dot_dense_query(codes, q_dense)
+
+
 class SparseIndex(NamedTuple):
     """A retrieval index over a compressed candidate database.
 
@@ -70,39 +110,125 @@ class SparseIndex(NamedTuple):
     sparse_norms: ‖s_c‖₂ per candidate (sparse-space cosine denominators).
     recon_norms:  ‖W_dec s_c‖₂ = √(s_cᵀ K s_c) per candidate (kernel trick),
                   None if the index was built without decoder weights.
+    inv_sparse_norms / inv_recon_norms: precomputed 1/max(norm, NORM_EPS),
+                  streamed alongside candidate values by the fused
+                  retrieval kernel (division folded into the epilogue).
     """
 
     codes: SparseCodes
     sparse_norms: jax.Array
     recon_norms: Optional[jax.Array]
+    inv_sparse_norms: Optional[jax.Array] = None
+    inv_recon_norms: Optional[jax.Array] = None
 
 
 def build_index(
     codes: SparseCodes, params: Optional[sae.Params] = None
 ) -> SparseIndex:
-    """Precompute per-candidate norms.  recon_norms needs W_dec: ‖x̂_c‖ is the
-    norm of a k-atom combination, computed by a k-row gather of W_dec —
-    O(N·k·d) once at build time, never per query."""
+    """Precompute per-candidate norms (and reciprocals for the fused
+    kernel).  recon_norms needs W_dec: ‖x̂_c‖ is the norm of a k-atom
+    combination, computed by a k-row gather of W_dec — O(N·k·d) once at
+    build time, never per query."""
     sparse_norms = jnp.linalg.norm(codes.values, axis=-1)
     recon_norms = None
+    inv_recon_norms = None
     if params is not None:
         x_hat = sae.decode(params, codes)                 # (N, d)
         recon_norms = jnp.linalg.norm(x_hat, axis=-1)
-    return SparseIndex(codes=codes, sparse_norms=sparse_norms, recon_norms=recon_norms)
+        inv_recon_norms = 1.0 / jnp.maximum(recon_norms, NORM_EPS)
+    return SparseIndex(
+        codes=codes,
+        sparse_norms=sparse_norms,
+        recon_norms=recon_norms,
+        inv_sparse_norms=1.0 / jnp.maximum(sparse_norms, NORM_EPS),
+        inv_recon_norms=inv_recon_norms,
+    )
 
 
-def score_sparse(index: SparseIndex, q: SparseCodes) -> jax.Array:
+def _query_dense(
+    index: SparseIndex,
+    q: SparseCodes,
+    mode: str,
+    params: Optional[sae.Params],
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (dense scatter-query vector, ‖q‖, candidate inv norms) for a mode."""
+    if mode == "sparse":
+        inv = index.inv_sparse_norms
+        if inv is None:
+            inv = 1.0 / jnp.maximum(index.sparse_norms, NORM_EPS)
+        return sparse.densify(q), jnp.linalg.norm(q.values, axis=-1), inv
+    if mode == "reconstructed":
+        if params is None:
+            raise ValueError("mode='reconstructed' requires SAE params")
+        if index.recon_norms is None:
+            raise ValueError("index built without params; recon norms missing")
+        inv = index.inv_recon_norms
+        if inv is None:
+            inv = 1.0 / jnp.maximum(index.recon_norms, NORM_EPS)
+        x_hat_q = sae.decode(params, q)                    # (Q?, d)
+        z = x_hat_q @ params["w_dec"].T                    # (Q?, h) == K s_q
+        return z, jnp.linalg.norm(x_hat_q, axis=-1), inv
+    raise ValueError(f"unknown retrieval mode: {mode!r}")
+
+
+def retrieve(
+    index: SparseIndex,
+    q: SparseCodes,
+    n: int,
+    mode: str = "sparse",
+    params: Optional[sae.Params] = None,
+    *,
+    use_kernel: UseKernel = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """One-call serving API: top-n (cosine scores, candidate ids).
+
+    q: (Q?, k) query codes; returns (Q?, n) scores and int32 ids.  The
+    (Q, N) score matrix is never materialized on either path: the fused
+    Pallas kernel keeps per-query running best buffers in VMEM across the
+    candidate stream, the jnp path carries them through a chunked scan.
+    Equivalent (to f32 rounding; identical ids away from ties) to
+    ``top_n(score_<mode>(index, q), n)``.
+    """
+    if n > index.codes.n:
+        raise ValueError(f"top-n {n} exceeds candidate count {index.codes.n}")
+    q_dense, q_norm, inv_norms = _query_dense(index, q, mode, params)
+    if kernel_path(use_kernel):
+        vals, ids = fused_retrieve(
+            index.codes.values, index.codes.indices, inv_norms, q_dense, n=n
+        )
+    else:
+        squeeze = q_dense.ndim == 1
+        vals, ids = retrieve_ref(
+            index.codes.values,
+            index.codes.indices,
+            inv_norms,
+            q_dense[None] if squeeze else q_dense,
+            n=n,
+        )
+        if squeeze:
+            vals, ids = vals[0], ids[0]
+    scores = vals / jnp.maximum(q_norm[..., None], NORM_EPS)
+    return scores, ids
+
+
+def score_sparse(
+    index: SparseIndex, q: SparseCodes, *, use_kernel: UseKernel = "auto"
+) -> jax.Array:
     """Cosine similarity in the sparse compressed space.  q: (Q?, k) codes.
     Returns (N,) for a single query or (Q, N)."""
     q_dense = sparse.densify(q)                            # (Q?, h)
     q_norm = jnp.linalg.norm(q.values, axis=-1)            # (Q?,)
-    dots = sparse_dot_dense_query(index.codes, q_dense)    # (Q?, N)
-    denom = jnp.maximum(q_norm[..., None] * index.sparse_norms, 1e-8)
-    return dots / denom if q.values.ndim > 1 else dots / jnp.maximum(q_norm * index.sparse_norms, 1e-8)
+    dots = _sparse_dot(index.codes, q_dense, use_kernel)   # (Q?, N)
+    denom = jnp.maximum(q_norm[..., None] * index.sparse_norms, NORM_EPS)
+    return dots / denom if q.values.ndim > 1 else dots / jnp.maximum(q_norm * index.sparse_norms, NORM_EPS)
 
 
 def score_reconstructed(
-    index: SparseIndex, q: SparseCodes, params: sae.Params
+    index: SparseIndex,
+    q: SparseCodes,
+    params: sae.Params,
+    *,
+    use_kernel: UseKernel = "auto",
 ) -> jax.Array:
     """Kernel-trick cosine in reconstructed space (paper §3.2, exact).
 
@@ -115,16 +241,16 @@ def score_reconstructed(
     x_hat_q = sae.decode(params, q)                        # (Q?, d)
     z = x_hat_q @ params["w_dec"].T                        # (Q?, h) == K s_q
     q_norm = jnp.linalg.norm(x_hat_q, axis=-1)             # ‖W_dec s_q‖
-    dots = sparse_dot_dense_query(index.codes, z)          # s_cᵀ K s_q
-    denom = jnp.maximum(q_norm[..., None] * index.recon_norms, 1e-8) \
-        if q.values.ndim > 1 else jnp.maximum(q_norm * index.recon_norms, 1e-8)
+    dots = _sparse_dot(index.codes, z, use_kernel)         # s_cᵀ K s_q
+    denom = jnp.maximum(q_norm[..., None] * index.recon_norms, NORM_EPS) \
+        if q.values.ndim > 1 else jnp.maximum(q_norm * index.recon_norms, NORM_EPS)
     return dots / denom
 
 
 def score_dense(database: jax.Array, q: jax.Array) -> jax.Array:
     """Exact dense cosine baseline.  database (N, d), q (Q?, d)."""
-    db = database / jnp.maximum(jnp.linalg.norm(database, axis=-1, keepdims=True), 1e-8)
-    qq = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+    db = database / jnp.maximum(jnp.linalg.norm(database, axis=-1, keepdims=True), NORM_EPS)
+    qq = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), NORM_EPS)
     return qq @ db.T if q.ndim > 1 else db @ qq
 
 

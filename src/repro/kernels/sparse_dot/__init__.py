@@ -1,4 +1,4 @@
-from repro.kernels.sparse_dot.ops import sparse_dot
-from repro.kernels.sparse_dot.ref import sparse_dot_ref
+from repro.kernels.sparse_dot.ops import fused_retrieve, sparse_dot
+from repro.kernels.sparse_dot.ref import retrieve_ref, sparse_dot_ref
 
-__all__ = ["sparse_dot", "sparse_dot_ref"]
+__all__ = ["sparse_dot", "sparse_dot_ref", "fused_retrieve", "retrieve_ref"]

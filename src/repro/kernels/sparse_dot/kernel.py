@@ -1,22 +1,54 @@
-"""Scatter-query SpMV Pallas kernel (DESIGN.md §3).
+"""Scatter-query SpMV Pallas kernels (DESIGN.md §3) — two generations.
 
-Contract: scores[qi, i] = Σ_j values[i, j] · q[qi, indices[i, j]]
+Contract (both): scores[qi, i] = Σ_j values[i, j] · q[qi, indices[i, j]]
 
-TPU mapping:
-  * The dense query row (h floats, h=4096 ⇒ 16 KiB) is VMEM-resident for the
-    whole pass — the "scatter-query" trick that turns the paper's CSR SpMV
-    (gather from sparse rows) into a regular per-row VMEM gather the VPU can
-    vectorize (`jnp.take_along_axis` → tpu.dynamic_gather along lanes).
-  * Candidate (values, indices) stream HBM→VMEM in (BLOCK_N, k) tiles via
-    BlockSpec; arithmetic intensity is 2 flops per 8 bytes streamed, i.e.
-    the kernel is HBM-bandwidth-bound by construction (roofline: memory
-    term), which is the point — it reads 12× fewer bytes than a dense scan.
-  * Grid = (Q, N / BLOCK_N); the query axis is 'parallel', the candidate
-    axis 'arbitrary' (no cross-block state).
+Generation 1 — ``sparse_dot_pallas`` (blocked, multi-query):
+  * A (BLOCK_Q, h) *panel* of dense queries is VMEM-resident per grid step —
+    not a single row.  Each (BLOCK_N, k) candidate tile streams HBM→VMEM
+    **once per query panel** and is scored against all BLOCK_Q queries, so
+    candidate HBM traffic drops by BLOCK_Q× versus the per-query kernel
+    (grid (Q, N/BLOCK_N)) this replaces.
+  * The gather runs as k lane-gathers: for sparse column j, the candidate
+    tile's index column (BLOCK_N,) addresses the query panel's lanes
+    (`jnp.take_along_axis` → tpu.dynamic_gather), FMA'd with the value
+    column.  Arithmetic intensity: 2·BLOCK_Q flops per 8 bytes streamed.
+  * Grid = (Q/BLOCK_Q, N/BLOCK_N); both axes carry no cross-step state.
 
-Lowering note: the per-element gather lowers to Mosaic's dynamic-gather on
-the lane dimension.  If a target generation lacks it, the fallback is the
-one-hot-matmul formulation (MXU) — see ref.py discussion in tests.
+Generation 2 — ``fused_retrieve_pallas`` (score + select, streaming top-n):
+  * Same blocked scoring, but the (Q, N) score matrix NEVER reaches HBM.
+    The per-query-panel running best-(score, id) buffers — shape
+    (BLOCK_Q, n) — live in the revisited output block (VMEM-resident across
+    the whole candidate axis, index map ignores the candidate grid index)
+    and are merged with each tile's (BLOCK_Q, BLOCK_N) scores by an n-step
+    select-max-and-mask sweep over the n + BLOCK_N concatenated candidates.
+    Only (Q, n) values + ids are ever written back.
+  * Per-candidate reciprocal norms stream alongside the values
+    ((BLOCK_N, 1) tiles) and fold the cosine denominator into the epilogue;
+    the per-query 1/‖q‖ factor is applied outside (it cannot reorder a
+    query row's top-n).
+  * A whole-tile skip: if no score in the tile beats any query's current
+    n-th best, the merge sweep is predicated off (`pl.when`) — the common
+    case once the buffers warm up on impact-ordered or clustered data.
+  * Tie semantics match `jax.lax.top_k` (lowest candidate id wins): tiles
+    arrive in ascending-id order, the running buffer precedes the tile in
+    the concatenated sweep, and the sweep selects the *first* position
+    attaining the max.
+  * Padded candidate rows (N % BLOCK_N) are masked to -inf inside the
+    kernel via the static true row count, so they can never surface even
+    when all real scores are negative.
+
+VMEM budget per grid step (f32):
+    4·BLOCK_Q·h            query panel        (8 × 4096  → 128 KiB)
+  + 8·BLOCK_N·k            candidate tile     (256 × 32  →  64 KiB)
+  + 4·BLOCK_N              reciprocal norms   (           →   1 KiB)
+  + 8·BLOCK_Q·n            output best-(v,id) (8 × 64    →   4 KiB)
+  + 8·BLOCK_Q·(n+BLOCK_N)  merge sweep temp   (8 × 320   →  20 KiB)
+  ≈ 0.25 MiB at defaults — far under the ~16 MiB/core VMEM ceiling; h up
+  to ~128k or BLOCK_Q up to ~256 stay in budget.
+
+Lowering note: the per-column gather lowers to Mosaic's dynamic-gather on
+the lane dimension.  The select-max-and-mask sweep uses only max / min /
+where / broadcasted_iota — no in-kernel sort or top_k primitive needed.
 """
 from __future__ import annotations
 
@@ -27,18 +59,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_N = 256  # candidate rows per tile (8-sublane multiple)
+BLOCK_Q = 8    # query rows per VMEM-resident panel
+
+_NEG_INF = float("-inf")
 
 
-def _kernel(vals_ref, idx_ref, q_ref, out_ref):
-    vals = vals_ref[...]                       # (BLOCK_N, k)
-    idx = idx_ref[...]                         # (BLOCK_N, k) int32
-    q = q_ref[...]                             # (1, h)
-    qb = jnp.broadcast_to(q, (vals.shape[0], q.shape[1]))
-    gathered = jnp.take_along_axis(qb, idx, axis=1)       # (BLOCK_N, k)
-    out_ref[...] = jnp.sum(gathered * vals, axis=1, keepdims=True).T  # (1, BLOCK_N)
+def _score_tile(vals, idx, q_panel):
+    """(BLOCK_Q, BLOCK_N) scores: k lane-gathers from the query panel.
+
+    vals/idx: (BLOCK_N, k); q_panel: (BLOCK_Q, h).
+    """
+    bn, k = vals.shape
+    bq = q_panel.shape[0]
+
+    def body(j, acc):
+        col = jax.lax.dynamic_slice_in_dim(idx, j, 1, axis=1)      # (BLOCK_N, 1)
+        vcol = jax.lax.dynamic_slice_in_dim(vals, j, 1, axis=1)    # (BLOCK_N, 1)
+        gathered = jnp.take_along_axis(
+            q_panel, jnp.broadcast_to(col.T, (bq, bn)), axis=1
+        )                                                          # (BLOCK_Q, BLOCK_N)
+        return acc + gathered * vcol.T
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((bq, bn), jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def _dot_kernel(vals_ref, idx_ref, q_ref, out_ref):
+    out_ref[...] = _score_tile(vals_ref[...], idx_ref[...], q_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_n", "block_q")
+)
 def sparse_dot_pallas(
     values: jax.Array,
     indices: jax.Array,
@@ -46,23 +97,124 @@ def sparse_dot_pallas(
     *,
     interpret: bool = False,
     block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
 ) -> jax.Array:
     """values (N, k) f32, indices (N, k) i32, q (Q, h) f32 -> (Q, N) f32.
 
-    N must be a multiple of block_n (ops.py pads).
+    N must be a multiple of block_n and Q of block_q (ops.py pads).
     """
     n, k = values.shape
     nq, h = q.shape
-    grid = (nq, n // block_n)
+    grid = (nq // block_q, n // block_n)
     return pl.pallas_call(
-        _kernel,
+        _dot_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
             pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((1, h), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, h), lambda qi, i: (qi, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_n), lambda qi, i: (qi, i)),
+        out_specs=pl.BlockSpec((block_q, block_n), lambda qi, i: (qi, i)),
         out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
         interpret=interpret,
-    )(values, indices, q)
+    )(values, indices, q.astype(jnp.float32))
+
+
+def _merge_top_n(best_v, best_i, tile_v, tile_i, out_v_ref, out_i_ref, n):
+    """n-step select-max-and-mask over [best | tile] along lanes.
+
+    Writes the refreshed, score-descending (ties: id-ascending) top-n into
+    the output refs.  Equivalent to lax.top_k over the n+BLOCK_N candidates.
+    """
+    cand_v = jnp.concatenate([best_v, tile_v], axis=1)
+    cand_i = jnp.concatenate([best_i, tile_i], axis=1)
+    bq, width = cand_v.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, width), 1)
+
+    def step(j, cv):
+        m = jnp.max(cv, axis=1, keepdims=True)                     # (BQ, 1)
+        pos = jnp.min(
+            jnp.where(cv == m, col, width), axis=1, keepdims=True
+        )                                                          # first argmax
+        sel_i = jnp.sum(
+            jnp.where(col == pos, cand_i, 0), axis=1, keepdims=True
+        )
+        out_v_ref[:, pl.ds(j, 1)] = m
+        out_i_ref[:, pl.ds(j, 1)] = sel_i
+        return jnp.where(col == pos, _NEG_INF, cv)
+
+    jax.lax.fori_loop(0, n, step, cand_v)
+
+
+def _make_retrieve_kernel(n: int, n_valid: int, block_n: int):
+    def kernel(vals_ref, idx_ref, inv_ref, q_ref, out_v_ref, out_i_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            out_v_ref[...] = jnp.full(out_v_ref.shape, _NEG_INF, jnp.float32)
+            out_i_ref[...] = jnp.zeros(out_i_ref.shape, jnp.int32)
+
+        scores = _score_tile(vals_ref[...], idx_ref[...], q_ref[...])
+        scores = scores * inv_ref[...].T                           # fold 1/‖c‖
+        bq, bn = scores.shape
+        ids = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+        scores = jnp.where(ids < n_valid, scores, _NEG_INF)        # mask padding
+
+        cur_min = out_v_ref[:, pl.ds(n - 1, 1)]                    # n-th best
+
+        @pl.when(jnp.any(scores > cur_min))
+        def _merge():
+            _merge_top_n(
+                out_v_ref[...], out_i_ref[...], scores, ids,
+                out_v_ref, out_i_ref, n,
+            )
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "n_valid", "interpret", "block_n", "block_q")
+)
+def fused_retrieve_pallas(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused score+select: (Q, n) best (norm-folded scores, candidate ids).
+
+    values (N, k) f32, indices (N, k) i32, inv_norms (N, 1) f32 reciprocal
+    candidate norms, q (Q, h) f32.  N % block_n == 0, Q % block_q == 0
+    (ops.py pads); ``n_valid`` is the true candidate count before padding.
+    The (Q, N) score matrix is never materialized.
+    """
+    N, k = values.shape
+    nq, h = q.shape
+    grid = (nq // block_q, N // block_n)  # candidate axis innermost
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_kernel(n, n_valid, block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, h), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, indices, inv_norms, q.astype(jnp.float32))
+    return out_v, out_i

@@ -1,8 +1,9 @@
-"""Public jit'd wrapper for the sparse_dot kernel.
+"""Public jit'd wrappers for the sparse_dot kernel family.
 
-Pads N up to the tile size, dispatches to the Pallas kernel (interpret=True
-on CPU so the kernel body itself is what runs in tests), and exposes the
-same contract as ref.sparse_dot_ref.
+Pads N (and Q) up to tile sizes, dispatches to the Pallas kernels
+(interpret=True on CPU so the kernel bodies themselves are what run in
+tests), and exposes the same contracts as ref.sparse_dot_ref /
+ref.retrieve_ref.
 """
 from __future__ import annotations
 
@@ -11,16 +12,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sparse_dot.kernel import BLOCK_N, sparse_dot_pallas
+from repro.kernels.sparse_dot.kernel import (
+    BLOCK_N,
+    BLOCK_Q,
+    fused_retrieve_pallas,
+    sparse_dot_pallas,
+)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_n",))
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q"))
 def sparse_dot(
-    values: jax.Array, indices: jax.Array, q: jax.Array, *, block_n: int = BLOCK_N
+    values: jax.Array,
+    indices: jax.Array,
+    q: jax.Array,
+    *,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
 ) -> jax.Array:
     """scores (Q, N): fixed-k sparse candidates scored against dense queries.
 
@@ -30,12 +41,67 @@ def sparse_dot(
     if squeeze:
         q = q[None]
     n, k = values.shape
+    nq = q.shape[0]
     pad = (-n) % block_n
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
         indices = jnp.pad(indices, ((0, pad), (0, 0)))
+    qpad = (-nq) % block_q
+    if qpad:
+        q = jnp.pad(q, ((0, qpad), (0, 0)))
     out = sparse_dot_pallas(
-        values, indices, q, interpret=not _on_tpu(), block_n=block_n
+        values, indices, q,
+        interpret=not _on_tpu(), block_n=block_n, block_q=block_q,
     )
-    out = out[:, :n]
+    out = out[:nq, :n]
     return out[0] if squeeze else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused score+select -> ((Q, n) norm-folded scores, (Q, n) ids).
+
+    values (N, k) f32, indices (N, k) i32, inv_norms (N,) f32 reciprocal
+    candidate norms, q (Q, h) or (h,) f32.  n must not exceed N.  The
+    (Q, N) score matrix is never materialized — only (Q, n) reaches HBM.
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    n_valid, k = values.shape
+    if n > n_valid:
+        raise ValueError(f"top-n {n} exceeds candidate count {n_valid}")
+    nq = q.shape[0]
+    pad = (-n_valid) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+    qpad = (-nq) % block_q
+    if qpad:
+        q = jnp.pad(q, ((0, qpad), (0, 0)))
+    out_v, out_i = fused_retrieve_pallas(
+        values,
+        indices,
+        inv_norms.astype(jnp.float32).reshape(-1, 1),
+        q,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    out_v, out_i = out_v[:nq], out_i[:nq]
+    return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)

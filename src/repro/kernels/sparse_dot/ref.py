@@ -1,5 +1,21 @@
-"""Pure-jnp oracle for the scatter-query SpMV."""
+"""Pure-jnp oracles for the scatter-query SpMV family.
+
+``sparse_dot_ref``  — materializes the full (Q, N) score matrix (oracle for
+                      the blocked scoring kernel).
+``retrieve_ref``    — chunked streaming score+select: scans (block_n, k)
+                      candidate blocks and carries per-query running top-n
+                      (score, id) buffers, merging each block with one
+                      ``lax.top_k`` over n + block_n candidates.  This is
+                      the CPU serving path AND the oracle for the fused
+                      Pallas kernel: same traffic shape (no (Q, N)
+                      transient beyond one block) and same tie semantics
+                      (running buffer precedes the block in the merge, so
+                      equal scores resolve to the lowest candidate id,
+                      exactly like a global ``lax.top_k``).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -13,3 +29,71 @@ def sparse_dot_ref(values: jax.Array, indices: jax.Array, q: jax.Array) -> jax.A
     """
     gathered = q[:, indices]                      # (Q, N, k)
     return jnp.sum(gathered * values[None].astype(q.dtype), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_n", "q_chunk"))
+def retrieve_ref(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked streaming top-n -> ((Q, n) norm-folded scores, (Q, n) ids).
+
+    values (N, k), indices (N, k) i32, inv_norms (N,) reciprocal candidate
+    norms, q (Q, h).  Scores are dot · inv_norms; the per-query 1/‖q‖
+    factor is the caller's (it cannot reorder a query's top-n).  The gather
+    transient is (min(Q, q_chunk), block_n, k) — queries beyond q_chunk are
+    processed in chunks, so memory stays bounded for big batches.
+    """
+    N, k = values.shape
+    nq = q.shape[0]
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+        qp = jnp.pad(q, ((0, qpad), (0, 0))) if qpad else q
+        chunks = qp.reshape(-1, q_chunk, q.shape[-1])
+        bv, bi = jax.lax.map(
+            lambda qb: retrieve_ref(
+                values, indices, inv_norms, qb,
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            chunks,
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    block_n = min(block_n, max(N, 1))
+    pad = (-N) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+    nb = (N + pad) // block_n
+    vals_b = values.reshape(nb, block_n, k)
+    idx_b = indices.reshape(nb, block_n, k)
+    inv_b = inv_norms.reshape(nb, block_n)
+    ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+
+    init = (
+        jnp.full((nq, n), -jnp.inf, jnp.float32),
+        jnp.zeros((nq, n), jnp.int32),
+    )
+
+    def step(carry, blk):
+        best_v, best_i = carry
+        bv, bi, binv, bids = blk
+        gathered = q[:, bi]                                  # (Q, block_n, k)
+        s = jnp.sum(gathered * bv[None].astype(q.dtype), axis=-1)
+        s = (s * binv[None]).astype(jnp.float32)             # (Q, block_n)
+        s = jnp.where(bids[None] < N, s, -jnp.inf)           # mask padding
+        cand_v = jnp.concatenate([best_v, s], axis=1)
+        cand_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
+        )
+        v, p = jax.lax.top_k(cand_v, n)
+        return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
+
+    (best_v, best_i), _ = jax.lax.scan(step, init, (vals_b, idx_b, inv_b, ids_b))
+    return best_v, best_i

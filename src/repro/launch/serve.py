@@ -2,10 +2,12 @@
 runnable service loop.
 
 Builds a compressed index (CompresSAE codes + norms) over a catalog, then
-serves batched retrieval requests in either mode:
+serves batched retrieval requests through the fused score+select path
+(``repro.core.retrieve``) in either mode:
   * sparse         — direct sparse-space cosine (fast path)
   * reconstructed  — kernel-trick scoring (high-fidelity path)
-and reports recall@n against exact dense retrieval plus latency stats.
+and reports recall@n against exact dense retrieval plus latency stats,
+including which backend path (fused Pallas kernel vs chunked jnp) served.
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --requests 20
 """
@@ -24,12 +26,12 @@ from repro.core import (
     build_index,
     encode,
     init_train_state,
+    retrieve,
     score_dense,
-    score_reconstructed,
-    score_sparse,
     top_n,
     train_step,
 )
+from repro.core.retrieval import kernel_path
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
 
@@ -45,7 +47,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--topn", type=int, default=20)
     ap.add_argument("--mode", choices=["sparse", "reconstructed"], default="sparse")
+    ap.add_argument("--use-kernel", choices=["auto", "1", "0"], default="auto",
+                    help="route scoring+selection through the fused Pallas "
+                         "kernel (1), the chunked jnp path (0), or pick by "
+                         "backend (auto)")
     args = ap.parse_args(argv)
+
+    use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
+    path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
 
     cfg = SAEConfig(d=args.d, h=args.h, k=args.k)
     catalog = clustered_embeddings(jax.random.PRNGKey(0), args.catalog, d=cfg.d)
@@ -69,17 +78,13 @@ def main(argv=None):
           f"{sparse_bytes/2**20:.1f} MiB ({dense_bytes/sparse_bytes:.1f}x)")
 
     @jax.jit
-    def serve_sparse(q):
-        return top_n(score_sparse(index, encode(state.params, q, cfg.k)), args.topn)
-
-    @jax.jit
-    def serve_recon(q):
-        return top_n(
-            score_reconstructed(index, encode(state.params, q, cfg.k), state.params),
-            args.topn,
+    def serve(q):
+        q_codes = encode(state.params, q, cfg.k)
+        return retrieve(
+            index, q_codes, args.topn,
+            mode=args.mode, params=state.params, use_kernel=use_kernel,
         )
 
-    serve = serve_sparse if args.mode == "sparse" else serve_recon
     lat, recalls = [], []
     for r in range(args.requests):
         q = clustered_embeddings(jax.random.PRNGKey(1000 + r), args.batch, d=cfg.d)
@@ -94,7 +99,7 @@ def main(argv=None):
         )
         recalls.append(hits / true_ids.size)
     lat_ms = np.array(lat[1:]) * 1e3  # drop compile step
-    print(f"[serve] mode={args.mode} recall@{args.topn} "
+    print(f"[serve] mode={args.mode} path={path} recall@{args.topn} "
           f"{np.mean(recalls):.3f} | latency p50 {np.percentile(lat_ms, 50):.1f} ms "
           f"p99 {np.percentile(lat_ms, 99):.1f} ms over {args.requests} requests")
     return 0

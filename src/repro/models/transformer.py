@@ -284,6 +284,25 @@ def _group_forward(
     return x, aux, new_caches
 
 
+# jax.lax.optimization_barrier carries no differentiation rule on this jax
+# version; give it one (barrier the cotangent too — the backward while-loop
+# is exactly where the LICM hoist it blocks would happen).
+@jax.custom_vjp
+def _residual_barrier(x: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(x)
+
+
+def _residual_barrier_fwd(x):
+    return _residual_barrier(x), None
+
+
+def _residual_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_residual_barrier.defvjp(_residual_barrier_fwd, _residual_barrier_bwd)
+
+
 # ---------------------------------------------------------------- forward
 def _unembed_weight(params: Params, cfg: TransformerConfig) -> jax.Array:
     if cfg.tie_embeddings:
@@ -310,7 +329,7 @@ def forward_hidden(
         # bf16->f32 upcast of the carry out of the backward while-loop —
         # without it the (n_groups, B, S, d) residual stack is materialized
         # TWICE (bf16 + converted f32), ~2.5x activation memory
-        x = jax.lax.optimization_barrier(x)
+        x = _residual_barrier(x)
         y, aux, _ = _group_forward(x, gp, cfg, positions)
         return y, aux
 

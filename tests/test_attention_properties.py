@@ -1,4 +1,7 @@
 """Property tests: chunked flash attention vs the naive softmax oracle."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis
 import hypothesis.strategies as st
 import numpy as np

@@ -8,7 +8,15 @@ import pathlib
 import subprocess
 import sys
 
+import jax
 import pytest
+
+if not hasattr(jax, "shard_map"):
+    # the impl (and the sharded fns it exercises: moe_ffn_sharded, nequip
+    # sharded, encode_sharded) target jax>=0.6 APIs — jax.shard_map,
+    # jax.set_mesh, jax.sharding.AxisType, get_abstract_mesh — absent from
+    # older jax; see ROADMAP open items
+    pytest.skip("requires jax.shard_map (jax >= 0.6)", allow_module_level=True)
 
 
 @pytest.mark.timeout(600)

@@ -13,8 +13,8 @@ from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.fused_encode.ops import fused_encode
 from repro.kernels.fused_encode.ref import fused_encode_ref
-from repro.kernels.sparse_dot.ops import sparse_dot
-from repro.kernels.sparse_dot.ref import sparse_dot_ref
+from repro.kernels.sparse_dot.ops import fused_retrieve, sparse_dot
+from repro.kernels.sparse_dot.ref import retrieve_ref, sparse_dot_ref
 from repro.kernels.topk_mask.ops import topk_mask
 from repro.kernels.topk_mask.ref import topk_mask_ref
 
@@ -54,6 +54,77 @@ def test_sparse_dot_duplicate_indices_sum():
     idx = jnp.array([[5, 5, 7]], dtype=jnp.int32)
     q = jnp.zeros((1, 16)).at[0, 5].set(10.0).at[0, 7].set(1.0)
     np.testing.assert_allclose(sparse_dot(vals, idx, q), [[33.0]], rtol=1e-6)
+
+
+def test_sparse_dot_ragged_query_panel():
+    # Q not a multiple of BLOCK_Q exercises the query-padding path of the
+    # blocked multi-query kernel.
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    vals = jax.random.normal(k1, (300, 8), jnp.float32)
+    idx = jax.random.randint(k2, (300, 8), 0, 128, dtype=jnp.int32)
+    q = jax.random.normal(k3, (13, 128), jnp.float32)
+    np.testing.assert_allclose(
+        sparse_dot(vals, idx, q), sparse_dot_ref(vals, idx, q), rtol=1e-5, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------- fused_retrieve
+def _retrieve_case(n, q, k, h, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    vals = jax.random.normal(k1, (n, k), jnp.float32)
+    idx = jax.random.randint(k2, (n, k), 0, h, dtype=jnp.int32)
+    qq = jax.random.normal(k3, (q, h), jnp.float32)
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(vals, axis=-1), 1e-8)
+    return vals, idx, qq, inv
+
+
+# ragged N (pads candidate tiles) and ragged Q (pads the query panel)
+@pytest.mark.parametrize("n,q,topn", [(64, 9, 64), (256, 1, 5), (1000, 3, 10), (4097, 5, 20)])
+def test_fused_retrieve_matches_bruteforce(n, q, topn):
+    vals, idx, qq, inv = _retrieve_case(n, q, 8, 256, seed=n + q)
+    want_v, want_i = jax.lax.top_k(sparse_dot_ref(vals, idx, qq) * inv[None], topn)
+    got_v, got_i = fused_retrieve(vals, idx, inv, qq, n=topn)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(got_i, want_i)
+    ref_v, ref_i = retrieve_ref(vals, idx, inv, qq, n=topn, block_n=300)
+    np.testing.assert_allclose(ref_v, want_v, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(ref_i, want_i)
+
+
+def test_fused_retrieve_tied_scores_match_lax_topk():
+    # Duplicated candidate rows give exactly-tied scores across tile
+    # boundaries; both the streaming kernel epilogue and the chunked jnp
+    # reference must resolve them like lax.top_k (lowest candidate id wins).
+    base_v, base_i, qq, _ = _retrieve_case(40, 3, 4, 64, seed=7)
+    vals = jnp.tile(base_v, (8, 1))
+    idx = jnp.tile(base_i, (8, 1))
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(vals, axis=-1), 1e-8)
+    want_v, want_i = jax.lax.top_k(sparse_dot_ref(vals, idx, qq) * inv[None], 17)
+    got_v, got_i = fused_retrieve(vals, idx, inv, qq, n=17, block_n=64, block_q=2)
+    np.testing.assert_array_equal(got_i, want_i)
+    ref_v, ref_i = retrieve_ref(vals, idx, inv, qq, n=17, block_n=96)
+    np.testing.assert_array_equal(ref_i, want_i)
+
+
+def test_fused_retrieve_single_query_and_n_equals_N():
+    vals, idx, qq, inv = _retrieve_case(96, 1, 8, 128, seed=11)
+    v, i = fused_retrieve(vals, idx, inv, qq[0], n=96)
+    assert v.shape == (96,) and i.shape == (96,)
+    # exhaustive n == N: every candidate id must surface exactly once
+    assert sorted(np.asarray(i).tolist()) == list(range(96))
+    with pytest.raises(ValueError):
+        fused_retrieve(vals, idx, inv, qq, n=97)
+
+
+def test_fused_retrieve_all_negative_scores_exclude_padding():
+    # all-negative scores: padded rows (masked to -inf, not 0) must never
+    # win even though 0 would outrank every real candidate
+    vals = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (130, 4)))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (130, 4), 0, 64, dtype=jnp.int32)
+    q = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (2, 64)))
+    inv = jnp.ones((130,), jnp.float32)
+    _, ids = fused_retrieve(vals, idx, inv, q, n=20)
+    assert (np.asarray(ids) < 130).all()
 
 
 # ------------------------------------------------------------------ topk_mask

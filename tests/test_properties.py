@@ -1,4 +1,7 @@
 """Hypothesis property-based tests on the system's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis
 import hypothesis.strategies as st
 import jax

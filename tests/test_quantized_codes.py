@@ -1,4 +1,7 @@
 """Beyond-paper compound compression: quantized sparse codes."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis.strategies as st
 import numpy as np
 import jax

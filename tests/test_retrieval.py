@@ -11,6 +11,7 @@ from repro.core import (
     encode,
     init_params,
     init_train_state,
+    retrieve,
     score_dense,
     score_reconstructed,
     score_sparse,
@@ -100,6 +101,66 @@ def test_retrieval_recall_beats_random(trained):
     assert r_recon > 10 * chance, f"recon recall {r_recon} ~ chance"
     # Paper Fig 3 center: reconstructed-space >= sparse-space fidelity.
     assert r_recon >= r_sparse - 0.05
+
+
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_retrieve_matches_score_then_select(trained, mode, use_kernel):
+    """retrieve() (fused score+select, both backends) must return the same
+    top-n as materializing the full score matrix and running lax.top_k —
+    values to f32 rounding, ids exactly (inputs are untied)."""
+    params, corpus = trained
+    codes_db = encode(params, corpus[:512], CFG.k)
+    codes_q = encode(params, corpus[512:530], CFG.k)
+    index = build_index(codes_db, params)
+    full = (score_sparse(index, codes_q) if mode == "sparse"
+            else score_reconstructed(index, codes_q, params))
+    want_v, want_i = top_n(full, 9)
+    got_v, got_i = retrieve(index, codes_q, 9, mode=mode, params=params,
+                            use_kernel=use_kernel)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(got_i, want_i)
+
+
+def test_retrieve_single_query(trained):
+    params, corpus = trained
+    codes_db = encode(params, corpus[:256], CFG.k)
+    index = build_index(codes_db)
+    q = encode(params, corpus[300:301], CFG.k)
+    q1 = type(q)(values=q.values[0], indices=q.indices[0], dim=q.dim)
+    v, i = retrieve(index, q1, 5, use_kernel=False)
+    assert v.shape == (5,) and i.shape == (5,)
+    v2, i2 = retrieve(index, q1, 5, use_kernel=True)
+    np.testing.assert_array_equal(i, i2)
+    want_v, want_i = top_n(score_sparse(index, q1), 5)
+    np.testing.assert_array_equal(i, want_i)
+
+
+def test_retrieve_requires_params_for_recon(trained):
+    params, corpus = trained
+    index = build_index(encode(params, corpus[:64], CFG.k))  # no params
+    q = encode(params, corpus[64:66], CFG.k)
+    with pytest.raises(ValueError):
+        retrieve(index, q, 3, mode="reconstructed", params=params)
+    with pytest.raises(ValueError):
+        retrieve(index, q, 3, mode="reconstructed")  # params missing
+    with pytest.raises(ValueError):
+        retrieve(index, q, 3, mode="bogus")
+
+
+def test_retrieve_jit_compatible(trained):
+    # the whole serve step (encode + fused retrieve) under one jit, the way
+    # launch/serve.py uses it
+    params, corpus = trained
+    codes_db = encode(params, corpus[:256], CFG.k)
+    index = build_index(codes_db, params)
+    fn = jax.jit(
+        lambda x: retrieve(index, encode(params, x, CFG.k), 7, use_kernel=False)
+    )
+    v, i = fn(corpus[300:310])
+    q = encode(params, corpus[300:310], CFG.k)
+    want_v, want_i = top_n(score_sparse(index, q), 7)
+    np.testing.assert_array_equal(i, want_i)
 
 
 def test_top_n_shapes(trained):
