@@ -11,6 +11,14 @@ Rows:
   retrieval_sparse              — retrieve() fused path (chunked streaming
                                   top-n on CPU, fused Pallas kernel on TPU)
   retrieval_reconstructed       — retrieve() kernel-trick mode
+  retrieval_sparse_sharded      — retrieve(..., mesh=...): candidate-sharded
+                                  distributed path over a min(4, n_devices)-way
+                                  mesh (1-way degenerates to a single shard
+                                  when the process has one device)
+
+Every BENCH_retrieval.json record carries the backend path
+("fused-kernel" | "jnp-chunked") and the shard count, so the perf
+trajectory stays comparable across PRs and backends.
 
 Also verifies the kernel-trick identity numerically at benchmark scale and
 that retrieve() returns the same ids as the full-score path.
@@ -29,6 +37,8 @@ from repro.core import (
     SAEConfig, build_index, decode, encode, init_train_state, retrieve,
     score_dense, score_reconstructed, score_sparse, top_n, train_step,
 )
+from repro.core.retrieval import kernel_path
+from repro.launch.mesh import make_candidate_mesh
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
 
@@ -80,19 +90,29 @@ def main(smoke: bool = False):
         lambda q: retrieve(index, encode(params, q, K), topn,
                            mode="reconstructed", params=params)
     )
+    # candidate-sharded distributed path (ISSUE 2): min(4, n_devices)-way
+    # mesh; under the tier-1 conftest the forced CPU topology gives 4
+    n_shards = min(4, jax.device_count())
+    mesh = make_candidate_mesh(n_shards)
+    sharded_fn = jax.jit(
+        lambda q: retrieve(index, encode(params, q, K), topn, mode="sparse",
+                           mesh=mesh)
+    )
 
     records = []
     reps = 5 if smoke else 20  # shared-box timing noise: more reps at full size
+    path = "fused-kernel" if kernel_path("auto") else "jnp-chunked"
     print("name,us_per_call,derived")
-    for name, fn in [("retrieval_dense", dense_fn),
-                     ("retrieval_sparse_fullscore", fullscore_fn),
-                     ("retrieval_sparse", sparse_fn),
-                     ("retrieval_reconstructed", recon_fn)]:
+    for name, fn, shards in [("retrieval_dense", dense_fn, 1),
+                             ("retrieval_sparse_fullscore", fullscore_fn, 1),
+                             ("retrieval_sparse", sparse_fn, 1),
+                             ("retrieval_reconstructed", recon_fn, 1),
+                             ("retrieval_sparse_sharded", sharded_fn, n_shards)]:
         us = _timeit(fn, queries, reps=reps)
         r = rec(fn(queries)[1])
         print(f"{name},{us:.0f},recall@{topn}={r:.4f}")
         records.append({"name": name, "us_per_call": round(us, 1),
-                        "recall": round(r, 4),
+                        "recall": round(r, 4), "path": path, "shards": shards,
                         "n": n, "q": q_count, "topn": topn, "smoke": smoke})
 
     # fused path must agree with the full-score path (same ids away from ties)
@@ -101,6 +121,13 @@ def main(smoke: bool = False):
     agree = float(jnp.mean((ids_full == ids_fused).astype(jnp.float32)))
     print(f"fused_vs_fullscore_id_agreement,0,{agree:.4f}")
     assert agree > 0.999, f"fused retrieve disagrees with full-score path: {agree}"
+
+    # sharded path must be BIT-identical to the single-shard serving path
+    v_1, i_1 = sparse_fn(queries)
+    v_s, i_s = sharded_fn(queries)
+    assert (np.asarray(i_s) == np.asarray(i_1)).all(), "sharded ids differ"
+    assert (np.asarray(v_s) == np.asarray(v_1)).all(), "sharded scores differ"
+    print(f"sharded_vs_single_bit_identical,0,shards={n_shards}")
 
     # kernel-trick exactness at benchmark scale
     q_codes = encode(params, queries, K)

@@ -1,0 +1,172 @@
+"""jax-version shim for the distributed surface (ISSUE 2).
+
+The distributed code in this repo was written against the jax >= 0.6 API
+surface (``jax.shard_map``, ``jax.set_mesh``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``, ``jax.P``); the container pins jax
+0.4.37 where the same capabilities live under different names
+(``jax.experimental.shard_map.shard_map`` with a mandatory ``mesh``
+argument and ``check_rep``, the ``Mesh`` context manager, no axis types).
+Everything distributed routes through this module so one import works on
+both:
+
+    from repro import compat
+    from repro.compat import P
+
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    with compat.set_mesh(mesh):
+        out = compat.shard_map(f, in_specs=..., out_specs=...)(x)
+
+Semantics on both jax lines:
+  * ``set_mesh(mesh)`` — context manager that makes ``mesh`` the ambient
+    mesh: ``shard_map`` calls without an explicit ``mesh=`` pick it up, and
+    bare-``PartitionSpec`` ``with_sharding_constraint`` resolves against it
+    (on 0.4.x this is the classic ``with mesh:`` context).
+  * ``shard_map(f, *, mesh=None, in_specs, out_specs, check=True)`` —
+    ``check`` maps to ``check_vma`` on new jax and ``check_rep`` on 0.4.x
+    (both are the "outputs really are replicated as claimed" validator,
+    which cannot see through ``all_gather``-based replication — pass
+    ``check=False`` exactly where the old code passed ``check_vma=False``).
+  * mesh resolution is deferred to *call* time, so a shard-mapped function
+    can be built once and traced under whichever mesh is ambient.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = [
+    "P", "HAS_NATIVE_SHARD_MAP", "make_mesh", "set_mesh", "current_mesh",
+    "shard_map", "axis_size",
+]
+
+# jax >= 0.6 exposes the new spellings at top level
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+# the replication/varying-axes validator kwarg was renamed check_rep ->
+# check_vma across jax lines; resolve whichever the native shard_map takes
+_NATIVE_CHECK_KW = None
+if HAS_NATIVE_SHARD_MAP:
+    import inspect
+
+    _params = inspect.signature(jax.shard_map).parameters
+    for _kw in ("check_vma", "check_rep"):
+        if _kw in _params:
+            _NATIVE_CHECK_KW = _kw
+            break
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "compat_mesh", default=None
+)
+
+
+def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True) -> Mesh:
+    """``jax.make_mesh`` on both lines; on new jax the axes are created as
+    ``AxisType.Auto`` (the 0.4.x behavior) so GSPMD propagation still runs
+    outside explicit shard_map regions."""
+    if _HAS_AXIS_TYPE and auto_axes:
+        types = (jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` on new jax, the ``Mesh``
+    context manager (plus our own contextvar, for ``shard_map``/
+    ``current_mesh`` resolution) on 0.4.x."""
+    token = _MESH.set(mesh)
+    try:
+        if _HAS_SET_MESH:
+            with jax.set_mesh(mesh):
+                yield mesh
+        else:
+            with mesh:
+                yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The ambient mesh (``set_mesh`` context), else None.
+
+    Replaces ``jax.sharding.get_abstract_mesh()`` call sites: callers only
+    read ``.shape`` / ``.axis_names``, which agree between the physical
+    mesh and its abstract view.
+    """
+    mesh = _MESH.get()
+    if mesh is not None:
+        return mesh
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and getattr(am, "shape", None):
+            return am
+    # 0.4.x: a bare `with mesh:` entered outside set_mesh()
+    try:
+        from jax._src import mesh as mesh_lib
+
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if not env_mesh.empty:
+            return env_mesh
+    except Exception:
+        pass
+    return None
+
+
+def _require_mesh(mesh: Optional[Mesh]) -> Mesh:
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        raise ValueError(
+            "no mesh: pass mesh= explicitly or enter repro.compat.set_mesh(...)"
+        )
+    return mesh
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Optional[Mesh] = None,
+    in_specs: Any,
+    out_specs: Any,
+    check: bool = True,
+) -> Callable:
+    """Version-portable ``shard_map``.
+
+    Mesh resolution happens when the returned callable is invoked, so the
+    ambient ``set_mesh`` context at *trace* time wins — matching the new-jax
+    behavior of ``jax.shard_map`` without an explicit mesh.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+
+        def call_new(*args):
+            kw = dict(in_specs=in_specs, out_specs=out_specs)
+            if _NATIVE_CHECK_KW is not None:
+                kw[_NATIVE_CHECK_KW] = check
+            if mesh is not None:
+                kw["mesh"] = mesh
+            return jax.shard_map(f, **kw)(*args)
+
+        return call_new
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def call_old(*args):
+        m = _require_mesh(mesh)
+        return _shard_map(
+            f, mesh=m, in_specs=in_specs, out_specs=out_specs, check_rep=check
+        )(*args)
+
+    return call_old
+
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` where it exists; the ``psum(1, name)`` identity
+    (constant-folded to the axis size) on 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)

@@ -71,7 +71,7 @@ def build_inverted_index(codes: SparseCodes, cap: int = 2048) -> InvertedIndex:
 
 
 def search_inverted(
-    index: InvertedIndex, q: SparseCodes, n: int
+    index: InvertedIndex, q: SparseCodes, n: int, *, block: int = 2048
 ) -> tuple[jax.Array, jax.Array]:
     """Approximate top-n: score only the union of the query's posting lists.
 
@@ -79,7 +79,80 @@ def search_inverted(
     of shape (Q?, n); padded/duplicate candidates are masked/deduped by
     keeping each id's score once (max over duplicates is identical —
     scores are id-determined).
+
+    Selection runs through the same streaming top-n epilogue as the fused
+    serving path (retrieve_ref / the Pallas kernel): the k·cap posting
+    union is scanned in ``block``-sized slices, each slice gathered,
+    scored and merged into a running (n,) best buffer with one
+    ``lax.top_k`` over n + block candidates — the full union's scores
+    (and its (block, k) gather transient) never exist at once.  Exactly
+    equivalent to the one-shot ``lax.top_k`` over all k·cap scores
+    (``_search_inverted_fullsort``, the parity oracle in
+    tests/test_inverted_index.py): per-candidate scores are identical,
+    the running buffer precedes each slice in the merge so ties resolve
+    to the earliest union position either way, and duplicates are
+    suppressed by slice-local first-occurrence dedup plus masking against
+    ids already in the buffer (a duplicate whose earlier occurrence was
+    cut can never outscore the buffer floor — duplicate scores are equal
+    and the floor is monotone).
     """
+    squeeze = q.values.ndim == 1
+    q_vals = q.values[None] if squeeze else q.values       # (Q, k)
+    q_idx = q.indices[None] if squeeze else q.indices
+
+    def one(qv, qi):
+        cand = index.postings[qi].reshape(-1)              # (k·cap,)
+        q_dense = jnp.zeros((index.codes.dim,), qv.dtype).at[qi].add(qv)
+        q_norm = jnp.linalg.norm(qv)
+        u = cand.shape[0]
+        blk = min(block, u)
+        pad = (-u) % blk
+        if pad:
+            cand = jnp.pad(cand, (0, pad), constant_values=-1)
+        cand_b = cand.reshape(-1, blk)
+
+        init = (
+            jnp.full((n,), -jnp.inf, jnp.float32),
+            jnp.full((n,), -1, jnp.int32),
+        )
+
+        def step(carry, cb):
+            best_v, best_i = carry
+            safe = jnp.maximum(cb, 0)
+            c_vals = index.codes.values[safe]              # (blk, k)
+            c_idx = index.codes.indices[safe]
+            dots = jnp.sum(q_dense[c_idx] * c_vals, axis=-1)
+            scores = (dots / jnp.maximum(q_norm * index.norms[safe], 1e-8)
+                      ).astype(jnp.float32)
+            valid = cb >= 0
+            # slice-local dedup: keep the first occurrence of each id
+            order = jnp.argsort(cb)
+            sorted_cb = cb[order]
+            first = jnp.concatenate(
+                [jnp.array([True]), sorted_cb[1:] != sorted_cb[:-1]]
+            )
+            keep = jnp.zeros_like(valid).at[order].set(first) & valid
+            # cross-slice dedup: ids already held by the running buffer
+            keep &= ~jnp.any(cb[:, None] == best_i[None, :], axis=-1)
+            scores = jnp.where(keep, scores, -jnp.inf)
+            cand_v = jnp.concatenate([best_v, scores])
+            cand_i = jnp.concatenate([best_i, cb])
+            v, p = jax.lax.top_k(cand_v, n)
+            return (v, cand_i[p]), None
+
+        (best_v, best_i), _ = jax.lax.scan(step, init, cand_b)
+        return best_v, best_i
+
+    vs, ids = jax.vmap(one)(q_vals, q_idx)
+    return (vs[0], ids[0]) if squeeze else (vs, ids)
+
+
+def _search_inverted_fullsort(
+    index: InvertedIndex, q: SparseCodes, n: int
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-streaming selection: one ``lax.top_k`` over all k·cap gathered
+    union scores.  Kept as the parity oracle for ``search_inverted``'s
+    streaming epilogue (tests/test_inverted_index.py)."""
     squeeze = q.values.ndim == 1
     q_vals = q.values[None] if squeeze else q.values       # (Q, k)
     q_idx = q.indices[None] if squeeze else q.indices

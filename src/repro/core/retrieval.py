@@ -179,6 +179,8 @@ def retrieve(
     params: Optional[sae.Params] = None,
     *,
     use_kernel: UseKernel = "auto",
+    mesh=None,
+    shard_axis: str = "cand",
 ) -> tuple[jax.Array, jax.Array]:
     """One-call serving API: top-n (cosine scores, candidate ids).
 
@@ -188,7 +190,21 @@ def retrieve(
     candidate stream, the jnp path carries them through a chunked scan.
     Equivalent (to f32 rounding; identical ids away from ties) to
     ``top_n(score_<mode>(index, q), n)``.
+
+    ``mesh`` routes through candidate-sharded distributed retrieval
+    (``repro.distributed.retrieve.distributed_retrieve``): the index is
+    sharded along ``mesh[shard_axis]``, each shard runs the same fused/ref
+    streaming retrieve over its slice, and per-shard top-n sets merge via
+    ``sharded_top_n`` — bit-identical (scores, ids, ties) to the
+    single-device path.
     """
+    if mesh is not None:
+        from repro.distributed.retrieve import distributed_retrieve
+
+        return distributed_retrieve(
+            index, q, n, mode, params,
+            mesh=mesh, axis_name=shard_axis, use_kernel=use_kernel,
+        )
     if n > index.codes.n:
         raise ValueError(f"top-n {n} exceeds candidate count {index.codes.n}")
     q_dense, q_norm, inv_norms = _query_dense(index, q, mode, params)
@@ -263,9 +279,21 @@ def top_n(scores: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
 def sharded_top_n(scores_local: jax.Array, ids_local: jax.Array, n: int, *, axis_name: str):
     """Distributed exact top-n: local top-n per shard, all-gather the
     n·n_shards candidates, merge.  For use inside shard_map when the
-    candidate database is sharded (serving path)."""
+    candidate database is sharded (serving path).
+
+    ``ids_local`` maps local score positions to global candidate ids:
+    either a 1-D (N_loc,) lookup table, or an array of the same shape as
+    ``scores_local`` (pre-selected (score, id) pairs, e.g. the output of a
+    per-shard streaming retrieve).  Tie semantics match a single global
+    ``lax.top_k``: shards are concatenated in ascending shard order and
+    each local list is score-desc / ties-id-asc, so equal scores resolve
+    to the lowest global id.
+    """
     lv, li = jax.lax.top_k(scores_local, n)
-    gid = ids_local[li]
+    if ids_local.shape == scores_local.shape:
+        gid = jnp.take_along_axis(ids_local, li, axis=-1)
+    else:
+        gid = ids_local[li]
     av = jax.lax.all_gather(lv, axis_name, axis=-1, tiled=True)
     ai = jax.lax.all_gather(gid, axis_name, axis=-1, tiled=True)
     fv, fi = jax.lax.top_k(av, n)

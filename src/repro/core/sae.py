@@ -163,13 +163,16 @@ def encode_sharded(
             idx = idx.reshape(n_loc, k)
         return vals, idx
 
-    vals, idx = jax.shard_map(
+    from repro import compat
+    from repro.compat import P
+
+    vals, idx = compat.shard_map(
         local,
-        in_specs=(jax.P(None, model_axis), jax.P(model_axis), jax.P(bspec, None)),
-        out_specs=(jax.P(bspec, None), jax.P(bspec, None)),
+        in_specs=(P(None, model_axis), P(model_axis), P(bspec, None)),
+        out_specs=(P(bspec, None), P(bspec, None)),
         # outputs ARE replicated over model (post-all_gather global top-k),
         # but the static varying-axes check can't prove it
-        check_vma=False,
+        check=False,
     )(params["w_enc"], params["b_enc"], x)
     return SparseCodes(values=vals, indices=idx, dim=h)
 

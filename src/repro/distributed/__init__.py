@@ -12,8 +12,11 @@ from repro.distributed.sharding import (
     opt_state_pspecs,
 )
 
+from repro.distributed.retrieve import distributed_retrieve
+
 __all__ = [
     "AxisRules", "axis_rules", "current_rules", "shard_hint",
     "lm_param_pspecs", "lm_batch_pspecs", "cache_pspec", "sae_param_pspecs",
     "recsys_param_pspecs", "tree_replicated", "opt_state_pspecs",
+    "distributed_retrieve",
 ]

@@ -1,0 +1,131 @@
+"""Candidate-sharded distributed retrieval (ISSUE 2 tentpole).
+
+Once the catalog exceeds one chip's HBM, the fused retrieve from PR 1 has
+to run over a candidate-sharded mesh: each shard holds only its slice of
+the (k-sparse) codes + norms — the compression is exactly what makes the
+shards cheap — scores it with the PR-1 streaming score+select primitive,
+and the per-shard top-n sets are merged with one small all-gather
+(``core.retrieval.sharded_top_n``).
+
+Equivalence contract (gated by tests/test_distributed_retrieval.py):
+``distributed_retrieve`` is *bit-identical* to single-device
+``core.retrieve()`` — scores AND ids, ties included:
+
+  * per-candidate scores are row-local f32 ops on the same inputs, so
+    sharding the candidate axis cannot reassociate them;
+  * any candidate cut from its shard's local top-n is preceded (in the
+    global score-then-lowest-id order) by n candidates of the same shard,
+    so it can never be in the global top-n — local top-n loses nothing;
+  * the all-gather concatenates shards in ascending shard order and each
+    shard's list is score-desc / ties-id-asc, so the final ``lax.top_k``
+    resolves ties to the lowest global id — exactly the single-device rule.
+
+Ragged catalogs (N not divisible by the shard count) are zero-padded on
+the candidate axis; padding rows are masked to -inf *by global id* inside
+the shard-local epilogue.  ``n`` larger than a shard's slice is handled by
+returning the whole slice and padding the local result to n with -inf.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.compat import P
+from repro.core import sae
+from repro.core.types import SparseCodes
+from repro.kernels.sparse_dot import fused_retrieve, retrieve_ref
+
+CAND_AXIS = "cand"
+
+
+def mesh_shard_count(mesh, axis_name: str = CAND_AXIS) -> int:
+    sizes = dict(mesh.shape)
+    if axis_name not in sizes:
+        raise ValueError(
+            f"mesh has no {axis_name!r} axis (axes: {tuple(sizes)})"
+        )
+    return int(sizes[axis_name])
+
+
+def distributed_retrieve(
+    index,
+    q: SparseCodes,
+    n: int,
+    mode: str = "sparse",
+    params: Optional[sae.Params] = None,
+    *,
+    mesh,
+    axis_name: str = CAND_AXIS,
+    use_kernel=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-n (cosine scores, global candidate ids) over a candidate-sharded
+    mesh.  Same signature/semantics as ``core.retrieve`` plus ``mesh``;
+    normally reached via ``core.retrieve(..., mesh=...)``.
+
+    The index (codes + reciprocal norms) is sharded along the candidate
+    axis of ``mesh[axis_name]``; queries are replicated.  Per shard, the
+    PR-1 fused/ref streaming retrieve produces a local top-n with scores in
+    the *norm-folded* space; the merge is one all-gather of n·n_shards
+    (score, id) pairs per query.
+    """
+    from repro.core.retrieval import (
+        NORM_EPS, _query_dense, kernel_path, sharded_top_n,
+    )
+
+    N = index.codes.n
+    if n > N:
+        raise ValueError(f"top-n {n} exceeds candidate count {N}")
+    n_shards = mesh_shard_count(mesh, axis_name)
+    use_fused = kernel_path("auto" if use_kernel is None else use_kernel)
+
+    q_dense, q_norm, inv_norms = _query_dense(index, q, mode, params)
+    squeeze = q_dense.ndim == 1
+    qd = q_dense[None] if squeeze else q_dense
+
+    values, indices = index.codes.values, index.codes.indices
+    pad = (-N) % n_shards
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+    n_loc_cand = (N + pad) // n_shards
+    # widen the local selection by `pad`: the zero rows padded onto the last
+    # shard score exactly 0 (0-values · anything, times inv_norm 0) and may
+    # occupy up to `pad` local top slots ahead of real negative-score
+    # candidates; selecting n+pad locally and masking them out afterwards
+    # (by global id) keeps every real local top-n candidate
+    n_loc = min(n + pad, n_loc_cand)
+
+    def local(vals_l, idx_l, inv_l, qd_r):
+        if use_fused:
+            lv, li = fused_retrieve(vals_l, idx_l, inv_l, qd_r, n=n_loc)
+        else:
+            lv, li = retrieve_ref(vals_l, idx_l, inv_l, qd_r, n=n_loc)
+        shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        gid = li + shard * n_loc_cand
+        # global-padding rows live at the tail of the last shard: mask by id
+        lv = jnp.where(gid < N, lv, -jnp.inf)
+        if n_loc < n:  # n exceeds this shard's slice: pad the local result
+            lv = jnp.pad(lv, ((0, 0), (0, n - n_loc)),
+                         constant_values=-jnp.inf)
+            gid = jnp.pad(gid, ((0, 0), (0, n - n_loc)), constant_values=N)
+        return sharded_top_n(lv, gid, n, axis_name=axis_name)
+
+    with compat.set_mesh(mesh):
+        vals, ids = compat.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
+                      P(None, None)),
+            out_specs=(P(None, None), P(None, None)),
+            # outputs are replicated via the all_gather merge, which the
+            # static replication checker cannot infer
+            check=False,
+        )(values, indices, inv_norms, qd)
+    scores = vals / jnp.maximum(q_norm[..., None], NORM_EPS)
+    if squeeze:
+        scores, ids = scores[0], ids[0]
+    return scores, ids

@@ -97,6 +97,14 @@ def shard_hint(x: jax.Array, kind: str) -> jax.Array:
     spec = rules.spec(kind)
     if spec is None:
         return x
+    # bare-PartitionSpec constraints need an ambient mesh to resolve against
+    # (jax.set_mesh on new jax, the Mesh context manager on 0.4.x — both via
+    # repro.compat.set_mesh); outside one the hint is a no-op, same as
+    # outside axis_rules
+    from repro import compat
+
+    if compat.current_mesh() is None:
+        return x
     return jax.lax.with_sharding_constraint(x, spec)
 
 

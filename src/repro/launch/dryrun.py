@@ -25,6 +25,7 @@ import traceback
 
 import jax
 
+from repro import compat
 from repro.launch.mesh import make_production_mesh, to_shardings
 from repro.models import registry
 
@@ -45,7 +46,7 @@ def lower_cell(cell, mesh, *, compile_: bool = True, rules=None):
         batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         rules = AxisRules(batch=batch_axes)
     t0 = time.time()
-    with jax.set_mesh(mesh), axis_rules(rules):
+    with compat.set_mesh(mesh), axis_rules(rules):
         lowered = jitted.lower(*cell.abstract_args)
     t_lower = time.time() - t0
     result = {

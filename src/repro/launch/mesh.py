@@ -13,11 +13,28 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
+
+
+def make_candidate_mesh(n_shards: int):
+    """1-D mesh over the 'cand' axis for candidate-sharded retrieval
+    (repro.distributed.retrieve).  Serving entry points build it from
+    ``--shards``; on CPU the devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    if n_shards > jax.device_count():
+        raise ValueError(
+            f"--shards {n_shards} exceeds the {jax.device_count()} visible "
+            "device(s); on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards} "
+            "before jax initializes"
+        )
+    return compat.make_mesh((n_shards,), ("cand",))
 
 
 def resolve_pspec(spec: P, mesh) -> P:

@@ -10,12 +10,48 @@ and reports recall@n against exact dense retrieval plus latency stats,
 including which backend path (fused Pallas kernel vs chunked jnp) served.
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --requests 20
+
+Candidate-sharded serving (catalogs beyond one chip's HBM): ``--shards N``
+shards the index along the candidate axis of an N-way mesh and serves
+through ``distributed_retrieve`` (per-shard fused/ref retrieve + one small
+all-gather merge) — bit-identical results to single-device serving:
+
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --shards 4
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+
+def _force_host_devices_from_argv() -> None:
+    """``--shards N`` on CPU needs N visible devices, and XLA only honours
+    the device-count forcing flag before jax initializes — so peek at argv
+    at module-import time, before the jax import below.  No-op when the
+    flag is already present (e.g. under the tier-1 conftest) or on real
+    multi-device backends."""
+    n = None
+    for i, tok in enumerate(sys.argv):
+        try:
+            if tok == "--shards":
+                n = int(sys.argv[i + 1])
+            elif tok.startswith("--shards="):
+                n = int(tok.split("=", 1)[1])
+        except (IndexError, ValueError):
+            return
+    if n is None:
+        return
+    flag = "xla_force_host_platform_device_count"
+    if n > 1 and flag not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"{os.environ.get('XLA_FLAGS', '')} --{flag}={n}"
+        ).strip()
+
+
+if __name__ == "__main__":
+    _force_host_devices_from_argv()
 
 import numpy as np
 import jax
@@ -51,10 +87,20 @@ def main(argv=None):
                     help="route scoring+selection through the fused Pallas "
                          "kernel (1), the chunked jnp path (0), or pick by "
                          "backend (auto)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="candidate-shard the index over an N-way mesh and "
+                         "serve through distributed_retrieve (N>1 on CPU "
+                         "forces N host devices when run as a fresh process)")
     args = ap.parse_args(argv)
 
     use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
     path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
+    mesh = None
+    if args.shards > 1:
+        from repro.launch.mesh import make_candidate_mesh
+
+        mesh = make_candidate_mesh(args.shards)
+        path = f"{path}+sharded"
 
     cfg = SAEConfig(d=args.d, h=args.h, k=args.k)
     catalog = clustered_embeddings(jax.random.PRNGKey(0), args.catalog, d=cfg.d)
@@ -83,6 +129,7 @@ def main(argv=None):
         return retrieve(
             index, q_codes, args.topn,
             mode=args.mode, params=state.params, use_kernel=use_kernel,
+            mesh=mesh,
         )
 
     lat, recalls = [], []
@@ -99,8 +146,9 @@ def main(argv=None):
         )
         recalls.append(hits / true_ids.size)
     lat_ms = np.array(lat[1:]) * 1e3  # drop compile step
-    print(f"[serve] mode={args.mode} path={path} recall@{args.topn} "
-          f"{np.mean(recalls):.3f} | latency p50 {np.percentile(lat_ms, 50):.1f} ms "
+    print(f"[serve] mode={args.mode} path={path} shards={args.shards} "
+          f"recall@{args.topn} {np.mean(recalls):.3f} | "
+          f"latency p50 {np.percentile(lat_ms, 50):.1f} ms "
           f"p99 {np.percentile(lat_ms, 99):.1f} ms over {args.requests} requests")
     return 0
 

@@ -22,6 +22,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.compat import P
+
 
 class MoEOut(NamedTuple):
     y: jax.Array
@@ -59,7 +62,10 @@ def moe_ffn_sharded(
     gather on every device — 104 GiB/device at qwen3-moe train shapes,
     EXPERIMENTS.md §Perf); shard_map makes the locality explicit.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.current_mesh()
+    if mesh is None:
+        raise ValueError("moe_ffn_sharded needs an ambient mesh "
+                         "(repro.compat.set_mesh)")
     sizes = dict(mesh.shape)
     n_model = sizes[model_axis]
     n_bshards = 1
@@ -134,16 +140,16 @@ def moe_ffn_sharded(
             dropped = jax.lax.pmean(dropped, a)
         return y, aux, dropped
 
-    y, aux, dropped = jax.shard_map(
+    y, aux, dropped = compat.shard_map(
         local_fn,
         in_specs=(
-            jax.P(bspec, None),
-            jax.P(None, None),
-            jax.P(model_axis, None, None),
-            jax.P(model_axis, None, None),
-            jax.P(model_axis, None, None),
+            P(bspec, None),
+            P(None, None),
+            P(model_axis, None, None),
+            P(model_axis, None, None),
+            P(model_axis, None, None),
         ),
-        out_specs=(jax.P(bspec, None), jax.P(), jax.P()),
+        out_specs=(P(bspec, None), P(), P()),
     )(x, router_w, w_gate, w_up, w_down)
     return MoEOut(y=y, aux_loss=aux, dropped_frac=dropped)
 

@@ -301,16 +301,19 @@ def nequip_forward_sharded(
         return (feats[0][..., 0].astype(jnp.float32) @ prm["out_w"]
                 + prm["out_b"])
 
-    return jax.shard_map(
+    from repro import compat
+    from repro.compat import P
+
+    return compat.shard_map(
         local_fn,
         in_specs=(
-            jax.tree.map(lambda _: jax.P(), params),
-            jax.P(nspec, None),
-            jax.P(None, espec),
-            jax.P(None, None),
-            (jax.P(espec) if edge_mask is not None else None),
+            jax.tree.map(lambda _: P(), params),
+            P(nspec, None),
+            P(None, espec),
+            P(None, None),
+            (P(espec) if edge_mask is not None else None),
         ),
-        out_specs=jax.P(nspec, None),
+        out_specs=P(nspec, None),
     )(params, node_feat, edge_index, positions, edge_mask)
 
 

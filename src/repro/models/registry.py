@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import sae as sae_lib
 from repro.core.types import SAEConfig
 from repro.distributed import sharding as shd
@@ -440,7 +441,7 @@ def _recsys_cell(arch: str, shape: str, full: bool) -> Cell:
                 v, i = jax.lax.top_k(s, TOP_N)
                 shard = jax.lax.axis_index(axes[0])
                 for ax in axes[1:]:
-                    shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+                    shard = shard * compat.axis_size(ax) + jax.lax.axis_index(ax)
                 return v, i + shard.astype(jnp.int32) * ce_l.shape[0]
 
             # only the hist rows of the items table are needed inside:
@@ -450,7 +451,7 @@ def _recsys_cell(arch: str, shape: str, full: bool) -> Cell:
             )[0]                                            # (T, d)
             bb = {"hist": jnp.where(b["hist"] >= 0,
                                     jnp.arange(b["hist"].shape[1])[None], -1)}
-            vs, ids = jax.shard_map(
+            vs, ids = compat.shard_map(
                 local,
                 in_specs=(
                     jax.tree.map(lambda _: P(), small),
@@ -606,14 +607,14 @@ def _sae_cell(shape: str, full: bool) -> Cell:
             if axes:
                 shard = jax.lax.axis_index(axes[0])
                 for ax in axes[1:]:
-                    shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+                    shard = shard * compat.axis_size(ax) + jax.lax.axis_index(ax)
                 i = i + shard.astype(jnp.int32) * vals_l.shape[0]
             return v, i
 
         if not axes:
             v, i = local(vals, idx, norms, q_dense, q_norm)
             return v, i
-        vs, ids = jax.shard_map(
+        vs, ids = compat.shard_map(
             local,
             in_specs=(P(axes, None), P(axes, None), P(axes),
                       P(None, None), P(None)),

@@ -1,18 +1,32 @@
-"""Runs under 8 fake devices (spawned by test_distributed_equiv.py).
+"""Runs under 4 fake CPU devices (spawned by test_distributed_equiv.py,
+which forwards the XLA_FLAGS device-count forcing set by tests/conftest.py;
+the flag-append below keeps the script standalone-runnable).
 
-Checks the shard_map implementations against their single-device oracles:
-  1. moe_ffn_sharded   == moe_ffn          (expert-parallel dispatch)
-  2. nequip sharded    == nequip dense     (dst-partitioned message passing)
+Checks the shard_map implementations against their single-device oracles
+through the repro.compat jax-version shim (works on jax 0.4.x and >= 0.6):
+  1. moe_ffn_sharded     == moe_ffn          (expert-parallel dispatch)
+  2. nequip sharded      == nequip dense     (dst-partitioned message passing)
   3. compressae retrieval shard_map == unsharded scoring
+  4. encode_sharded      == encode           (h-sharded distributed top-k)
+  5. distributed_retrieve == core.retrieve   (candidate-sharded serving)
 """
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+_FORCE = "xla_force_host_platform_device_count"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} --{_FORCE}=4"
+    ).strip()
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
+
+from repro import compat
+from repro.compat import P
+
+DATA, MODEL = 2, 2    # 4-device (data, model) mesh
 
 
 def check_moe(mesh):
@@ -29,7 +43,7 @@ def check_moe(mesh):
 
     ref = moe_ffn(x, rw, wg, wu, wd, top_k=topk, capacity_factor=8.0)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
         out = jax.jit(
             lambda *a: moe_ffn_sharded(
@@ -54,7 +68,7 @@ def check_nequip(mesh):
                        n_out=5, radial_hidden=16, avg_degree=4.0)
     params = nequip_init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    n_nodes, shards_nodes, shards_edges = 16, 4, 8
+    n_nodes, shards_nodes, shards_edges = 16, DATA, DATA * MODEL
     n_loc = n_nodes // shards_nodes
     # edges grouped by dst shard, padded to equal per-shard counts
     raw_e = 40
@@ -63,7 +77,8 @@ def check_nequip(mesh):
     groups = [[] for _ in range(shards_nodes)]
     for s, t in zip(src, dst):
         groups[t // n_loc].append((s, t))
-    per = 16  # per dst-shard (must divide by edges-per-node-shard = 2 blocks)
+    # per dst-shard edge count must split evenly over the model axis
+    per = (max(len(g) for g in groups) + MODEL - 1) // MODEL * MODEL
     es, ed, em = [], [], []
     for g in groups:
         g = g[:per]
@@ -79,7 +94,7 @@ def check_nequip(mesh):
 
     ref = nequip_forward(params, node_feat, edge_index, positions, cfg,
                          edge_mask=edge_mask)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = jax.jit(
             lambda p, nf, ei, pos, m: nequip_forward_sharded(
                 p, nf, ei, pos, cfg, m,
@@ -107,7 +122,7 @@ def check_sae_retrieval(mesh):
     q = jnp.asarray(rng.standard_normal(q_a.shape), jnp.float32)
 
     v_ref, i_ref = cell.fn(params, vals, idx, norms, q)   # no rules: unsharded
-    with jax.set_mesh(mesh), axis_rules(AxisRules(batch=("data",))):
+    with compat.set_mesh(mesh), axis_rules(AxisRules(batch=("data",))):
         v_sh, i_sh = jax.jit(cell.fn)(params, vals, idx, norms, q)
     np.testing.assert_allclose(np.asarray(v_sh), np.asarray(v_ref),
                                rtol=1e-5, atol=1e-6)
@@ -123,7 +138,7 @@ def check_encode_sharded(mesh):
     params = init_params(cfg, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (16, cfg.d))
     ref = encode(params, x, cfg.k)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         got = jax.jit(
             lambda p, xx: encode_sharded(p, xx, cfg.k, batch_axes=("data",),
                                          model_axis="model")
@@ -137,15 +152,36 @@ def check_encode_sharded(mesh):
     print("encode_sharded OK")
 
 
+def check_distributed_retrieve():
+    from repro.core import SAEConfig, build_index, encode, init_params, retrieve
+    from repro.launch.mesh import make_candidate_mesh
+
+    cfg = SAEConfig(d=32, h=128, k=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (203, cfg.d))  # ragged
+    codes = encode(params, corpus, cfg.k)
+    index = build_index(codes, params)
+    q = encode(params, jax.random.normal(jax.random.PRNGKey(2), (7, cfg.d)),
+               cfg.k)
+    cand_mesh = make_candidate_mesh(DATA * MODEL)
+    for mode in ("sparse", "reconstructed"):
+        v0, i0 = retrieve(index, q, 20, mode=mode, params=params,
+                          use_kernel=False)
+        v1, i1 = retrieve(index, q, 20, mode=mode, params=params,
+                          use_kernel=False, mesh=cand_mesh)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v0))
+    print("distributed_retrieve OK")
+
+
 def main():
-    mesh = jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    assert jax.device_count() >= DATA * MODEL, jax.devices()
+    mesh = compat.make_mesh((DATA, MODEL), ("data", "model"))
     check_moe(mesh)
     check_nequip(mesh)
     check_sae_retrieval(mesh)
     check_encode_sharded(mesh)
+    check_distributed_retrieve()
     print("ALL DISTRIBUTED EQUIV OK")
 
 

@@ -1,24 +1,30 @@
-"""Runs under 4 fake devices (spawned by test_topk.py).
+"""Runs under 4 fake devices (spawned by test_topk.py; the forcing flag is
+inherited from the tier-1 conftest environment, with a flag-append so the
+script stays standalone-runnable).
 
 distributed_abs_topk_sparse inside shard_map (h sharded over a 'model'
-axis) must match the single-device abs_topk_sparse oracle.
+axis) must match the single-device abs_topk_sparse oracle.  Goes through
+the repro.compat shim so it runs on jax 0.4.x and >= 0.6.
 """
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+_FORCE = "xla_force_host_platform_device_count"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} --{_FORCE}=4"
+    ).strip()
 
 import numpy as np
 import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+from repro.compat import P
 from repro.core.topk import abs_topk_sparse, distributed_abs_topk_sparse
 
 
 def main():
-    assert jax.device_count() == 4, jax.devices()
-    mesh = Mesh(np.array(jax.devices()), ("model",))
+    assert jax.device_count() >= 4, jax.devices()
+    mesh = compat.make_mesh((4,), ("model",))
     for b, h, k in [(8, 256, 8), (17, 128, 4), (4, 512, 32)]:
         x = jax.random.normal(jax.random.PRNGKey(b + h), (b, h))
         h_local = h // 4
@@ -30,11 +36,11 @@ def main():
             )
 
         got_v, got_i = jax.jit(
-            shard_map(
+            compat.shard_map(
                 local_fn, mesh=mesh,
                 in_specs=P(None, "model"),
                 out_specs=(P(None, None), P(None, None)),
-                check_rep=False,  # replicated via all_gather; not inferred
+                check=False,  # replicated via all_gather; not inferred
             )
         )(x)
         want_v, want_i = abs_topk_sparse(x, k)

@@ -1,24 +1,25 @@
 """Distributed-correctness: shard_map implementations must match their
 single-device oracles bit-for-bit (up to float reassociation).
 
-Runs in a subprocess because the device count must be set before jax
-initializes (the main pytest process is single-device)."""
+Runs in a subprocess so the forced multi-device CPU topology (XLA_FLAGS,
+set process-wide by tests/conftest.py and inherited here) is guaranteed to
+be in effect before jax initializes in the child — the parent pytest
+process may or may not have it, depending on import order.
+
+The implementations under test (moe_ffn_sharded, nequip sharded,
+encode_sharded, the registry retrieval cells, distributed_retrieve) all go
+through the repro.compat jax-version shim, so this suite runs — unskipped —
+on jax 0.4.x as well as >= 0.6.
+"""
 import os
 import pathlib
 import subprocess
 import sys
 
-import jax
 import pytest
 
-if not hasattr(jax, "shard_map"):
-    # the impl (and the sharded fns it exercises: moe_ffn_sharded, nequip
-    # sharded, encode_sharded) target jax>=0.6 APIs — jax.shard_map,
-    # jax.set_mesh, jax.sharding.AxisType, get_abstract_mesh — absent from
-    # older jax; see ROADMAP open items
-    pytest.skip("requires jax.shard_map (jax >= 0.6)", allow_module_level=True)
 
-
+@pytest.mark.distributed
 @pytest.mark.timeout(600)
 def test_shard_map_implementations_match_oracles():
     script = pathlib.Path(__file__).with_name("_distributed_equiv_impl.py")

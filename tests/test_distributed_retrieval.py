@@ -1,0 +1,130 @@
+"""Candidate-sharded ``distributed_retrieve`` == single-device
+``core.retrieve()`` — bit-identical scores AND ids, ties included.
+
+Runs in-process on the forced multi-device CPU topology (tests/conftest.py).
+A deterministic grid always gates the equivalence; when the optional
+``hypothesis`` dev dependency is installed, a property-based sweep widens
+the shape coverage (random N/Q/k/h/n/shard-count, including ragged N and
+n larger than a shard's slice).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SAEConfig, build_index, encode, init_params, retrieve
+from repro.core.types import SparseCodes
+from repro.launch.mesh import make_candidate_mesh
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile(
+        "repro_dist", deadline=None, max_examples=20, derandomize=True
+    )
+    hypothesis.settings.load_profile("repro_dist")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.distributed
+
+CFG = SAEConfig(d=32, h=128, k=4)
+
+
+def _index_and_queries(n_cand, nq, seed=0, dup_rows=0):
+    params = init_params(CFG, jax.random.PRNGKey(seed))
+    corpus = jax.random.normal(jax.random.PRNGKey(seed + 1), (n_cand, CFG.d))
+    if dup_rows:
+        # duplicate a prefix onto the tail -> exactly tied scores whose ids
+        # straddle shard boundaries
+        corpus = jnp.concatenate([corpus, corpus[:dup_rows]])
+    queries = jax.random.normal(jax.random.PRNGKey(seed + 2), (nq, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    q = encode(params, queries, CFG.k)
+    return params, build_index(codes, params), q
+
+
+def _assert_bit_identical(index, q, n, shards, params=None, mode="sparse"):
+    mesh = make_candidate_mesh(shards)
+    v0, i0 = retrieve(index, q, n, mode=mode, params=params, use_kernel=False)
+    v1, i1 = retrieve(index, q, n, mode=mode, params=params, use_kernel=False,
+                      mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v0))
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+@pytest.mark.parametrize(
+    "n_cand,nq,n",
+    [
+        (512, 8, 10),   # even split
+        (37, 5, 10),    # ragged: N % shards != 0 for every multi-way mesh
+        (16, 3, 10),    # n > per-shard candidate count (4-way: 4/shard)
+        (100, 2, 100),  # n == N (every shard returns its whole slice)
+    ],
+)
+def test_matches_single_device(n_cand, nq, n, shards, forced_device_count):
+    if shards > forced_device_count:
+        pytest.skip(f"needs {shards} devices")
+    params, index, q = _index_and_queries(n_cand, nq)
+    _assert_bit_identical(index, q, n, shards)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_tied_scores_resolve_to_same_ids(shards, forced_device_count):
+    if shards > forced_device_count:
+        pytest.skip(f"needs {shards} devices")
+    # 13 duplicated rows: ties between ids 0..12 and 40..52 across shards
+    params, index, q = _index_and_queries(40, 6, seed=3, dup_rows=13)
+    _assert_bit_identical(index, q, 20, shards)
+
+
+def test_reconstructed_mode_and_single_query(forced_device_count):
+    if forced_device_count < 4:
+        pytest.skip("needs 4 devices")
+    params, index, q = _index_and_queries(203, 7, seed=5)
+    _assert_bit_identical(index, q, 15, 4, params=params, mode="reconstructed")
+    single = SparseCodes(values=q.values[0], indices=q.indices[0], dim=q.dim)
+    _assert_bit_identical(index, single, 5, 4)
+
+
+def test_top_n_exceeding_catalog_raises(forced_device_count):
+    if forced_device_count < 2:
+        pytest.skip("needs 2 devices")
+    params, index, q = _index_and_queries(32, 2)
+    with pytest.raises(ValueError, match="exceeds candidate count"):
+        retrieve(index, q, 33, use_kernel=False, mesh=make_candidate_mesh(2))
+
+
+def test_jitted_serving_pattern(forced_device_count):
+    if forced_device_count < 4:
+        pytest.skip("needs 4 devices")
+    params, index, q = _index_and_queries(200, 1, seed=7)
+    mesh = make_candidate_mesh(4)
+    qd = jax.random.normal(jax.random.PRNGKey(9), (8, CFG.d))
+    f = jax.jit(lambda x: retrieve(index, encode(params, x, CFG.k), 10,
+                                   use_kernel=False, mesh=mesh))
+    g = jax.jit(lambda x: retrieve(index, encode(params, x, CFG.k), 10,
+                                   use_kernel=False))
+    np.testing.assert_array_equal(np.asarray(f(qd)[1]), np.asarray(g(qd)[1]))
+    np.testing.assert_array_equal(np.asarray(f(qd)[0]), np.asarray(g(qd)[0]))
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        n_cand=st.integers(min_value=8, max_value=300),
+        nq=st.integers(min_value=1, max_value=8),
+        n=st.integers(min_value=1, max_value=40),
+        shards=st.sampled_from([1, 2, 4]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_property_matches_single_device(n_cand, nq, n, shards, seed):
+        if shards > jax.device_count():
+            return
+        n = min(n, n_cand)
+        params, index, q = _index_and_queries(n_cand, nq, seed=seed)
+        _assert_bit_identical(index, q, n, shards)

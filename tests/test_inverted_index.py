@@ -5,7 +5,8 @@ import jax.numpy as jnp
 
 from repro.core import SAEConfig, build_index, encode, init_params, score_sparse, top_n
 from repro.core.inverted_index import (
-    build_inverted_index, expected_scan_fraction, search_inverted,
+    _search_inverted_fullsort, build_inverted_index, expected_scan_fraction,
+    search_inverted,
 )
 
 CFG = SAEConfig(d=32, h=128, k=4)
@@ -51,6 +52,24 @@ def test_single_query_shape_and_padding_excluded():
     )
     assert v.shape == (5,) and ids.shape == (5,)
     assert (np.asarray(ids) >= 0).all()   # never returns padding
+
+
+def test_streaming_epilogue_matches_fullsort_selection():
+    """The streaming top-n epilogue (blockwise scan, running best buffer)
+    must reproduce the pre-streaming full ``lax.top_k``-over-the-union
+    selection exactly — scores bitwise, ids included, across block sizes
+    that split the k·cap union raggedly and the single-block case."""
+    codes, q = _setup(n=600, nq=8, seed=4)
+    inv = build_inverted_index(codes, cap=64)     # union = k·cap = 256
+    for n in (1, 5, 20):
+        want_v, want_i = _search_inverted_fullsort(inv, q, n)
+        for block in (7, 64, 256, 4096):
+            got_v, got_i = search_inverted(inv, q, n, block=block)
+            np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+            finite = np.isfinite(np.asarray(want_v))
+            np.testing.assert_array_equal(
+                np.asarray(got_i)[finite], np.asarray(want_i)[finite]
+            )
 
 
 def test_scan_fraction_decreases_with_cap():
