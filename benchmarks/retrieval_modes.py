@@ -15,6 +15,14 @@ Rows:
                                   distributed path over a min(4, n_devices)-way
                                   mesh (1-way degenerates to a single shard
                                   when the process has one device)
+  retrieval_e2e_dense           — RetrievalEngine.retrieve_dense: the whole
+                                  request (dense embeddings in, top-n out)
+                                  through the serving engine — encode →
+                                  sparse-query score → select with no dense
+                                  -query round-trip through HBM; timed
+                                  against the composed encode()+retrieve()
+                                  request (retrieval_sparse) and asserted
+                                  bit-identical to it
 
 Every BENCH_retrieval.json record carries the backend path
 ("fused-kernel" | "jnp-chunked") and the shard count, so the perf
@@ -41,6 +49,7 @@ from repro.core.retrieval import kernel_path
 from repro.launch.mesh import make_candidate_mesh
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
+from repro.serving import RetrievalEngine
 
 D, H, K = 256, 1024, 16
 N, Q, TOPN = 16384, 64, 10
@@ -98,6 +107,10 @@ def main(smoke: bool = False):
         lambda q: retrieve(index, encode(params, q, K), topn, mode="sparse",
                            mesh=mesh)
     )
+    # serving-engine whole request (ISSUE 3): dense embeddings in, top-n
+    # out, encode folded into the kernel chain — no dense-query HBM trip
+    engine = RetrievalEngine(params, index, mode="sparse")
+    e2e_fn = lambda q: engine.retrieve_dense(q, topn)  # noqa: E731
 
     records = []
     reps = 5 if smoke else 20  # shared-box timing noise: more reps at full size
@@ -107,7 +120,8 @@ def main(smoke: bool = False):
                              ("retrieval_sparse_fullscore", fullscore_fn, 1),
                              ("retrieval_sparse", sparse_fn, 1),
                              ("retrieval_reconstructed", recon_fn, 1),
-                             ("retrieval_sparse_sharded", sharded_fn, n_shards)]:
+                             ("retrieval_sparse_sharded", sharded_fn, n_shards),
+                             ("retrieval_e2e_dense", e2e_fn, 1)]:
         us = _timeit(fn, queries, reps=reps)
         r = rec(fn(queries)[1])
         print(f"{name},{us:.0f},recall@{topn}={r:.4f}")
@@ -128,6 +142,16 @@ def main(smoke: bool = False):
     assert (np.asarray(i_s) == np.asarray(i_1)).all(), "sharded ids differ"
     assert (np.asarray(v_s) == np.asarray(v_1)).all(), "sharded scores differ"
     print(f"sharded_vs_single_bit_identical,0,shards={n_shards}")
+
+    # engine whole-request must be BIT-identical to the composed
+    # encode()+retrieve() request it replaces
+    v_e, i_e = e2e_fn(queries)
+    assert (np.asarray(i_e) == np.asarray(i_1)).all(), "engine ids differ"
+    assert (np.asarray(v_e) == np.asarray(v_1)).all(), "engine scores differ"
+    by_name = {r["name"]: r for r in records}
+    ratio = (by_name["retrieval_e2e_dense"]["us_per_call"]
+             / max(by_name["retrieval_sparse"]["us_per_call"], 1e-9))
+    print(f"engine_vs_composed_bit_identical,0,e2e/composed={ratio:.3f}")
 
     # kernel-trick exactness at benchmark scale
     q_codes = encode(params, queries, K)

@@ -19,14 +19,22 @@ Mode 2 therefore costs the same per-candidate work as mode 1 — this is an
 exact refactoring (associativity), not an approximation.
 
 Serving goes through ``retrieve(index, q, n, mode)`` — the one-call
-score+select API.  It dispatches on ``use_kernel``:
+score+select API, now a thin functional wrapper over the serving engine
+(``repro.serving.engine.RetrievalEngine``): it preps the query into the
+mode's scoring representation (sparse mode keeps the (Q, k) codes — the
+sparse-query kernel densifies in VMEM; reconstructed mode computes the
+dense z = W_decᵀ(W_dec s_q)) and dispatches on ``use_kernel``:
 
-  * ``"auto"`` (default) — the fused Pallas kernel
-    (repro.kernels.sparse_dot.fused_retrieve: candidate tiles streamed once
-    per query panel, streaming top-n epilogue, no (Q, N) materialization)
-    on TPU; the equivalent chunked-jnp ``retrieve_ref`` elsewhere.
+  * ``"auto"`` (default) — the fused Pallas kernels
+    (repro.kernels.sparse_dot.fused_retrieve_sparse_q / fused_retrieve:
+    candidate tiles streamed once per query panel, streaming top-n
+    epilogue, no (Q, N) materialization) on TPU; the equivalent
+    chunked-jnp refs elsewhere.
   * ``True`` / ``False`` — force the kernel (interpret mode off-TPU; slow,
     for tests) or the jnp path.
+
+End-to-end serving (dense embeddings in, no code round-trip through HBM)
+lives on the engine object itself: ``RetrievalEngine.retrieve_dense``.
 
 Both paths fold precomputed *reciprocal* candidate norms into the scoring
 epilogue and divide by ‖q‖ on the final (Q, n) panel only, so they agree to
@@ -45,7 +53,6 @@ import jax.numpy as jnp
 
 from repro.core import sae, sparse
 from repro.core.types import SparseCodes
-from repro.kernels.sparse_dot import fused_retrieve, retrieve_ref
 from repro.kernels.sparse_dot import sparse_dot as sparse_dot_kernel
 
 NORM_EPS = 1e-8
@@ -145,32 +152,6 @@ def build_index(
     )
 
 
-def _query_dense(
-    index: SparseIndex,
-    q: SparseCodes,
-    mode: str,
-    params: Optional[sae.Params],
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """-> (dense scatter-query vector, ‖q‖, candidate inv norms) for a mode."""
-    if mode == "sparse":
-        inv = index.inv_sparse_norms
-        if inv is None:
-            inv = 1.0 / jnp.maximum(index.sparse_norms, NORM_EPS)
-        return sparse.densify(q), jnp.linalg.norm(q.values, axis=-1), inv
-    if mode == "reconstructed":
-        if params is None:
-            raise ValueError("mode='reconstructed' requires SAE params")
-        if index.recon_norms is None:
-            raise ValueError("index built without params; recon norms missing")
-        inv = index.inv_recon_norms
-        if inv is None:
-            inv = 1.0 / jnp.maximum(index.recon_norms, NORM_EPS)
-        x_hat_q = sae.decode(params, q)                    # (Q?, d)
-        z = x_hat_q @ params["w_dec"].T                    # (Q?, h) == K s_q
-        return z, jnp.linalg.norm(x_hat_q, axis=-1), inv
-    raise ValueError(f"unknown retrieval mode: {mode!r}")
-
-
 def retrieve(
     index: SparseIndex,
     q: SparseCodes,
@@ -184,47 +165,42 @@ def retrieve(
 ) -> tuple[jax.Array, jax.Array]:
     """One-call serving API: top-n (cosine scores, candidate ids).
 
+    Thin functional wrapper over the serving engine
+    (``repro.serving.engine.RetrievalEngine.retrieve_codes``): constructs a
+    per-call engine and serves one request through it.  Long-lived callers
+    should hold a ``RetrievalEngine`` instead and use ``retrieve_dense``
+    for whole requests (dense embeddings in).
+
     q: (Q?, k) query codes; returns (Q?, n) scores and int32 ids.  The
-    (Q, N) score matrix is never materialized on either path: the fused
-    Pallas kernel keeps per-query running best buffers in VMEM across the
-    candidate stream, the jnp path carries them through a chunked scan.
-    Equivalent (to f32 rounding; identical ids away from ties) to
+    (Q, N) score matrix is never materialized on either path, and in
+    sparse mode the query codes are scored directly (VMEM-densified panel)
+    — no dense (Q, h) query round-trip through HBM.  Equivalent (to f32
+    rounding; identical ids away from ties) to
     ``top_n(score_<mode>(index, q), n)``.
 
     ``mesh`` routes through candidate-sharded distributed retrieval
-    (``repro.distributed.retrieve.distributed_retrieve``): the index is
-    sharded along ``mesh[shard_axis]``, each shard runs the same fused/ref
-    streaming retrieve over its slice, and per-shard top-n sets merge via
-    ``sharded_top_n`` — bit-identical (scores, ids, ties) to the
-    single-device path.
+    (``repro.distributed.retrieve``): the index is sharded along
+    ``mesh[shard_axis]``, the prepped query is replicated, each shard runs
+    the same fused/ref streaming retrieve over its slice, and per-shard
+    top-n sets merge via ``sharded_top_n`` — bit-identical (scores, ids,
+    ties) to the single-device path.
     """
-    if mesh is not None:
-        from repro.distributed.retrieve import distributed_retrieve
+    from repro.serving.engine import RetrievalEngine
 
-        return distributed_retrieve(
-            index, q, n, mode, params,
-            mesh=mesh, axis_name=shard_axis, use_kernel=use_kernel,
-        )
-    if n > index.codes.n:
-        raise ValueError(f"top-n {n} exceeds candidate count {index.codes.n}")
-    q_dense, q_norm, inv_norms = _query_dense(index, q, mode, params)
-    if kernel_path(use_kernel):
-        vals, ids = fused_retrieve(
-            index.codes.values, index.codes.indices, inv_norms, q_dense, n=n
-        )
-    else:
-        squeeze = q_dense.ndim == 1
-        vals, ids = retrieve_ref(
-            index.codes.values,
-            index.codes.indices,
-            inv_norms,
-            q_dense[None] if squeeze else q_dense,
-            n=n,
-        )
-        if squeeze:
-            vals, ids = vals[0], ids[0]
-    scores = vals / jnp.maximum(q_norm[..., None], NORM_EPS)
-    return scores, ids
+    engine = RetrievalEngine(
+        params, index,
+        mode=mode, use_kernel=use_kernel, mesh=mesh, shard_axis=shard_axis,
+    )
+    return engine.retrieve_codes(q, n)
+
+
+def _cosine_normalize(
+    dots: jax.Array, q_norm: jax.Array, cand_norms: jax.Array
+) -> jax.Array:
+    """dots / max(‖q‖·‖c‖, eps), broadcasting over (N,) and (Q, N) alike:
+    a scalar ‖q‖ becomes (1,), a (Q,) batch becomes (Q, 1) — one expression
+    covers the single-query and batched layouts."""
+    return dots / jnp.maximum(q_norm[..., None] * cand_norms, NORM_EPS)
 
 
 def score_sparse(
@@ -235,8 +211,7 @@ def score_sparse(
     q_dense = sparse.densify(q)                            # (Q?, h)
     q_norm = jnp.linalg.norm(q.values, axis=-1)            # (Q?,)
     dots = _sparse_dot(index.codes, q_dense, use_kernel)   # (Q?, N)
-    denom = jnp.maximum(q_norm[..., None] * index.sparse_norms, NORM_EPS)
-    return dots / denom if q.values.ndim > 1 else dots / jnp.maximum(q_norm * index.sparse_norms, NORM_EPS)
+    return _cosine_normalize(dots, q_norm, index.sparse_norms)
 
 
 def score_reconstructed(
@@ -258,9 +233,7 @@ def score_reconstructed(
     z = x_hat_q @ params["w_dec"].T                        # (Q?, h) == K s_q
     q_norm = jnp.linalg.norm(x_hat_q, axis=-1)             # ‖W_dec s_q‖
     dots = _sparse_dot(index.codes, z, use_kernel)         # s_cᵀ K s_q
-    denom = jnp.maximum(q_norm[..., None] * index.recon_norms, NORM_EPS) \
-        if q.values.ndim > 1 else jnp.maximum(q_norm * index.recon_norms, NORM_EPS)
-    return dots / denom
+    return _cosine_normalize(dots, q_norm, index.recon_norms)
 
 
 def score_dense(database: jax.Array, q: jax.Array) -> jax.Array:

@@ -1,15 +1,26 @@
-"""Candidate-sharded distributed retrieval (ISSUE 2 tentpole).
+"""Candidate-sharded distributed retrieval (ISSUE 2 tentpole, engine-aware
+since ISSUE 3).
 
-Once the catalog exceeds one chip's HBM, the fused retrieve from PR 1 has
-to run over a candidate-sharded mesh: each shard holds only its slice of
-the (k-sparse) codes + norms — the compression is exactly what makes the
-shards cheap — scores it with the PR-1 streaming score+select primitive,
-and the per-shard top-n sets are merged with one small all-gather
+Once the catalog exceeds one chip's HBM, the fused retrieve has to run
+over a candidate-sharded mesh: each shard holds only its slice of the
+(k-sparse) codes + norms — the compression is exactly what makes the
+shards cheap — scores it with the streaming score+select primitive, and
+the per-shard top-n sets are merged with one small all-gather
 (``core.retrieval.sharded_top_n``).
 
-Equivalence contract (gated by tests/test_distributed_retrieval.py):
-``distributed_retrieve`` is *bit-identical* to single-device
-``core.retrieve()`` — scores AND ids, ties included:
+The serving engine (``repro.serving.engine.RetrievalEngine``) enters
+through ``distributed_retrieve_prepped``: the query is encoded and
+prepped ONCE per request outside the shard_map, then replicated into it.
+For sparse mode the replicated payload is the (Q, k) **codes** — each
+shard runs the sparse-query retrieve (``fused_retrieve_sparse_q`` /
+``retrieve_sparse_q_ref``) over its slice, so the dense (Q, h) query
+panel never exists outside VMEM, and the replication traffic drops by
+h/(2k)×.  Reconstructed mode replicates the dense z = W_decᵀ(W_dec s_q)
+computed in the engine's query-prep (dense by construction).
+
+Equivalence contract (gated by tests/test_distributed_retrieval.py and
+tests/test_serving_engine.py): ``distributed_retrieve`` is *bit-identical*
+to single-device ``core.retrieve()`` — scores AND ids, ties included:
 
   * per-candidate scores are row-local f32 ops on the same inputs, so
     sharding the candidate axis cannot reassociate them;
@@ -36,7 +47,12 @@ from repro import compat
 from repro.compat import P
 from repro.core import sae
 from repro.core.types import SparseCodes
-from repro.kernels.sparse_dot import fused_retrieve, retrieve_ref
+from repro.kernels.sparse_dot import (
+    fused_retrieve,
+    fused_retrieve_sparse_q,
+    retrieve_ref,
+    retrieve_sparse_q_ref,
+)
 
 CAND_AXIS = "cand"
 
@@ -50,40 +66,36 @@ def mesh_shard_count(mesh, axis_name: str = CAND_AXIS) -> int:
     return int(sizes[axis_name])
 
 
-def distributed_retrieve(
+def distributed_retrieve_prepped(
     index,
-    q: SparseCodes,
+    pq,
     n: int,
-    mode: str = "sparse",
-    params: Optional[sae.Params] = None,
     *,
     mesh,
     axis_name: str = CAND_AXIS,
-    use_kernel=None,
+    use_fused: bool,
+    inv_norms: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Top-n (cosine scores, global candidate ids) over a candidate-sharded
-    mesh.  Same signature/semantics as ``core.retrieve`` plus ``mesh``;
-    normally reached via ``core.retrieve(..., mesh=...)``.
-
-    The index (codes + reciprocal norms) is sharded along the candidate
-    axis of ``mesh[axis_name]``; queries are replicated.  Per shard, the
-    PR-1 fused/ref streaming retrieve produces a local top-n with scores in
-    the *norm-folded* space; the merge is one all-gather of n·n_shards
+    """Serve one prepped query batch (``serving.engine.PreppedQuery``) over
+    a candidate-sharded mesh.  The prepped representation — sparse codes or
+    dense z — is replicated; the index shards along ``mesh[axis_name]``.
+    Per shard, the matching streaming retrieve produces a local top-n in
+    the norm-folded space; the merge is one all-gather of n·n_shards
     (score, id) pairs per query.
     """
-    from repro.core.retrieval import (
-        NORM_EPS, _query_dense, kernel_path, sharded_top_n,
-    )
+    from repro.core.retrieval import NORM_EPS, sharded_top_n
+    from repro.serving.engine import mode_inv_norms
 
     N = index.codes.n
     if n > N:
         raise ValueError(f"top-n {n} exceeds candidate count {N}")
+    if inv_norms is None:
+        inv_norms = mode_inv_norms(index, "sparse" if pq.is_sparse
+                                   else "reconstructed")
     n_shards = mesh_shard_count(mesh, axis_name)
-    use_fused = kernel_path("auto" if use_kernel is None else use_kernel)
 
-    q_dense, q_norm, inv_norms = _query_dense(index, q, mode, params)
-    squeeze = q_dense.ndim == 1
-    qd = q_dense[None] if squeeze else q_dense
+    squeeze = pq.norm.ndim == 0
+    h = index.codes.dim
 
     values, indices = index.codes.values, index.codes.indices
     pad = (-N) % n_shards
@@ -99,11 +111,7 @@ def distributed_retrieve(
     # (by global id) keeps every real local top-n candidate
     n_loc = min(n + pad, n_loc_cand)
 
-    def local(vals_l, idx_l, inv_l, qd_r):
-        if use_fused:
-            lv, li = fused_retrieve(vals_l, idx_l, inv_l, qd_r, n=n_loc)
-        else:
-            lv, li = retrieve_ref(vals_l, idx_l, inv_l, qd_r, n=n_loc)
+    def _finish_local(lv, li):
         shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         gid = li + shard * n_loc_cand
         # global-padding rows live at the tail of the last shard: mask by id
@@ -114,18 +122,79 @@ def distributed_retrieve(
             gid = jnp.pad(gid, ((0, 0), (0, n - n_loc)), constant_values=N)
         return sharded_top_n(lv, gid, n, axis_name=axis_name)
 
+    if pq.is_sparse:
+        qv = pq.values[None] if squeeze else pq.values
+        qi = pq.indices[None] if squeeze else pq.indices
+
+        def local(vals_l, idx_l, inv_l, qv_r, qi_r):
+            if use_fused:
+                lv, li = fused_retrieve_sparse_q(
+                    vals_l, idx_l, inv_l, qv_r, qi_r, h, n=n_loc
+                )
+            else:
+                lv, li = retrieve_sparse_q_ref(
+                    vals_l, idx_l, inv_l, qv_r, qi_r, h, n=n_loc
+                )
+            return _finish_local(lv, li)
+
+        q_args = (qv, qi)
+        q_specs = (P(None, None), P(None, None))
+    else:
+        qd = pq.dense[None] if squeeze else pq.dense
+
+        def local(vals_l, idx_l, inv_l, qd_r):
+            if use_fused:
+                lv, li = fused_retrieve(vals_l, idx_l, inv_l, qd_r, n=n_loc)
+            else:
+                lv, li = retrieve_ref(vals_l, idx_l, inv_l, qd_r, n=n_loc)
+            return _finish_local(lv, li)
+
+        q_args = (qd,)
+        q_specs = (P(None, None),)
+
     with compat.set_mesh(mesh):
         vals, ids = compat.shard_map(
             local,
             mesh=mesh,
-            in_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
-                      P(None, None)),
+            in_specs=(P(axis_name, None), P(axis_name, None), P(axis_name))
+            + q_specs,
             out_specs=(P(None, None), P(None, None)),
             # outputs are replicated via the all_gather merge, which the
             # static replication checker cannot infer
             check=False,
-        )(values, indices, inv_norms, qd)
-    scores = vals / jnp.maximum(q_norm[..., None], NORM_EPS)
+        )(values, indices, inv_norms, *q_args)
+    norm = pq.norm[None] if squeeze else pq.norm
+    scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
     if squeeze:
         scores, ids = scores[0], ids[0]
     return scores, ids
+
+
+def distributed_retrieve(
+    index,
+    q: SparseCodes,
+    n: int,
+    mode: str = "sparse",
+    params: Optional[sae.Params] = None,
+    *,
+    mesh,
+    axis_name: str = CAND_AXIS,
+    use_kernel=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-n (cosine scores, global candidate ids) over a candidate-sharded
+    mesh.  Same signature/semantics as ``core.retrieve`` plus ``mesh``;
+    normally reached via ``core.retrieve(..., mesh=...)`` or a
+    ``RetrievalEngine`` constructed with a mesh.  Preps the query once
+    (engine query-prep) and serves through
+    ``distributed_retrieve_prepped``.
+    """
+    from repro.core.retrieval import kernel_path
+    from repro.serving.engine import mode_inv_norms, prep_query
+
+    use_fused = kernel_path("auto" if use_kernel is None else use_kernel)
+    pq = prep_query(index, q, mode, params)
+    return distributed_retrieve_prepped(
+        index, pq, n,
+        mesh=mesh, axis_name=axis_name, use_fused=use_fused,
+        inv_norms=mode_inv_norms(index, mode),
+    )

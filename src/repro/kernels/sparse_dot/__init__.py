@@ -1,4 +1,19 @@
-from repro.kernels.sparse_dot.ops import fused_retrieve, sparse_dot
-from repro.kernels.sparse_dot.ref import retrieve_ref, sparse_dot_ref
+from repro.kernels.sparse_dot.ops import (
+    fused_retrieve,
+    fused_retrieve_sparse_q,
+    sparse_dot,
+)
+from repro.kernels.sparse_dot.ref import (
+    retrieve_ref,
+    retrieve_sparse_q_ref,
+    sparse_dot_ref,
+)
 
-__all__ = ["sparse_dot", "sparse_dot_ref", "fused_retrieve", "retrieve_ref"]
+__all__ = [
+    "sparse_dot",
+    "sparse_dot_ref",
+    "fused_retrieve",
+    "retrieve_ref",
+    "fused_retrieve_sparse_q",
+    "retrieve_sparse_q_ref",
+]

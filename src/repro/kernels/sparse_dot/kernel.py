@@ -1,6 +1,6 @@
-"""Scatter-query SpMV Pallas kernels (DESIGN.md §3) — two generations.
+"""Scatter-query SpMV Pallas kernels (DESIGN.md §3) — three generations.
 
-Contract (both): scores[qi, i] = Σ_j values[i, j] · q[qi, indices[i, j]]
+Contract (all): scores[qi, i] = Σ_j values[i, j] · q[qi, indices[i, j]]
 
 Generation 1 — ``sparse_dot_pallas`` (blocked, multi-query):
   * A (BLOCK_Q, h) *panel* of dense queries is VMEM-resident per grid step —
@@ -37,6 +37,24 @@ Generation 2 — ``fused_retrieve_pallas`` (score + select, streaming top-n):
     kernel via the static true row count, so they can never surface even
     when all real scores are negative.
 
+Generation 3 — ``fused_retrieve_sparse_q_pallas`` (sparse queries in):
+  * The scatter-query SpMV from *both* sides: the query panel arrives as
+    (BLOCK_Q, kq) (values, indices) sparse codes — the ``fused_encode``
+    output — not as a dense (BLOCK_Q, h) expansion.  Only (Q, kq) query
+    codes and the (Q, n) results ever touch HBM; the dense panel exists
+    solely as a VMEM scratch, rebuilt once per query panel (on the first
+    candidate step) by a kq-round comparison-scatter:
+        panel[qi, c] = Σ_l q_vals[qi, l] · [q_idx[qi, l] == c]
+    accumulated in l order, so duplicate indices within a code row sum
+    exactly like ``sparse.densify``'s sequential scatter-add — the whole
+    kernel is bit-identical to densify + fused_retrieve.
+  * Scoring, streaming top-n epilogue, norm folding, padding masks and tie
+    semantics are shared with generation 2 (same ``_score_tile`` /
+    ``_mask_fold_merge`` code paths).
+  * Query HBM traffic drops from 4·Q·h bytes to 8·Q·kq — h/(2kq) ≈ 64×
+    at h=4096, kq=32 — and the request chain fused_encode →
+    fused_retrieve_sparse_q never round-trips a dense query through HBM.
+
 VMEM budget per grid step (f32):
     4·BLOCK_Q·h            query panel        (8 × 4096  → 128 KiB)
   + 8·BLOCK_N·k            candidate tile     (256 × 32  →  64 KiB)
@@ -44,7 +62,9 @@ VMEM budget per grid step (f32):
   + 8·BLOCK_Q·n            output best-(v,id) (8 × 64    →   4 KiB)
   + 8·BLOCK_Q·(n+BLOCK_N)  merge sweep temp   (8 × 320   →  20 KiB)
   ≈ 0.25 MiB at defaults — far under the ~16 MiB/core VMEM ceiling; h up
-  to ~128k or BLOCK_Q up to ~256 stay in budget.
+  to ~128k or BLOCK_Q up to ~256 stay in budget.  Generation 3 swaps the
+  query-panel *input* block for a same-size (BLOCK_Q, h) scratch plus two
+  (BLOCK_Q, kq) code tiles — net VMEM unchanged to first order.
 
 Lowering note: the per-column gather lowers to Mosaic's dynamic-gather on
 the lane dimension.  The select-max-and-mask sweep uses only max / min /
@@ -57,6 +77,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_N = 256  # candidate rows per tile (8-sublane multiple)
 BLOCK_Q = 8    # query rows per VMEM-resident panel
@@ -146,29 +167,43 @@ def _merge_top_n(best_v, best_i, tile_v, tile_i, out_v_ref, out_i_ref, n):
     jax.lax.fori_loop(0, n, step, cand_v)
 
 
+def _init_best(out_v_ref, out_i_ref):
+    out_v_ref[...] = jnp.full(out_v_ref.shape, _NEG_INF, jnp.float32)
+    out_i_ref[...] = jnp.zeros(out_i_ref.shape, jnp.int32)
+
+
+def _mask_fold_merge(scores, inv, nb, out_v_ref, out_i_ref, *,
+                     n, n_valid, block_n):
+    """Shared streaming-top-n tile epilogue (generations 2 and 3): fold the
+    reciprocal candidate norms, mask padded rows by global id, and merge the
+    tile into the VMEM-resident running best buffers (whole-tile skip when
+    nothing beats the current n-th best)."""
+    scores = scores * inv.T                                        # fold 1/‖c‖
+    bq, bn = scores.shape
+    ids = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    scores = jnp.where(ids < n_valid, scores, _NEG_INF)            # mask padding
+
+    cur_min = out_v_ref[:, pl.ds(n - 1, 1)]                        # n-th best
+
+    @pl.when(jnp.any(scores > cur_min))
+    def _merge():
+        _merge_top_n(
+            out_v_ref[...], out_i_ref[...], scores, ids,
+            out_v_ref, out_i_ref, n,
+        )
+
+
 def _make_retrieve_kernel(n: int, n_valid: int, block_n: int):
     def kernel(vals_ref, idx_ref, inv_ref, q_ref, out_v_ref, out_i_ref):
         nb = pl.program_id(1)
 
         @pl.when(nb == 0)
         def _init():
-            out_v_ref[...] = jnp.full(out_v_ref.shape, _NEG_INF, jnp.float32)
-            out_i_ref[...] = jnp.zeros(out_i_ref.shape, jnp.int32)
+            _init_best(out_v_ref, out_i_ref)
 
         scores = _score_tile(vals_ref[...], idx_ref[...], q_ref[...])
-        scores = scores * inv_ref[...].T                           # fold 1/‖c‖
-        bq, bn = scores.shape
-        ids = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
-        scores = jnp.where(ids < n_valid, scores, _NEG_INF)        # mask padding
-
-        cur_min = out_v_ref[:, pl.ds(n - 1, 1)]                    # n-th best
-
-        @pl.when(jnp.any(scores > cur_min))
-        def _merge():
-            _merge_top_n(
-                out_v_ref[...], out_i_ref[...], scores, ids,
-                out_v_ref, out_i_ref, n,
-            )
+        _mask_fold_merge(scores, inv_ref[...], nb, out_v_ref, out_i_ref,
+                         n=n, n_valid=n_valid, block_n=block_n)
 
     return kernel
 
@@ -217,4 +252,94 @@ def fused_retrieve_pallas(
         ],
         interpret=interpret,
     )(values, indices, inv_norms, q.astype(jnp.float32))
+    return out_v, out_i
+
+
+def _densify_panel(q_vals, q_idx, h: int):
+    """(BLOCK_Q, kq) sparse query codes -> (BLOCK_Q, h) dense panel.
+
+    kq comparison-scatter rounds accumulated in l order: duplicate indices
+    within a row sum sequentially, exactly like ``sparse.densify``'s
+    scatter-add, so downstream scores are bit-identical to the densified
+    path.  Runs once per query panel into VMEM scratch — never HBM.
+    """
+    bq, kq = q_vals.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, h), 1)
+
+    def body(l, acc):
+        v = jax.lax.dynamic_slice_in_dim(q_vals, l, 1, axis=1)     # (BQ, 1)
+        i = jax.lax.dynamic_slice_in_dim(q_idx, l, 1, axis=1)      # (BQ, 1)
+        return acc + jnp.where(col == i, v, 0.0)
+
+    return jax.lax.fori_loop(0, kq, body, jnp.zeros((bq, h), jnp.float32))
+
+
+def _make_retrieve_sparse_q_kernel(n: int, n_valid: int, block_n: int, h: int):
+    def kernel(vals_ref, idx_ref, inv_ref, qv_ref, qi_ref,
+               out_v_ref, out_i_ref, panel_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            panel_ref[...] = _densify_panel(qv_ref[...], qi_ref[...], h)
+
+        scores = _score_tile(vals_ref[...], idx_ref[...], panel_ref[...])
+        _mask_fold_merge(scores, inv_ref[...], nb, out_v_ref, out_i_ref,
+                         n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "n", "n_valid", "interpret", "block_n", "block_q"),
+)
+def fused_retrieve_sparse_q_pallas(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q_values: jax.Array,
+    q_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse-query fused score+select: (Q, n) best (scores, candidate ids).
+
+    values (N, k) f32, indices (N, k) i32, inv_norms (N, 1) f32, q_values
+    (Q, kq) f32 + q_indices (Q, kq) i32 sparse query codes over [0, h).
+    N % block_n == 0, Q % block_q == 0 (ops.py pads).  The dense query
+    panel lives only in a (block_q, h) VMEM scratch, rebuilt per panel;
+    query HBM traffic is the (Q, kq) codes — never (Q, h).
+    """
+    N, k = values.shape
+    nq = q_values.shape[0]
+    grid = (nq // block_q, N // block_n)  # candidate axis innermost
+    kq = q_values.shape[1]
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_sparse_q_kernel(n, n_valid, block_n, h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
+        interpret=interpret,
+    )(values, indices, inv_norms, q_values.astype(jnp.float32), q_indices)
     return out_v, out_i

@@ -16,6 +16,7 @@ from repro.kernels.sparse_dot.kernel import (
     BLOCK_N,
     BLOCK_Q,
     fused_retrieve_pallas,
+    fused_retrieve_sparse_q_pallas,
     sparse_dot_pallas,
 )
 
@@ -97,6 +98,63 @@ def fused_retrieve(
         indices,
         inv_norms.astype(jnp.float32).reshape(-1, 1),
         q,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    out_v, out_i = out_v[:nq], out_i[:nq]
+    return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_sparse_q(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q_values: jax.Array,
+    q_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse-query fused score+select -> ((Q, n) scores, (Q, n) ids).
+
+    values (N, k) f32, indices (N, k) i32, inv_norms (N,) f32, q_values
+    (Q, kq) or (kq,) f32 + matching q_indices i32 — k-sparse query codes
+    over [0, h), e.g. straight from ``fused_encode``.  Bit-identical to
+    ``fused_retrieve(values, indices, inv_norms, densify(q), n=n)``, but
+    only the (Q, kq) codes ever touch HBM on the query side.
+    """
+    squeeze = q_values.ndim == 1
+    if squeeze:
+        q_values, q_indices = q_values[None], q_indices[None]
+    n_valid, k = values.shape
+    if n > n_valid:
+        raise ValueError(f"top-n {n} exceeds candidate count {n_valid}")
+    nq = q_values.shape[0]
+    pad = (-n_valid) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+    qpad = (-nq) % block_q
+    if qpad:
+        q_values = jnp.pad(q_values, ((0, qpad), (0, 0)))
+        q_indices = jnp.pad(q_indices, ((0, qpad), (0, 0)))
+    out_v, out_i = fused_retrieve_sparse_q_pallas(
+        values,
+        indices,
+        inv_norms.astype(jnp.float32).reshape(-1, 1),
+        q_values,
+        q_indices,
+        h,
         n=n,
         n_valid=n_valid,
         interpret=not _on_tpu() if interpret is None else interpret,

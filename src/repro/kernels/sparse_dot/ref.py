@@ -12,6 +12,13 @@
                       (running buffer precedes the block in the merge, so
                       equal scores resolve to the lowest candidate id,
                       exactly like a global ``lax.top_k``).
+``retrieve_sparse_q_ref`` — sparse-query generation: takes (Q, kq)
+                      (values, indices) query codes and densifies at most
+                      one ≤q_chunk query slab at a time (row-wise
+                      scatter-add, identical to ``sparse.densify``) before
+                      streaming the same chunked score+select.  CPU mirror
+                      of ``fused_retrieve_sparse_q_pallas``: a full (Q, h)
+                      dense query matrix never exists.
 """
 from __future__ import annotations
 
@@ -97,3 +104,60 @@ def retrieve_ref(
 
     (best_v, best_i), _ = jax.lax.scan(step, init, (vals_b, idx_b, inv_b, ids_b))
     return best_v, best_i
+
+
+def _densify_rows(q_values: jax.Array, q_indices: jax.Array, h: int) -> jax.Array:
+    """(Q, kq) sparse codes -> (Q, h) dense — the same row-wise scatter-add
+    as ``repro.core.sparse.densify`` (duplicate indices sum), inlined here
+    so the kernel package stays import-cycle-free with repro.core."""
+
+    def one_row(vals, idx):
+        return jnp.zeros((h,), dtype=vals.dtype).at[idx].add(vals)
+
+    return jax.vmap(one_row)(q_values, q_indices)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "q_chunk")
+)
+def retrieve_sparse_q_ref(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q_values: jax.Array,
+    q_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse-query chunked streaming top-n -> ((Q, n) scores, (Q, n) ids).
+
+    values (N, k), indices (N, k) i32, inv_norms (N,), q_values (Q, kq) +
+    q_indices (Q, kq) i32 query codes over [0, h).  Bit-identical to
+    ``retrieve_ref(values, indices, inv_norms, densify(q), n=n)`` — the
+    densification happens one ≤q_chunk slab at a time inside the query
+    chunking, so the dense transient is (min(Q, q_chunk), h), mirroring the
+    Pallas kernel's VMEM-only panel.
+    """
+    nq = q_values.shape[0]
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+        qv = jnp.pad(q_values, ((0, qpad), (0, 0))) if qpad else q_values
+        qi = jnp.pad(q_indices, ((0, qpad), (0, 0))) if qpad else q_indices
+        chunks_v = qv.reshape(-1, q_chunk, qv.shape[-1])
+        chunks_i = qi.reshape(-1, q_chunk, qi.shape[-1])
+        bv, bi = jax.lax.map(
+            lambda c: retrieve_sparse_q_ref(
+                values, indices, inv_norms, c[0], c[1], h,
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            (chunks_v, chunks_i),
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    q_dense = _densify_rows(q_values, q_indices, h)
+    return retrieve_ref(
+        values, indices, inv_norms, q_dense,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )

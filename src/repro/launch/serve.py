@@ -2,19 +2,26 @@
 runnable service loop.
 
 Builds a compressed index (CompresSAE codes + norms) over a catalog, then
-serves batched retrieval requests through the fused score+select path
-(``repro.core.retrieve``) in either mode:
-  * sparse         — direct sparse-space cosine (fast path)
-  * reconstructed  — kernel-trick scoring (high-fidelity path)
+constructs a ``repro.serving.RetrievalEngine`` — ONE object owning
+(params, index, mode, backend, mesh) — and serves batched requests through
+``engine.retrieve_dense(x, n)``: raw dense embeddings in, top-n out, the
+whole encode→score→select chain under a single jit with no dense-query or
+code round-trip through HBM (on TPU: fused_encode → fused_retrieve_sparse_q,
+only (Q, k) codes and (Q, n) results touch HBM).  Modes:
+  * sparse         — direct sparse-space cosine (fast path; sparse-query
+                     kernel, codes scored as-is)
+  * reconstructed  — kernel-trick scoring (high-fidelity path; dense
+                     z = W_decᵀ(W_dec s_q) folded into the query prep)
 and reports recall@n against exact dense retrieval plus latency stats,
-including which backend path (fused Pallas kernel vs chunked jnp) served.
+including which backend path (fused Pallas kernels vs chunked jnp) served.
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --requests 20
 
 Candidate-sharded serving (catalogs beyond one chip's HBM): ``--shards N``
-shards the index along the candidate axis of an N-way mesh and serves
-through ``distributed_retrieve`` (per-shard fused/ref retrieve + one small
-all-gather merge) — bit-identical results to single-device serving:
+shards the index along the candidate axis of an N-way mesh; the engine
+replicates the prepped query (sparse mode: just the (Q, k) codes) into the
+shard_map and merges per-shard top-n sets with one small all-gather —
+bit-identical results to single-device serving:
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --shards 4
 """
@@ -62,7 +69,6 @@ from repro.core import (
     build_index,
     encode,
     init_train_state,
-    retrieve,
     score_dense,
     top_n,
     train_step,
@@ -70,6 +76,7 @@ from repro.core import (
 from repro.core.retrieval import kernel_path
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
+from repro.serving import RetrievalEngine
 
 
 def main(argv=None):
@@ -123,20 +130,16 @@ def main(argv=None):
     print(f"[index] dense {dense_bytes/2**20:.1f} MiB -> compressed "
           f"{sparse_bytes/2**20:.1f} MiB ({dense_bytes/sparse_bytes:.1f}x)")
 
-    @jax.jit
-    def serve(q):
-        q_codes = encode(state.params, q, cfg.k)
-        return retrieve(
-            index, q_codes, args.topn,
-            mode=args.mode, params=state.params, use_kernel=use_kernel,
-            mesh=mesh,
-        )
+    engine = RetrievalEngine(
+        state.params, index,
+        mode=args.mode, use_kernel=use_kernel, mesh=mesh,
+    )
 
     lat, recalls = [], []
     for r in range(args.requests):
         q = clustered_embeddings(jax.random.PRNGKey(1000 + r), args.batch, d=cfg.d)
         t0 = time.time()
-        vals, ids = serve(q)
+        vals, ids = engine.retrieve_dense(q, args.topn)
         jax.block_until_ready(ids)
         lat.append(time.time() - t0)
         _, true_ids = top_n(score_dense(catalog, q), args.topn)
@@ -146,10 +149,18 @@ def main(argv=None):
         )
         recalls.append(hits / true_ids.size)
     lat_ms = np.array(lat[1:]) * 1e3  # drop compile step
-    print(f"[serve] mode={args.mode} path={path} shards={args.shards} "
-          f"recall@{args.topn} {np.mean(recalls):.3f} | "
-          f"latency p50 {np.percentile(lat_ms, 50):.1f} ms "
-          f"p99 {np.percentile(lat_ms, 99):.1f} ms over {args.requests} requests")
+    prefix = (f"[serve] mode={args.mode} path={path} shards={args.shards} "
+              f"recall@{args.topn} {np.mean(recalls):.3f} | ")
+    if lat_ms.size:
+        print(prefix +
+              f"latency p50 {np.percentile(lat_ms, 50):.1f} ms "
+              f"p99 {np.percentile(lat_ms, 99):.1f} ms over {args.requests} requests")
+    else:
+        # a single request is all compile: percentiles over zero steady-state
+        # samples would raise — report the compile+first-request time instead
+        print(prefix +
+              f"compile+first-request {lat[0] * 1e3:.1f} ms "
+              "(1 request; no steady-state latency percentiles)")
     return 0
 
 

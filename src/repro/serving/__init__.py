@@ -1,0 +1,15 @@
+from repro.serving.engine import (
+    PreppedQuery,
+    RetrievalEngine,
+    mode_inv_norms,
+    prep_query,
+    retrieve_prepped,
+)
+
+__all__ = [
+    "RetrievalEngine",
+    "PreppedQuery",
+    "prep_query",
+    "retrieve_prepped",
+    "mode_inv_norms",
+]

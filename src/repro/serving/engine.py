@@ -1,0 +1,268 @@
+"""End-to-end dense-query serving engine (ISSUE 3 tentpole).
+
+``RetrievalEngine`` is the serving API as an object with a lifecycle: it
+owns ``(params, index, mode, use_kernel, mesh)`` at construction and
+exposes
+
+    engine.retrieve_dense(x, n)   # raw dense embeddings in, (scores, ids) out
+
+with **no SparseCodes→dense-query round-trip through HBM**.  On the TPU
+kernel path a request flows
+
+    fused_encode  →  fused_retrieve_sparse_q
+
+so only the (Q, k) query codes and the (Q, n) results ever touch HBM: the
+encoder's abs-top-k epilogue stays in VMEM (no (B, h) pre-activations) and
+the retrieval kernel densifies the query panel into VMEM scratch instead
+of reading a dense (Q, h) matrix.  The chunked-jnp path mirrors the same
+contract on CPU (``sae.encode`` + ``retrieve_sparse_q_ref``) and is
+bit-identical to the composed ``encode()`` + ``retrieve()`` pipeline.
+
+The per-request data flow is factored into two functional pieces that the
+older call-sites (``core.retrieval.retrieve``,
+``distributed.retrieve.distributed_retrieve``) now wrap:
+
+``prep_query(index, q, mode, params)``
+    -> ``PreppedQuery``: the mode's query representation + ‖q‖.  Sparse
+    mode keeps the (Q, k) codes as-is; reconstructed mode folds the
+    kernel-trick query z = W_decᵀ(W_dec s_q) (dense by construction) into
+    the prep, with ‖q‖ = ‖W_dec s_q‖.
+
+``retrieve_prepped(index, pq, n, use_fused=...)``
+    single-device streaming score+select over either representation.
+
+Distributed serving replicates the *prepped* query into the
+candidate-sharded shard_map (``distributed.retrieve
+.distributed_retrieve_prepped``) — for sparse mode that is the (Q, k)
+codes, an h/(2k)× smaller replication payload than the dense panel the
+previous generation broadcast.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sae
+from repro.core.retrieval import NORM_EPS, kernel_path
+from repro.core.types import SparseCodes
+from repro.kernels.fused_encode import fused_encode
+from repro.kernels.sparse_dot import (
+    fused_retrieve,
+    fused_retrieve_sparse_q,
+    retrieve_ref,
+    retrieve_sparse_q_ref,
+)
+
+
+class PreppedQuery(NamedTuple):
+    """A query batch in the representation its retrieval mode scores with.
+
+    Exactly one of (``values`` + ``indices``) or ``dense`` is set:
+    sparse mode carries the (Q?, k) codes straight through (the sparse-query
+    kernel densifies in VMEM); reconstructed mode carries the dense
+    z = W_decᵀ(W_dec s_q) — dense by construction, same shape economics as
+    the kernel-trick identity.  ``norm`` is the per-query cosine
+    denominator ‖q‖ (sparse: ‖s_q‖; reconstructed: ‖W_dec s_q‖).
+    """
+
+    values: Optional[jax.Array]
+    indices: Optional[jax.Array]
+    dense: Optional[jax.Array]
+    norm: jax.Array
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.values is not None
+
+
+def mode_inv_norms(index, mode: str) -> jax.Array:
+    """The index's reciprocal candidate norms for a scoring mode."""
+    if mode == "sparse":
+        inv = index.inv_sparse_norms
+        if inv is None:
+            inv = 1.0 / jnp.maximum(index.sparse_norms, NORM_EPS)
+        return inv
+    if mode == "reconstructed":
+        if index.recon_norms is None:
+            raise ValueError("index built without params; recon norms missing")
+        inv = index.inv_recon_norms
+        if inv is None:
+            inv = 1.0 / jnp.maximum(index.recon_norms, NORM_EPS)
+        return inv
+    raise ValueError(f"unknown retrieval mode: {mode!r}")
+
+
+def prep_query(
+    index,
+    q: SparseCodes,
+    mode: str,
+    params: Optional[sae.Params] = None,
+) -> PreppedQuery:
+    """Query codes -> the mode's scoring representation (see module doc)."""
+    if mode == "sparse":
+        return PreppedQuery(
+            values=q.values, indices=q.indices, dense=None,
+            norm=jnp.linalg.norm(q.values, axis=-1),
+        )
+    if mode == "reconstructed":
+        if params is None:
+            raise ValueError("mode='reconstructed' requires SAE params")
+        x_hat_q = sae.decode(params, q)                    # (Q?, d)
+        z = x_hat_q @ params["w_dec"].T                    # (Q?, h) == K s_q
+        return PreppedQuery(
+            values=None, indices=None, dense=z,
+            norm=jnp.linalg.norm(x_hat_q, axis=-1),
+        )
+    raise ValueError(f"unknown retrieval mode: {mode!r}")
+
+
+def retrieve_prepped(
+    index,
+    pq: PreppedQuery,
+    n: int,
+    *,
+    use_fused: bool,
+    inv_norms: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-device streaming score+select over a prepped query batch.
+
+    Dispatches the sparse-query kernel/ref pair when ``pq`` carries codes,
+    the dense-query pair when it carries z; folds ‖q‖ on the (Q, n) panel
+    only.  Bit-identical to densifying first (the kernels guarantee it).
+    The candidate inv norms default to the mode the prepped representation
+    implies (codes → sparse-space, dense z → reconstructed-space).
+    """
+    if inv_norms is None:
+        inv_norms = mode_inv_norms(
+            index, "sparse" if pq.is_sparse else "reconstructed"
+        )
+    squeeze = pq.norm.ndim == 0
+    values, indices = index.codes.values, index.codes.indices
+    if pq.is_sparse:
+        qv = pq.values[None] if squeeze else pq.values
+        qi = pq.indices[None] if squeeze else pq.indices
+        h = index.codes.dim
+        if use_fused:
+            vals, ids = fused_retrieve_sparse_q(
+                values, indices, inv_norms, qv, qi, h, n=n
+            )
+        else:
+            vals, ids = retrieve_sparse_q_ref(
+                values, indices, inv_norms, qv, qi, h, n=n
+            )
+    else:
+        qd = pq.dense[None] if squeeze else pq.dense
+        if use_fused:
+            vals, ids = fused_retrieve(values, indices, inv_norms, qd, n=n)
+        else:
+            vals, ids = retrieve_ref(values, indices, inv_norms, qd, n=n)
+    norm = pq.norm[None] if squeeze else pq.norm
+    scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
+    if squeeze:
+        scores, ids = scores[0], ids[0]
+    return scores, ids
+
+
+class RetrievalEngine:
+    """One object owns the serving lifecycle: params, index, mode, backend,
+    mesh.  Construct once, then serve ``retrieve_dense(x, n)`` — raw dense
+    embeddings in, top-n (cosine scores, candidate ids) out.
+
+    ``use_kernel``: "auto" (fused Pallas chain on TPU, chunked jnp
+    elsewhere) | True | False — same switch as ``core.retrieve``.
+    ``mesh``: a mesh with a ``shard_axis`` axis routes every request
+    through candidate-sharded distributed retrieval, with the prepped
+    query replicated (for sparse mode: just the (Q, k) codes).
+
+    ``retrieve_dense`` jit-compiles the whole request (encode → score →
+    select) once per distinct ``n`` and caches the executable, so steady
+    -state serving is a single dispatch.
+    """
+
+    def __init__(
+        self,
+        params: Optional[sae.Params],
+        index,
+        *,
+        mode: str = "sparse",
+        use_kernel="auto",
+        mesh=None,
+        shard_axis: str = "cand",
+        k: Optional[int] = None,
+    ):
+        if mode not in ("sparse", "reconstructed"):
+            raise ValueError(f"unknown retrieval mode: {mode!r}")
+        if mode == "reconstructed":
+            if params is None:
+                raise ValueError("mode='reconstructed' requires SAE params")
+            if index.recon_norms is None:
+                raise ValueError(
+                    "index built without params; recon norms missing"
+                )
+        self.params = params
+        self.index = index
+        self.mode = mode
+        self.use_kernel = use_kernel
+        self.use_fused = kernel_path(use_kernel)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.k = index.codes.k if k is None else k
+        self._inv_norms = mode_inv_norms(index, mode)
+        self._serve_cache: dict[int, callable] = {}
+
+    # ---------------------------------------------------------- request flow
+    def encode_queries(self, x: jax.Array) -> SparseCodes:
+        """Dense (Q?, d) embeddings -> fixed-k query codes.  Kernel path:
+        ``fused_encode`` (abs-top-k epilogue in VMEM, no (Q, h)
+        pre-activations in HBM); jnp path: ``sae.encode``."""
+        if self.params is None:
+            raise ValueError("encoding queries requires SAE params")
+        if self.use_fused:
+            return fused_encode(
+                x, self.params["w_enc"], self.params["b_enc"], self.k
+            )
+        return sae.encode(self.params, x, self.k)
+
+    def prep_query(self, q: SparseCodes) -> PreppedQuery:
+        return prep_query(self.index, q, self.mode, self.params)
+
+    def retrieve_codes(
+        self, q: SparseCodes, n: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Serve a request whose queries are already compressed codes."""
+        if n > self.index.codes.n:
+            raise ValueError(
+                f"top-n {n} exceeds candidate count {self.index.codes.n}"
+            )
+        pq = self.prep_query(q)
+        if self.mesh is not None:
+            from repro.distributed.retrieve import distributed_retrieve_prepped
+
+            return distributed_retrieve_prepped(
+                self.index, pq, n,
+                mesh=self.mesh, axis_name=self.shard_axis,
+                use_fused=self.use_fused, inv_norms=self._inv_norms,
+            )
+        return retrieve_prepped(
+            self.index, pq, n,
+            use_fused=self.use_fused, inv_norms=self._inv_norms,
+        )
+
+    def retrieve_dense(
+        self, x: jax.Array, n: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """The end-to-end request: dense embeddings in, top-n out, one jit."""
+        squeeze = x.ndim == 1
+        fn = self._serve_cache.get(n)
+        if fn is None:
+            def _serve(xb):
+                return self.retrieve_codes(self.encode_queries(xb), n)
+
+            fn = jax.jit(_serve)
+            self._serve_cache[n] = fn
+        scores, ids = fn(x[None] if squeeze else x)
+        if squeeze:
+            scores, ids = scores[0], ids[0]
+        return scores, ids

@@ -42,6 +42,9 @@ def test_benchmarks_smoke_writes_perf_record(forced_device_count):
     records = json.loads(bench.read_text())
     by_name = {r["name"]: r for r in records}
     assert "retrieval_sparse" in by_name
+    # ISSUE 3: the serving-engine whole-request row (dense embeddings in,
+    # encode folded into the kernel chain) is part of the record schema
+    assert "retrieval_e2e_dense" in by_name
     # record schema: every row carries the backend path and shard count
     for r in records:
         assert {"name", "us_per_call", "recall", "path", "shards"} <= set(r), r

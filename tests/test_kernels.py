@@ -13,8 +13,16 @@ from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.fused_encode.ops import fused_encode
 from repro.kernels.fused_encode.ref import fused_encode_ref
-from repro.kernels.sparse_dot.ops import fused_retrieve, sparse_dot
-from repro.kernels.sparse_dot.ref import retrieve_ref, sparse_dot_ref
+from repro.kernels.sparse_dot.ops import (
+    fused_retrieve,
+    fused_retrieve_sparse_q,
+    sparse_dot,
+)
+from repro.kernels.sparse_dot.ref import (
+    retrieve_ref,
+    retrieve_sparse_q_ref,
+    sparse_dot_ref,
+)
 from repro.kernels.topk_mask.ops import topk_mask
 from repro.kernels.topk_mask.ref import topk_mask_ref
 
@@ -125,6 +133,100 @@ def test_fused_retrieve_all_negative_scores_exclude_padding():
     inv = jnp.ones((130,), jnp.float32)
     _, ids = fused_retrieve(vals, idx, inv, q, n=20)
     assert (np.asarray(ids) < 130).all()
+
+
+# ---------------------------------------------------- fused_retrieve_sparse_q
+def _sparse_q_case(n, q, kq, h, seed, idx_hi=None):
+    """Candidate codes + SPARSE query codes.  ``idx_hi`` < h concentrates
+    query indices to force duplicate indices within code rows."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    vals = jax.random.normal(ks[0], (n, kq), jnp.float32)
+    idx = jax.random.randint(ks[1], (n, kq), 0, h, dtype=jnp.int32)
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(vals, axis=-1), 1e-8)
+    qv = jax.random.normal(ks[2], (q, kq), jnp.float32)
+    qi = jax.random.randint(ks[3], (q, kq), 0, idx_hi or h, dtype=jnp.int32)
+    return vals, idx, inv, qv, qi
+
+
+def _densify(qv, qi, h):
+    def one(v, i):
+        return jnp.zeros((h,), v.dtype).at[i].add(v)
+
+    return jax.vmap(one)(qv, qi)
+
+
+# ragged N (candidate-tile padding), ragged Q (query-panel padding), and
+# Q > the ref path's q_chunk (exercises its chunked densify)
+@pytest.mark.parametrize("n,q,topn", [(64, 9, 64), (256, 1, 5),
+                                      (1000, 13, 10), (4097, 5, 20),
+                                      (300, 150, 7)])
+def test_sparse_q_bit_identical_to_densify_composed(n, q, topn):
+    """The sparse-query generation (kernel AND ref) must be BIT-identical —
+    scores, ids, ties — to densify + the dense-query path it replaces."""
+    vals, idx, inv, qv, qi = _sparse_q_case(n, q, 8, 256, seed=n + q)
+    qd = _densify(qv, qi, 256)
+    want_v, want_i = fused_retrieve(vals, idx, inv, qd, n=topn)
+    got_v, got_i = fused_retrieve_sparse_q(vals, idx, inv, qv, qi, 256, n=topn)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    rwant_v, rwant_i = retrieve_ref(vals, idx, inv, qd, n=topn)
+    rgot_v, rgot_i = retrieve_sparse_q_ref(vals, idx, inv, qv, qi, 256, n=topn)
+    np.testing.assert_array_equal(np.asarray(rgot_v), np.asarray(rwant_v))
+    np.testing.assert_array_equal(np.asarray(rgot_i), np.asarray(rwant_i))
+
+
+def test_sparse_q_tied_scores_match_lax_topk():
+    # duplicated candidate rows -> exactly-tied scores across tile
+    # boundaries; the sparse-query paths must resolve them like lax.top_k
+    # (lowest candidate id wins), byte-for-byte with the dense-query paths
+    base_v, base_i, _, qv, qi = _sparse_q_case(40, 3, 4, 64, seed=7)
+    vals = jnp.tile(base_v, (8, 1))
+    idx = jnp.tile(base_i, (8, 1))
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(vals, axis=-1), 1e-8)
+    qd = _densify(qv, qi, 64)
+    want_v, want_i = jax.lax.top_k(sparse_dot_ref(vals, idx, qd) * inv[None], 17)
+    got_v, got_i = fused_retrieve_sparse_q(vals, idx, inv, qv, qi, 64, n=17,
+                                           block_n=64, block_q=2)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-6, atol=1e-7)
+    ref_v, ref_i = retrieve_sparse_q_ref(vals, idx, inv, qv, qi, 64, n=17,
+                                         block_n=96)
+    np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(want_i))
+
+
+def test_sparse_q_duplicate_indices_within_code_row():
+    # duplicate indices inside one query code row must contribute
+    # additively — and in the same accumulation order as sparse.densify's
+    # scatter-add, so results stay bit-identical to the composed path
+    vals = jnp.array([[1.0, 2.0], [3.0, 0.5], [0.25, 4.0]])
+    idx = jnp.array([[5, 7], [5, 5], [7, 2]], dtype=jnp.int32)
+    inv = jnp.ones((3,), jnp.float32)
+    qv = jnp.array([[0.3, 0.7, 0.11]])          # all three hit column 5
+    qi = jnp.array([[5, 5, 5]], dtype=jnp.int32)
+    qd = _densify(qv, qi, 16)
+    want_v, want_i = fused_retrieve(vals, idx, inv, qd, n=3)
+    got_v, got_i = fused_retrieve_sparse_q(vals, idx, inv, qv, qi, 16, n=3)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    rv, ri = retrieve_sparse_q_ref(vals, idx, inv, qv, qi, 16, n=3)
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(want_i))
+    # heavy random duplication across many rows
+    vals, idx, inv, qv, qi = _sparse_q_case(200, 11, 6, 128, seed=3, idx_hi=9)
+    qd = _densify(qv, qi, 128)
+    want = fused_retrieve(vals, idx, inv, qd, n=9)
+    got = fused_retrieve_sparse_q(vals, idx, inv, qv, qi, 128, n=9)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_sparse_q_single_query_and_validation():
+    vals, idx, inv, qv, qi = _sparse_q_case(96, 1, 8, 128, seed=11)
+    v, i = fused_retrieve_sparse_q(vals, idx, inv, qv[0], qi[0], 128, n=96)
+    assert v.shape == (96,) and i.shape == (96,)
+    assert sorted(np.asarray(i).tolist()) == list(range(96))
+    with pytest.raises(ValueError):
+        fused_retrieve_sparse_q(vals, idx, inv, qv, qi, 128, n=97)
 
 
 # ------------------------------------------------------------------ topk_mask

@@ -1,0 +1,132 @@
+"""RetrievalEngine (ISSUE 3) == the composed ``encode()`` + ``retrieve()``
+pipeline — BIT-identical scores, ids, and tie resolution, for both modes,
+both backends (fused kernels in interpret mode / chunked jnp), and 1/2/4-way
+candidate-sharded meshes (on the conftest-forced multi-device CPU topology).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SAEConfig, build_index, encode, init_params, retrieve
+from repro.core.types import SparseCodes
+from repro.launch.mesh import make_candidate_mesh
+from repro.serving import RetrievalEngine
+
+CFG = SAEConfig(d=32, h=128, k=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (310, CFG.d))
+    # duplicate a prefix onto the tail -> exactly tied scores, so the
+    # engine's tie resolution is exercised against the composed path's
+    corpus = jnp.concatenate([corpus, corpus[:17]])
+    queries = jax.random.normal(jax.random.PRNGKey(2), (9, CFG.d))
+    index = build_index(encode(params, corpus, CFG.k), params)
+    return params, index, queries
+
+
+def _assert_engine_matches_composed(params, index, x, n, mode, use_kernel,
+                                    mesh=None):
+    engine = RetrievalEngine(params, index, mode=mode, use_kernel=use_kernel,
+                             mesh=mesh)
+    got_v, got_i = engine.retrieve_dense(x, n)
+    want_v, want_i = retrieve(
+        index, encode(params, x, CFG.k), n,
+        mode=mode, params=params, use_kernel=use_kernel, mesh=mesh,
+    )
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    return engine
+
+
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_engine_matches_composed_path(setup, mode, use_kernel):
+    params, index, queries = setup
+    _assert_engine_matches_composed(params, index, queries, 25, mode,
+                                    use_kernel)
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_engine_matches_composed_sharded(setup, mode, shards,
+                                         forced_device_count):
+    if shards > forced_device_count:
+        pytest.skip(f"needs {shards} devices")
+    params, index, queries = setup
+    mesh = make_candidate_mesh(shards)
+    engine = _assert_engine_matches_composed(
+        params, index, queries, 20, mode, False, mesh=mesh
+    )
+    # and the sharded engine must equal the UNsharded engine bit-for-bit
+    single = RetrievalEngine(params, index, mode=mode, use_kernel=False)
+    sv, si = single.retrieve_dense(queries, 20)
+    gv, gi = engine.retrieve_dense(queries, 20)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(si))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(sv))
+
+
+def test_engine_single_dense_query(setup):
+    params, index, queries = setup
+    engine = RetrievalEngine(params, index, use_kernel=False)
+    v, i = engine.retrieve_dense(queries[0], 5)
+    assert v.shape == (5,) and i.shape == (5,)
+    bv, bi = engine.retrieve_dense(queries[:1], 5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(bi[0]))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(bv[0]))
+
+
+def test_engine_retrieve_codes_matches_retrieve(setup):
+    params, index, queries = setup
+    q_codes = encode(params, queries, CFG.k)
+    for mode in ("sparse", "reconstructed"):
+        engine = RetrievalEngine(params, index, mode=mode, use_kernel=False)
+        gv, gi = engine.retrieve_codes(q_codes, 12)
+        wv, wi = retrieve(index, q_codes, 12, mode=mode, params=params,
+                          use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+
+
+def test_engine_jit_cache_reuse(setup):
+    params, index, queries = setup
+    engine = RetrievalEngine(params, index, use_kernel=False)
+    engine.retrieve_dense(queries, 7)
+    fn = engine._serve_cache[7]
+    engine.retrieve_dense(queries, 7)
+    assert engine._serve_cache[7] is fn          # same executable reused
+    engine.retrieve_dense(queries, 8)
+    assert set(engine._serve_cache) == {7, 8}    # one entry per distinct n
+
+
+def test_engine_validations(setup):
+    params, index, queries = setup
+    with pytest.raises(ValueError, match="unknown retrieval mode"):
+        RetrievalEngine(params, index, mode="bogus")
+    with pytest.raises(ValueError, match="requires SAE params"):
+        RetrievalEngine(None, index, mode="reconstructed")
+    index_no_params = build_index(index.codes)   # no decoder norms
+    with pytest.raises(ValueError, match="recon norms missing"):
+        RetrievalEngine(params, index_no_params, mode="reconstructed")
+    engine = RetrievalEngine(params, index, use_kernel=False)
+    with pytest.raises(ValueError, match="exceeds candidate count"):
+        engine.retrieve_dense(queries, index.codes.n + 1)
+    with pytest.raises(ValueError, match="requires SAE params"):
+        RetrievalEngine(None, index, use_kernel=False).retrieve_dense(
+            queries, 3
+        )
+
+
+def test_engine_codes_only_without_params(setup):
+    """Sparse-mode retrieval over pre-encoded codes needs no params at all."""
+    params, index, queries = setup
+    q_codes = encode(params, queries, CFG.k)
+    engine = RetrievalEngine(None, index, use_kernel=False)
+    gv, gi = engine.retrieve_codes(q_codes, 6)
+    wv, wi = retrieve(index, q_codes, 6, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
