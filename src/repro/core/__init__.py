@@ -24,14 +24,21 @@ from repro.core.sae import (
 from repro.core.losses import compressae_loss, cosine_distance
 from repro.core.train import TrainState, init_train_state, train_step, eval_step
 from repro.core.retrieval import (
+    QuantizedIndex,
     SparseIndex,
     build_index,
+    dequantize_index,
     retrieve,
     score_sparse,
     score_reconstructed,
     score_dense,
     sparse_dot_dense_query,
     top_n,
+)
+from repro.core.quantized_codes import (
+    QuantizedCodes,
+    dequantize_codes,
+    quantize_codes,
 )
 from repro.core import sparse, baselines
 
@@ -41,6 +48,8 @@ __all__ = [
     "reconstruct", "kernel_matrix", "normalize_decoder", "normalize_input",
     "preactivations", "compressae_loss", "cosine_distance", "TrainState",
     "init_train_state", "train_step", "eval_step", "SparseIndex",
+    "QuantizedIndex", "QuantizedCodes", "quantize_codes", "dequantize_codes",
+    "dequantize_index",
     "build_index", "retrieve", "score_sparse", "score_reconstructed", "score_dense",
     "sparse_dot_dense_query", "top_n", "sparse", "baselines",
 ]

@@ -10,10 +10,27 @@ quantization of VALUES costs little; INDICES fit int16 whenever h < 65536
     paper:      k·(4 + 4)            = 8k      (12.0x vs 768-d fp32)
     compound:   k·(1 + 2) + 4(scale) = 3k + 4  (~31x at k = 32)
 
-Retrieval runs on the dequantized values with the same scatter-query SpMV;
-the index build is unchanged.  Measured recall impact: see
+Since ISSUE 4 the quantized format is a first-class *serving* format:
+``core.retrieval.build_index(..., quantize=True)`` produces a
+``QuantizedIndex`` whose arrays stay int8/int16 in HBM, and the fused
+retrieval kernels (``kernels/sparse_dot.fused_retrieve_quantized`` and
+its sparse-query variant) dequantize candidate tiles in VMEM scratch —
+the serving path never materializes an fp32 copy of the index.
+Dequantized-space scoring is exactly what serving computes, so retrieval
+from the quantized index is bit-identical to dequantize-then-retrieve on
+the same quantized values (quantization error is a build-time choice,
+never a serving-path one).  Measured recall impact: see
 benchmarks/quantized_codes_bench.py (≤1 recall point at int8 in our
 offline proxy).
+
+Storage note on int16 indices: signed int16 only *represents* [−32768,
+32767], but it *stores* any 16-bit pattern — indices in [32768, 65536)
+wrap to negative two's-complement values on the way in and are recovered
+exactly by ``widen_indices`` (astype int32, mask the low 16 bits) on the
+way out.  The kernel package carries one identical twin of this helper
+(``kernels.sparse_dot.ref._widen_idx``, shared by the jnp refs and the
+Pallas VMEM dequant) so it stays import-cycle-free with repro.core; any
+change to the wraparound scheme must update both.
 """
 from __future__ import annotations
 
@@ -27,15 +44,37 @@ from repro.core.types import SparseCodes
 
 class QuantizedCodes(NamedTuple):
     q_values: jax.Array    # (N, k) int8
-    indices: jax.Array     # (N, k) int16 (h < 65536) or int32
+    indices: jax.Array     # (N, k) int16 bit pattern (h < 65536) or int32
     scales: jax.Array      # (N,) float32 per-row symmetric scale
     dim: int
 
     @property
+    def n(self) -> int:
+        return self.q_values.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.q_values.shape[1]
+
+    @property
     def nbytes_logical(self) -> int:
+        """Storage bytes of the compound-compressed representation
+        (values + indices + per-row scales): k·(1 + idx_bytes) + 4 per row."""
         return (self.q_values.size * 1
                 + self.indices.size * self.indices.dtype.itemsize
                 + self.scales.size * 4)
+
+
+def widen_indices(indices: jax.Array) -> jax.Array:
+    """int16-stored (possibly wrapped) column indices -> exact int32.
+
+    int16 holds the low 16 bits of the original index; masking after the
+    widening undoes the two's-complement wrap for indices >= 32768.
+    int32 indices pass through unchanged.
+    """
+    if indices.dtype == jnp.int32:
+        return indices
+    return jnp.bitwise_and(indices.astype(jnp.int32), 0xFFFF)
 
 
 def quantize_codes(codes: SparseCodes) -> QuantizedCodes:
@@ -54,7 +93,7 @@ def quantize_codes(codes: SparseCodes) -> QuantizedCodes:
 
 def dequantize_codes(q: QuantizedCodes) -> SparseCodes:
     vals = q.q_values.astype(jnp.float32) * q.scales[:, None]
-    return SparseCodes(values=vals, indices=q.indices.astype(jnp.int32),
+    return SparseCodes(values=vals, indices=widen_indices(q.indices),
                        dim=q.dim)
 
 

@@ -6,7 +6,11 @@ over a candidate-sharded mesh: each shard holds only its slice of the
 (k-sparse) codes + norms — the compression is exactly what makes the
 shards cheap — scores it with the streaming score+select primitive, and
 the per-shard top-n sets are merged with one small all-gather
-(``core.retrieval.sharded_top_n``).
+(``core.retrieval.sharded_top_n``).  A ``QuantizedIndex`` (ISSUE 4)
+shards exactly the same way, except the arrays living on each shard are
+the int8/int16 compound-compressed ones (+ fp32 scales) — the per-shard
+HBM footprint keeps the full compression ratio, and the per-shard
+retrieve runs the quantized kernel generation (VMEM dequant).
 
 The serving engine (``repro.serving.engine.RetrievalEngine``) enters
 through ``distributed_retrieve_prepped``: the query is encoded and
@@ -46,10 +50,15 @@ import jax.numpy as jnp
 from repro import compat
 from repro.compat import P
 from repro.core import sae
+from repro.core.quantized_codes import QuantizedCodes
 from repro.core.types import SparseCodes
 from repro.kernels.sparse_dot import (
     fused_retrieve,
+    fused_retrieve_quantized,
+    fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
+    retrieve_quantized_ref,
+    retrieve_quantized_sparse_q_ref,
     retrieve_ref,
     retrieve_sparse_q_ref,
 )
@@ -97,12 +106,23 @@ def distributed_retrieve_prepped(
     squeeze = pq.norm.ndim == 0
     h = index.codes.dim
 
-    values, indices = index.codes.values, index.codes.indices
+    # a QuantizedIndex shards its quantized arrays AS-IS along the 'cand'
+    # axis — each shard holds int8 values + int16/int32 indices + scales,
+    # so the per-shard HBM cost keeps the compound-compression ratio
+    quantized = isinstance(index.codes, QuantizedCodes)
+    if quantized:
+        values, indices = index.codes.q_values, index.codes.indices
+        scales = index.codes.scales
+    else:
+        values, indices = index.codes.values, index.codes.indices
+        scales = None
     pad = (-N) % n_shards
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
         indices = jnp.pad(indices, ((0, pad), (0, 0)))
         inv_norms = jnp.pad(inv_norms, (0, pad))
+        if quantized:
+            scales = jnp.pad(scales, (0, pad))
     n_loc_cand = (N + pad) // n_shards
     # widen the local selection by `pad`: the zero rows padded onto the last
     # shard score exactly 0 (0-values · anything, times inv_norm 0) and may
@@ -122,31 +142,41 @@ def distributed_retrieve_prepped(
             gid = jnp.pad(gid, ((0, 0), (0, n - n_loc)), constant_values=N)
         return sharded_top_n(lv, gid, n, axis_name=axis_name)
 
+    # candidate-side shard_map operands: the index arrays in their serving
+    # dtypes (quantized: + per-row scales between indices and inv norms,
+    # matching the quantized kernel signatures), all sharded along 'cand'
+    cand_args = (values, indices) + ((scales,) if quantized else ())
+    cand_args += (inv_norms,)
+    cand_specs = (P(axis_name, None),) * 2
+    cand_specs += (P(axis_name),) * (2 if quantized else 1)
+
     if pq.is_sparse:
         qv = pq.values[None] if squeeze else pq.values
         qi = pq.indices[None] if squeeze else pq.indices
+        if quantized:
+            fn = (fused_retrieve_quantized_sparse_q if use_fused
+                  else retrieve_quantized_sparse_q_ref)
+        else:
+            fn = (fused_retrieve_sparse_q if use_fused
+                  else retrieve_sparse_q_ref)
 
-        def local(vals_l, idx_l, inv_l, qv_r, qi_r):
-            if use_fused:
-                lv, li = fused_retrieve_sparse_q(
-                    vals_l, idx_l, inv_l, qv_r, qi_r, h, n=n_loc
-                )
-            else:
-                lv, li = retrieve_sparse_q_ref(
-                    vals_l, idx_l, inv_l, qv_r, qi_r, h, n=n_loc
-                )
+        def local(*args):
+            *cand_l, qv_r, qi_r = args
+            lv, li = fn(*cand_l, qv_r, qi_r, h, n=n_loc)
             return _finish_local(lv, li)
 
         q_args = (qv, qi)
         q_specs = (P(None, None), P(None, None))
     else:
         qd = pq.dense[None] if squeeze else pq.dense
+        if quantized:
+            fn = fused_retrieve_quantized if use_fused else retrieve_quantized_ref
+        else:
+            fn = fused_retrieve if use_fused else retrieve_ref
 
-        def local(vals_l, idx_l, inv_l, qd_r):
-            if use_fused:
-                lv, li = fused_retrieve(vals_l, idx_l, inv_l, qd_r, n=n_loc)
-            else:
-                lv, li = retrieve_ref(vals_l, idx_l, inv_l, qd_r, n=n_loc)
+        def local(*args):
+            *cand_l, qd_r = args
+            lv, li = fn(*cand_l, qd_r, n=n_loc)
             return _finish_local(lv, li)
 
         q_args = (qd,)
@@ -156,13 +186,12 @@ def distributed_retrieve_prepped(
         vals, ids = compat.shard_map(
             local,
             mesh=mesh,
-            in_specs=(P(axis_name, None), P(axis_name, None), P(axis_name))
-            + q_specs,
+            in_specs=cand_specs + q_specs,
             out_specs=(P(None, None), P(None, None)),
             # outputs are replicated via the all_gather merge, which the
             # static replication checker cannot infer
             check=False,
-        )(values, indices, inv_norms, *q_args)
+        )(*cand_args, *q_args)
     norm = pq.norm[None] if squeeze else pq.norm
     scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
     if squeeze:

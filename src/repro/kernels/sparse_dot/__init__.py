@@ -1,9 +1,13 @@
 from repro.kernels.sparse_dot.ops import (
     fused_retrieve,
+    fused_retrieve_quantized,
+    fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
     sparse_dot,
 )
 from repro.kernels.sparse_dot.ref import (
+    retrieve_quantized_ref,
+    retrieve_quantized_sparse_q_ref,
     retrieve_ref,
     retrieve_sparse_q_ref,
     sparse_dot_ref,
@@ -16,4 +20,8 @@ __all__ = [
     "retrieve_ref",
     "fused_retrieve_sparse_q",
     "retrieve_sparse_q_ref",
+    "fused_retrieve_quantized",
+    "retrieve_quantized_ref",
+    "fused_retrieve_quantized_sparse_q",
+    "retrieve_quantized_sparse_q_ref",
 ]

@@ -37,6 +37,25 @@ Generation 2 — ``fused_retrieve_pallas`` (score + select, streaming top-n):
     kernel via the static true row count, so they can never surface even
     when all real scores are negative.
 
+Generation 4 — ``fused_retrieve_quantized_pallas`` (+ sparse-query variant):
+  * The candidate index streams from HBM in its *quantized* storage dtypes
+    — (BLOCK_N, k) int8 values, (BLOCK_N, k) int16/int32 indices, and a
+    (BLOCK_N, 1) f32 per-row scale column alongside the reciprocal norms —
+    and is dequantized in VMEM (``_dequant_tile``: int8→f32 × scale; int16
+    indices widened with the low-16-bit mask that undoes two's-complement
+    wrap for h ∈ [32768, 65536)) before the shared scoring + streaming
+    top-n epilogue.  Candidate HBM traffic per tile drops from 8k+4 to
+    3k+8 bytes/row (~2.6x at k=32) — the compound-compressed format is
+    what lives in HBM, not an fp32 copy.
+  * Dequantization reproduces ``quantize_codes``'s dequant op-for-op
+    (int8→f32 exact, one f32 multiply per element), so the kernel is
+    bit-identical — scores, ids, ties — to dequantize-then-
+    ``fused_retrieve`` on the same quantized values.  Quantization error
+    is a build-time choice, never a serving-path one.
+  * ``fused_retrieve_quantized_sparse_q_pallas`` composes generation 3's
+    VMEM query densification with the quantized candidate stream: neither
+    a dense query panel nor an fp32 index ever exists in HBM.
+
 Generation 3 — ``fused_retrieve_sparse_q_pallas`` (sparse queries in):
   * The scatter-query SpMV from *both* sides: the query panel arrives as
     (BLOCK_Q, kq) (values, indices) sparse codes — the ``fused_encode``
@@ -78,6 +97,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sparse_dot.ref import _widen_idx
 
 BLOCK_N = 256  # candidate rows per tile (8-sublane multiple)
 BLOCK_Q = 8    # query rows per VMEM-resident panel
@@ -342,4 +363,161 @@ def fused_retrieve_sparse_q_pallas(
         scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
         interpret=interpret,
     )(values, indices, inv_norms, q_values.astype(jnp.float32), q_indices)
+    return out_v, out_i
+
+
+def _dequant_tile(q_vals, idx, scales):
+    """Quantized candidate tile -> (f32 values, i32 indices), in VMEM.
+
+    q_vals (BLOCK_N, k) int8, idx (BLOCK_N, k) int16/int32, scales
+    (BLOCK_N, 1) f32.  The value dequant is the same two ops as
+    ``quantize_codes``'s offline dequant (int8→f32 exact, one f32 multiply),
+    so downstream scores are bit-identical to scoring pre-dequantized
+    values.  int16 indices are the low 16 bits of the original index
+    (two's-complement wrapped for h >= 32768): the shared widen recovers
+    them exactly.
+    """
+    return q_vals.astype(jnp.float32) * scales, _widen_idx(idx)
+
+
+def _make_retrieve_quantized_kernel(n: int, n_valid: int, block_n: int):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, q_ref,
+               out_v_ref, out_i_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+
+        vals, idx = _dequant_tile(qvals_ref[...], idx_ref[...], scale_ref[...])
+        scores = _score_tile(vals, idx, q_ref[...])
+        _mask_fold_merge(scores, inv_ref[...], nb, out_v_ref, out_i_ref,
+                         n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "n_valid", "interpret", "block_n", "block_q")
+)
+def fused_retrieve_quantized_pallas(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized-index fused score+select: (Q, n) best (scores, ids).
+
+    q_values (N, k) int8, indices (N, k) int16/int32, scales (N, 1) f32
+    per-row dequant scales, inv_norms (N, 1) f32, q (Q, h) f32.  The index
+    streams in its quantized dtypes; dequantization happens per tile in
+    VMEM (``_dequant_tile``).  Bit-identical to ``fused_retrieve_pallas``
+    over the dequantized arrays.
+    """
+    N, k = q_values.shape
+    nq, h = q.shape
+    grid = (nq // block_q, N // block_n)  # candidate axis innermost
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_quantized_kernel(n, n_valid, block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, h), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_values, indices, scales, inv_norms, q.astype(jnp.float32))
+    return out_v, out_i
+
+
+def _make_retrieve_quantized_sparse_q_kernel(
+    n: int, n_valid: int, block_n: int, h: int
+):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, qv_ref, qi_ref,
+               out_v_ref, out_i_ref, panel_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            panel_ref[...] = _densify_panel(qv_ref[...], qi_ref[...], h)
+
+        vals, idx = _dequant_tile(qvals_ref[...], idx_ref[...], scale_ref[...])
+        scores = _score_tile(vals, idx, panel_ref[...])
+        _mask_fold_merge(scores, inv_ref[...], nb, out_v_ref, out_i_ref,
+                         n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "n", "n_valid", "interpret", "block_n", "block_q"),
+)
+def fused_retrieve_quantized_sparse_q_pallas(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized candidates × sparse query codes: the full-compression
+    serving kernel.  Candidate tiles stream int8/int16 and dequantize in
+    VMEM; the (Q, kq) query codes densify into the (block_q, h) VMEM
+    scratch panel (generation 3).  Neither an fp32 index nor a dense query
+    panel ever exists in HBM.  Bit-identical to
+    ``fused_retrieve_sparse_q_pallas`` over the dequantized arrays.
+    """
+    N, k = q_values.shape
+    nq = query_values.shape[0]
+    grid = (nq // block_q, N // block_n)  # candidate axis innermost
+    kq = query_values.shape[1]
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_quantized_sparse_q_kernel(n, n_valid, block_n, h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
+        interpret=interpret,
+    )(q_values, indices, scales, inv_norms,
+      query_values.astype(jnp.float32), query_indices)
     return out_v, out_i

@@ -16,6 +16,8 @@ from repro.kernels.sparse_dot.kernel import (
     BLOCK_N,
     BLOCK_Q,
     fused_retrieve_pallas,
+    fused_retrieve_quantized_pallas,
+    fused_retrieve_quantized_sparse_q_pallas,
     fused_retrieve_sparse_q_pallas,
     sparse_dot_pallas,
 )
@@ -58,6 +60,22 @@ def sparse_dot(
     return out[0] if squeeze else out
 
 
+def _pad_candidates(values, indices, inv_norms, block_n, scales=None):
+    """Zero-pad the candidate axis up to a tile multiple — the one padding
+    scheme every retrieve wrapper shares (fp32 and quantized alike).
+    Padded rows carry value/scale 0 and inv-norm 0, and are additionally
+    masked to -inf by global id (``n_valid``) inside the kernels."""
+    n_valid = values.shape[0]
+    pad = (-n_valid) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+        if scales is not None:
+            scales = jnp.pad(scales, (0, pad))
+    return values, indices, inv_norms, scales, n_valid
+
+
 @functools.partial(
     jax.jit, static_argnames=("n", "block_n", "block_q", "interpret")
 )
@@ -81,15 +99,12 @@ def fused_retrieve(
     squeeze = q.ndim == 1
     if squeeze:
         q = q[None]
-    n_valid, k = values.shape
-    if n > n_valid:
-        raise ValueError(f"top-n {n} exceeds candidate count {n_valid}")
+    if n > values.shape[0]:
+        raise ValueError(f"top-n {n} exceeds candidate count {values.shape[0]}")
     nq = q.shape[0]
-    pad = (-n_valid) % block_n
-    if pad:
-        values = jnp.pad(values, ((0, pad), (0, 0)))
-        indices = jnp.pad(indices, ((0, pad), (0, 0)))
-        inv_norms = jnp.pad(inv_norms, (0, pad))
+    values, indices, inv_norms, _, n_valid = _pad_candidates(
+        values, indices, inv_norms, block_n
+    )
     qpad = (-nq) % block_q
     if qpad:
         q = jnp.pad(q, ((0, qpad), (0, 0)))
@@ -135,15 +150,12 @@ def fused_retrieve_sparse_q(
     squeeze = q_values.ndim == 1
     if squeeze:
         q_values, q_indices = q_values[None], q_indices[None]
-    n_valid, k = values.shape
-    if n > n_valid:
-        raise ValueError(f"top-n {n} exceeds candidate count {n_valid}")
+    if n > values.shape[0]:
+        raise ValueError(f"top-n {n} exceeds candidate count {values.shape[0]}")
     nq = q_values.shape[0]
-    pad = (-n_valid) % block_n
-    if pad:
-        values = jnp.pad(values, ((0, pad), (0, 0)))
-        indices = jnp.pad(indices, ((0, pad), (0, 0)))
-        inv_norms = jnp.pad(inv_norms, (0, pad))
+    values, indices, inv_norms, _, n_valid = _pad_candidates(
+        values, indices, inv_norms, block_n
+    )
     qpad = (-nq) % block_q
     if qpad:
         q_values = jnp.pad(q_values, ((0, qpad), (0, 0)))
@@ -154,6 +166,118 @@ def fused_retrieve_sparse_q(
         inv_norms.astype(jnp.float32).reshape(-1, 1),
         q_values,
         q_indices,
+        h,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    out_v, out_i = out_v[:nq], out_i[:nq]
+    return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_quantized(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized-index fused score+select -> ((Q, n) scores, (Q, n) ids).
+
+    q_values (N, k) int8, indices (N, k) int16/int32, scales (N,) f32
+    per-row dequant scales, inv_norms (N,) f32, q (Q, h) or (h,) f32.
+    The index streams from HBM in its quantized dtypes and is dequantized
+    per tile in VMEM — bit-identical to
+    ``fused_retrieve(dequantize(q_values, scales), widen(indices), ...)``
+    without ever materializing that fp32 copy.
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    if n > q_values.shape[0]:
+        raise ValueError(
+            f"top-n {n} exceeds candidate count {q_values.shape[0]}"
+        )
+    nq = q.shape[0]
+    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
+        q_values, indices, inv_norms, block_n, scales
+    )
+    qpad = (-nq) % block_q
+    if qpad:
+        q = jnp.pad(q, ((0, qpad), (0, 0)))
+    out_v, out_i = fused_retrieve_quantized_pallas(
+        q_values,
+        indices,
+        scales.astype(jnp.float32).reshape(-1, 1),
+        inv_norms.astype(jnp.float32).reshape(-1, 1),
+        q,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    out_v, out_i = out_v[:nq], out_i[:nq]
+    return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_quantized_sparse_q(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized candidates × sparse query codes -> ((Q, n) scores, ids).
+
+    The full-compression serving kernel: candidate tiles stream int8/int16
+    and dequantize in VMEM, query codes densify into VMEM scratch.  Only
+    the (Q, kq) codes and (Q, n) results touch HBM on the query side, and
+    the index never exists in fp32.  Bit-identical to
+    ``fused_retrieve_sparse_q`` over the dequantized arrays.
+    """
+    squeeze = query_values.ndim == 1
+    if squeeze:
+        query_values, query_indices = query_values[None], query_indices[None]
+    if n > q_values.shape[0]:
+        raise ValueError(
+            f"top-n {n} exceeds candidate count {q_values.shape[0]}"
+        )
+    nq = query_values.shape[0]
+    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
+        q_values, indices, inv_norms, block_n, scales
+    )
+    qpad = (-nq) % block_q
+    if qpad:
+        query_values = jnp.pad(query_values, ((0, qpad), (0, 0)))
+        query_indices = jnp.pad(query_indices, ((0, qpad), (0, 0)))
+    out_v, out_i = fused_retrieve_quantized_sparse_q_pallas(
+        q_values,
+        indices,
+        scales.astype(jnp.float32).reshape(-1, 1),
+        inv_norms.astype(jnp.float32).reshape(-1, 1),
+        query_values,
+        query_indices,
         h,
         n=n,
         n_valid=n_valid,

@@ -19,6 +19,19 @@
                       streaming the same chunked score+select.  CPU mirror
                       of ``fused_retrieve_sparse_q_pallas``: a full (Q, h)
                       dense query matrix never exists.
+``retrieve_quantized_ref`` / ``retrieve_quantized_sparse_q_ref`` —
+                      quantized-index generation: candidate blocks arrive
+                      as int8 values + int16/int32 indices + f32 per-row
+                      scales and are dequantized one (block_n, k) block at
+                      a time inside the scan (same two ops as the offline
+                      dequant, plus the low-16-bit index widen), so an
+                      fp32 copy of the index never exists — the CPU mirror
+                      of ``fused_retrieve_quantized_pallas``'s VMEM
+                      dequant, bit-identical to dequantize-then-
+                      ``retrieve_ref`` on the same quantized values.
+
+All four streaming variants share one chunked impl (``_retrieve_chunked``);
+the fp32 and quantized paths differ only in the per-block dequant step.
 """
 from __future__ import annotations
 
@@ -36,6 +49,92 @@ def sparse_dot_ref(values: jax.Array, indices: jax.Array, q: jax.Array) -> jax.A
     """
     gathered = q[:, indices]                      # (Q, N, k)
     return jnp.sum(gathered * values[None].astype(q.dtype), axis=-1)
+
+
+def _widen_idx(indices: jax.Array) -> jax.Array:
+    """int16-stored (possibly two's-complement-wrapped) indices -> exact
+    int32; int32 passes through.  The kernel-package twin of
+    ``core.quantized_codes.widen_indices`` (kept local so the kernels stay
+    import-cycle-free with repro.core, like ``_densify_rows``); used by
+    both the jnp refs and the Pallas ``_dequant_tile``."""
+    if indices.dtype == jnp.int32:
+        return indices
+    return jnp.bitwise_and(indices.astype(jnp.int32), 0xFFFF)
+
+
+def _retrieve_chunked(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    scales,  # None (fp32 values) or (N,) f32 per-row dequant scales
+    *,
+    n: int,
+    block_n: int,
+    q_chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Shared chunked streaming top-n (see retrieve_ref for the contract).
+
+    When ``scales`` is given, ``values`` is int8 and ``indices`` may be
+    int16: each (block_n, k) block is dequantized inside the scan step —
+    the per-block mirror of the fused kernel's VMEM dequant.
+    """
+    N, k = values.shape
+    nq = q.shape[0]
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+        qp = jnp.pad(q, ((0, qpad), (0, 0))) if qpad else q
+        chunks = qp.reshape(-1, q_chunk, q.shape[-1])
+        bv, bi = jax.lax.map(
+            lambda qb: _retrieve_chunked(
+                values, indices, inv_norms, qb, scales,
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            chunks,
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    block_n = min(block_n, max(N, 1))
+    pad = (-N) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+        if scales is not None:
+            scales = jnp.pad(scales, (0, pad))
+    nb = (N + pad) // block_n
+    vals_b = values.reshape(nb, block_n, k)
+    idx_b = indices.reshape(nb, block_n, k)
+    inv_b = inv_norms.reshape(nb, block_n)
+    ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+    scales_b = (jnp.zeros((nb, 0)) if scales is None
+                else scales.reshape(nb, block_n))
+
+    init = (
+        jnp.full((nq, n), -jnp.inf, jnp.float32),
+        jnp.zeros((nq, n), jnp.int32),
+    )
+
+    def step(carry, blk):
+        best_v, best_i = carry
+        bv, bi, binv, bids, bsc = blk
+        if scales is not None:  # per-block dequant, never a full fp32 index
+            bv = bv.astype(jnp.float32) * bsc[:, None]
+            bi = _widen_idx(bi)
+        gathered = q[:, bi]                                  # (Q, block_n, k)
+        s = jnp.sum(gathered * bv[None].astype(q.dtype), axis=-1)
+        s = (s * binv[None]).astype(jnp.float32)             # (Q, block_n)
+        s = jnp.where(bids[None] < N, s, -jnp.inf)           # mask padding
+        cand_v = jnp.concatenate([best_v, s], axis=1)
+        cand_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
+        )
+        v, p = jax.lax.top_k(cand_v, n)
+        return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
+
+    (best_v, best_i), _ = jax.lax.scan(
+        step, init, (vals_b, idx_b, inv_b, ids_b, scales_b)
+    )
+    return best_v, best_i
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block_n", "q_chunk"))
@@ -57,53 +156,31 @@ def retrieve_ref(
     transient is (min(Q, q_chunk), block_n, k) — queries beyond q_chunk are
     processed in chunks, so memory stays bounded for big batches.
     """
-    N, k = values.shape
-    nq = q.shape[0]
-    if nq > q_chunk:
-        qpad = (-nq) % q_chunk
-        qp = jnp.pad(q, ((0, qpad), (0, 0))) if qpad else q
-        chunks = qp.reshape(-1, q_chunk, q.shape[-1])
-        bv, bi = jax.lax.map(
-            lambda qb: retrieve_ref(
-                values, indices, inv_norms, qb,
-                n=n, block_n=block_n, q_chunk=q_chunk,
-            ),
-            chunks,
-        )
-        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
-    block_n = min(block_n, max(N, 1))
-    pad = (-N) % block_n
-    if pad:
-        values = jnp.pad(values, ((0, pad), (0, 0)))
-        indices = jnp.pad(indices, ((0, pad), (0, 0)))
-        inv_norms = jnp.pad(inv_norms, (0, pad))
-    nb = (N + pad) // block_n
-    vals_b = values.reshape(nb, block_n, k)
-    idx_b = indices.reshape(nb, block_n, k)
-    inv_b = inv_norms.reshape(nb, block_n)
-    ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+    return _retrieve_chunked(values, indices, inv_norms, q, None,
+                             n=n, block_n=block_n, q_chunk=q_chunk)
 
-    init = (
-        jnp.full((nq, n), -jnp.inf, jnp.float32),
-        jnp.zeros((nq, n), jnp.int32),
-    )
 
-    def step(carry, blk):
-        best_v, best_i = carry
-        bv, bi, binv, bids = blk
-        gathered = q[:, bi]                                  # (Q, block_n, k)
-        s = jnp.sum(gathered * bv[None].astype(q.dtype), axis=-1)
-        s = (s * binv[None]).astype(jnp.float32)             # (Q, block_n)
-        s = jnp.where(bids[None] < N, s, -jnp.inf)           # mask padding
-        cand_v = jnp.concatenate([best_v, s], axis=1)
-        cand_i = jnp.concatenate(
-            [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
-        )
-        v, p = jax.lax.top_k(cand_v, n)
-        return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
+@functools.partial(jax.jit, static_argnames=("n", "block_n", "q_chunk"))
+def retrieve_quantized_ref(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized-index chunked streaming top-n (see module doc).
 
-    (best_v, best_i), _ = jax.lax.scan(step, init, (vals_b, idx_b, inv_b, ids_b))
-    return best_v, best_i
+    q_values (N, k) int8, indices (N, k) int16/int32, scales (N,) f32
+    per-row dequant scales, inv_norms (N,), q (Q, h).  Bit-identical to
+    ``retrieve_ref`` over the dequantized arrays; the dequant happens one
+    (block_n, k) block at a time inside the scan.
+    """
+    return _retrieve_chunked(q_values, indices, inv_norms, q, scales,
+                             n=n, block_n=block_n, q_chunk=q_chunk)
 
 
 def _densify_rows(q_values: jax.Array, q_indices: jax.Array, h: int) -> jax.Array:
@@ -159,5 +236,52 @@ def retrieve_sparse_q_ref(
     q_dense = _densify_rows(q_values, q_indices, h)
     return retrieve_ref(
         values, indices, inv_norms, q_dense,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "q_chunk")
+)
+def retrieve_quantized_sparse_q_ref(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized candidates × sparse query codes, chunked on both sides:
+    query slabs (≤ q_chunk) densify row-wise, candidate blocks dequantize
+    inside the scan.  CPU mirror of
+    ``fused_retrieve_quantized_sparse_q_pallas`` — neither an fp32 index
+    nor a full (Q, h) dense query matrix ever exists.  Bit-identical to
+    ``retrieve_sparse_q_ref`` over the dequantized arrays.
+    """
+    nq = query_values.shape[0]
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+        qv = (jnp.pad(query_values, ((0, qpad), (0, 0)))
+              if qpad else query_values)
+        qi = (jnp.pad(query_indices, ((0, qpad), (0, 0)))
+              if qpad else query_indices)
+        chunks_v = qv.reshape(-1, q_chunk, qv.shape[-1])
+        chunks_i = qi.reshape(-1, q_chunk, qi.shape[-1])
+        bv, bi = jax.lax.map(
+            lambda c: retrieve_quantized_sparse_q_ref(
+                q_values, indices, scales, inv_norms, c[0], c[1], h,
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            (chunks_v, chunks_i),
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    q_dense = _densify_rows(query_values, query_indices, h)
+    return _retrieve_chunked(
+        q_values, indices, inv_norms, q_dense, scales,
         n=n, block_n=block_n, q_chunk=q_chunk,
     )

@@ -45,12 +45,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sae
+from repro.core.quantized_codes import QuantizedCodes
 from repro.core.retrieval import NORM_EPS, kernel_path
 from repro.core.types import SparseCodes
 from repro.kernels.fused_encode import fused_encode
 from repro.kernels.sparse_dot import (
     fused_retrieve,
+    fused_retrieve_quantized,
+    fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
+    retrieve_quantized_ref,
+    retrieve_quantized_sparse_q_ref,
     retrieve_ref,
     retrieve_sparse_q_ref,
 )
@@ -133,31 +138,39 @@ def retrieve_prepped(
     only.  Bit-identical to densifying first (the kernels guarantee it).
     The candidate inv norms default to the mode the prepped representation
     implies (codes → sparse-space, dense z → reconstructed-space).
+
+    A ``QuantizedIndex`` routes to the quantized kernel/ref generation:
+    the candidate side streams int8/int16 + per-row scales and dequantizes
+    in VMEM (kernel) or per block (ref) — bit-identical to serving the
+    dequantized index, with the index never materialized in fp32.
     """
     if inv_norms is None:
         inv_norms = mode_inv_norms(
             index, "sparse" if pq.is_sparse else "reconstructed"
         )
     squeeze = pq.norm.ndim == 0
-    values, indices = index.codes.values, index.codes.indices
+    quantized = isinstance(index.codes, QuantizedCodes)
+    if quantized:
+        cand = (index.codes.q_values, index.codes.indices, index.codes.scales)
+    else:
+        cand = (index.codes.values, index.codes.indices)
     if pq.is_sparse:
         qv = pq.values[None] if squeeze else pq.values
         qi = pq.indices[None] if squeeze else pq.indices
         h = index.codes.dim
-        if use_fused:
-            vals, ids = fused_retrieve_sparse_q(
-                values, indices, inv_norms, qv, qi, h, n=n
-            )
+        if quantized:
+            fn = (fused_retrieve_quantized_sparse_q if use_fused
+                  else retrieve_quantized_sparse_q_ref)
         else:
-            vals, ids = retrieve_sparse_q_ref(
-                values, indices, inv_norms, qv, qi, h, n=n
-            )
+            fn = fused_retrieve_sparse_q if use_fused else retrieve_sparse_q_ref
+        vals, ids = fn(*cand, inv_norms, qv, qi, h, n=n)
     else:
         qd = pq.dense[None] if squeeze else pq.dense
-        if use_fused:
-            vals, ids = fused_retrieve(values, indices, inv_norms, qd, n=n)
+        if quantized:
+            fn = fused_retrieve_quantized if use_fused else retrieve_quantized_ref
         else:
-            vals, ids = retrieve_ref(values, indices, inv_norms, qd, n=n)
+            fn = fused_retrieve if use_fused else retrieve_ref
+        vals, ids = fn(*cand, inv_norms, qd, n=n)
     norm = pq.norm[None] if squeeze else pq.norm
     scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
     if squeeze:
@@ -172,6 +185,11 @@ class RetrievalEngine:
 
     ``use_kernel``: "auto" (fused Pallas chain on TPU, chunked jnp
     elsewhere) | True | False — same switch as ``core.retrieve``.
+    ``index``: a ``SparseIndex`` or a ``QuantizedIndex``
+    (``build_index(..., quantize=True)``) — the quantized format is served
+    AS-IS: its int8/int16 arrays are what lives in HBM (and what a mesh
+    shards), dequantized tile-by-tile in VMEM by the quantized kernel
+    generation, bit-identical to serving the dequantized index.
     ``mesh``: a mesh with a ``shard_axis`` axis routes every request
     through candidate-sharded distributed retrieval, with the prepped
     query replicated (for sparse mode: just the (Q, k) codes).

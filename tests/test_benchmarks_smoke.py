@@ -53,3 +53,9 @@ def test_benchmarks_smoke_writes_perf_record(forced_device_count):
     # the sharded mode ran on the conftest-forced multi-device topology
     sharded = by_name["retrieval_sparse_sharded"]
     assert sharded["shards"] == min(4, forced_device_count), sharded
+    # ISSUE 4: the quantized serving row is part of the record schema and
+    # must report its index-HBM bytes (computed from the live arrays) at
+    # <= 40% of the fp32 SparseIndex at the paper's k=32, h < 65536
+    quant = by_name["retrieval_sparse_quantized"]
+    assert quant["k"] == 32, quant
+    assert quant["index_bytes"] <= 0.40 * quant["index_bytes_fp32"], quant

@@ -8,17 +8,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.quantized_codes import dequantize_codes, quantize_codes
 from repro.core.sae import normalize_input
+from repro.core.types import SparseCodes
 from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.fused_encode.ops import fused_encode
 from repro.kernels.fused_encode.ref import fused_encode_ref
 from repro.kernels.sparse_dot.ops import (
     fused_retrieve,
+    fused_retrieve_quantized,
+    fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
     sparse_dot,
 )
 from repro.kernels.sparse_dot.ref import (
+    retrieve_quantized_ref,
+    retrieve_quantized_sparse_q_ref,
     retrieve_ref,
     retrieve_sparse_q_ref,
     sparse_dot_ref,
@@ -227,6 +233,143 @@ def test_sparse_q_single_query_and_validation():
     assert sorted(np.asarray(i).tolist()) == list(range(96))
     with pytest.raises(ValueError):
         fused_retrieve_sparse_q(vals, idx, inv, qv, qi, 128, n=97)
+
+
+# ------------------------------------------------ fused_retrieve_quantized
+def _quantized_case(n, q, k, h, seed):
+    """Quantized candidate codes + their dequantized fp32 oracle twin.
+
+    The norms come from the DEQUANTIZED values (exactly what build_index
+    does with quantize=True), so the quantized path and the
+    dequantize-then-retrieve oracle score the same space.
+    """
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    vals = jax.random.normal(ks[0], (n, k), jnp.float32)
+    idx = jax.random.randint(ks[1], (n, k), 0, h, dtype=jnp.int32)
+    qc = quantize_codes(SparseCodes(values=vals, indices=idx, dim=h))
+    deq = dequantize_codes(qc)
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(deq.values, axis=-1), 1e-8)
+    qq = jax.random.normal(ks[2], (q, h), jnp.float32)
+    return qc, deq, inv, qq
+
+
+# ragged N (candidate-tile padding) and ragged Q (query-panel padding)
+@pytest.mark.parametrize("n,q,topn", [(64, 9, 64), (256, 1, 5),
+                                      (1000, 3, 10), (4097, 5, 20)])
+def test_quantized_bit_identical_to_dequantized(n, q, topn):
+    """The quantized generation (kernel AND ref) must be BIT-identical —
+    scores, ids, ties — to dequantize + the fp32 path it replaces."""
+    qc, deq, inv, qq = _quantized_case(n, q, 8, 256, seed=n + q)
+    want_v, want_i = fused_retrieve(deq.values, deq.indices, inv, qq, n=topn)
+    got_v, got_i = fused_retrieve_quantized(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    rwant_v, rwant_i = retrieve_ref(deq.values, deq.indices, inv, qq, n=topn)
+    rgot_v, rgot_i = retrieve_quantized_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(rgot_v), np.asarray(rwant_v))
+    np.testing.assert_array_equal(np.asarray(rgot_i), np.asarray(rwant_i))
+
+
+def test_quantized_tied_scores_match_lax_topk():
+    # duplicated candidate rows share one quantization scale, so their
+    # dequantized scores tie EXACTLY across tile boundaries; the quantized
+    # epilogue must resolve them like lax.top_k (lowest candidate id wins)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    vals = jnp.tile(jax.random.normal(ks[0], (40, 4), jnp.float32), (8, 1))
+    idx = jnp.tile(jax.random.randint(ks[1], (40, 4), 0, 64, jnp.int32), (8, 1))
+    qq = jax.random.normal(ks[2], (3, 64), jnp.float32)
+    qc = quantize_codes(SparseCodes(values=vals, indices=idx, dim=64))
+    deq = dequantize_codes(qc)
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(deq.values, axis=-1), 1e-8)
+    want_v, want_i = jax.lax.top_k(
+        sparse_dot_ref(deq.values, deq.indices, qq) * inv[None], 17
+    )
+    got_v, got_i = fused_retrieve_quantized(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=17,
+        block_n=64, block_q=2,
+    )
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-6, atol=1e-7)
+    ref_v, ref_i = retrieve_quantized_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=17, block_n=96
+    )
+    np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(want_i))
+
+
+@pytest.mark.parametrize("h,want_dtype", [(256, jnp.int16),
+                                          (40000, jnp.int16),
+                                          (70000, jnp.int32)])
+def test_quantized_index_dtype_and_wraparound(h, want_dtype):
+    """int16 indices cover all of h < 65536 via the low-16-bit widen
+    (h=40000 puts indices in the two's-complement wrap region); h >= 65536
+    falls back to int32.  All must stay bit-identical to the fp32 path."""
+    qc, deq, inv, qq = _quantized_case(300, 2, 8, h, seed=h)
+    assert qc.indices.dtype == want_dtype
+    want_v, want_i = fused_retrieve(deq.values, deq.indices, inv, qq, n=7)
+    got_v, got_i = fused_retrieve_quantized(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=7
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    # the ref pair has its own (jnp-sum) accumulation order: bit-identity
+    # holds quantized-vs-dequantized WITHIN each path, so the ref's oracle
+    # is retrieve_ref, not the kernel
+    rwant = retrieve_ref(deq.values, deq.indices, inv, qq, n=7)
+    rgot = retrieve_quantized_ref(qc.q_values, qc.indices, qc.scales, inv,
+                                  qq, n=7)
+    np.testing.assert_array_equal(np.asarray(rgot[0]), np.asarray(rwant[0]))
+    np.testing.assert_array_equal(np.asarray(rgot[1]), np.asarray(rwant[1]))
+
+
+# ragged N/Q, Q > the ref q_chunk (chunked densify), duplicate query indices
+@pytest.mark.parametrize("n,q,topn,idx_hi", [(64, 9, 64, None),
+                                             (1000, 13, 10, None),
+                                             (300, 150, 7, None),
+                                             (200, 11, 9, 9)])
+def test_quantized_sparse_q_bit_identical(n, q, topn, idx_hi):
+    """Quantized candidates × sparse query codes (kernel AND ref) must be
+    bit-identical to the fp32 sparse-query generation over the dequantized
+    index — including duplicate indices inside query code rows."""
+    kq = 8
+    qc, deq, inv, _ = _quantized_case(n, q, kq, 256, seed=n + q)
+    ks = jax.random.split(jax.random.PRNGKey(n * q + 1), 2)
+    qv = jax.random.normal(ks[0], (q, kq), jnp.float32)
+    qi = jax.random.randint(ks[1], (q, kq), 0, idx_hi or 256, dtype=jnp.int32)
+    want_v, want_i = fused_retrieve_sparse_q(
+        deq.values, deq.indices, inv, qv, qi, 256, n=topn
+    )
+    got_v, got_i = fused_retrieve_quantized_sparse_q(
+        qc.q_values, qc.indices, qc.scales, inv, qv, qi, 256, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    rwant = retrieve_sparse_q_ref(deq.values, deq.indices, inv, qv, qi, 256,
+                                  n=topn)
+    rgot = retrieve_quantized_sparse_q_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qv, qi, 256, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(rgot[0]), np.asarray(rwant[0]))
+    np.testing.assert_array_equal(np.asarray(rgot[1]), np.asarray(rwant[1]))
+
+
+def test_quantized_single_query_and_validation():
+    qc, deq, inv, qq = _quantized_case(96, 1, 8, 128, seed=11)
+    v, i = fused_retrieve_quantized(qc.q_values, qc.indices, qc.scales, inv,
+                                    qq[0], n=96)
+    assert v.shape == (96,) and i.shape == (96,)
+    assert sorted(np.asarray(i).tolist()) == list(range(96))
+    with pytest.raises(ValueError):
+        fused_retrieve_quantized(qc.q_values, qc.indices, qc.scales, inv,
+                                 qq, n=97)
+    qv = jnp.zeros((1, 8)); qi = jnp.zeros((1, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        fused_retrieve_quantized_sparse_q(
+            qc.q_values, qc.indices, qc.scales, inv, qv, qi, 128, n=97
+        )
 
 
 # ------------------------------------------------------------------ topk_mask

@@ -2,13 +2,20 @@
 pipeline — BIT-identical scores, ids, and tie resolution, for both modes,
 both backends (fused kernels in interpret mode / chunked jnp), and 1/2/4-way
 candidate-sharded meshes (on the conftest-forced multi-device CPU topology).
+
+Since ISSUE 4 the same contract covers the quantized serving format: an
+engine over a ``QuantizedIndex`` must be bit-identical to an engine over
+the dequantized index across the whole modes × backends × meshes matrix.
 """
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import SAEConfig, build_index, encode, init_params, retrieve
+from repro.core import (
+    QuantizedIndex, SAEConfig, build_index, dequantize_index, encode,
+    init_params, retrieve,
+)
 from repro.core.types import SparseCodes
 from repro.launch.mesh import make_candidate_mesh
 from repro.serving import RetrievalEngine
@@ -68,6 +75,102 @@ def test_engine_matches_composed_sharded(setup, mode, shards,
     gv, gi = engine.retrieve_dense(queries, 20)
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(si))
     np.testing.assert_array_equal(np.asarray(gv), np.asarray(sv))
+
+
+@pytest.fixture(scope="module")
+def qsetup(setup):
+    """Quantized index over the SAME corpus codes (ties included) + its
+    dequantized twin — the exactness oracle for quantized serving."""
+    params, index, queries = setup
+    qindex = build_index(index.codes, params, quantize=True)
+    assert isinstance(qindex, QuantizedIndex)
+    return params, qindex, dequantize_index(qindex), queries
+
+
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_quantized_engine_matches_dequantized(qsetup, mode, use_kernel):
+    """Serving straight from the quantized index must be BIT-identical —
+    scores, ids, ties — to serving the dequantized index, on both
+    backends and both modes.  Quantization error is a build-time choice,
+    never a serving-path one."""
+    params, qindex, dindex, queries = qsetup
+    eq = RetrievalEngine(params, qindex, mode=mode, use_kernel=use_kernel)
+    ed = RetrievalEngine(params, dindex, mode=mode, use_kernel=use_kernel)
+    qv, qi = eq.retrieve_dense(queries, 25)
+    dv, di = ed.retrieve_dense(queries, 25)
+    np.testing.assert_array_equal(np.asarray(qi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(qv), np.asarray(dv))
+    # and the codes-in entry point agrees too
+    q_codes = encode(params, queries, CFG.k)
+    qv2, qi2 = eq.retrieve_codes(q_codes, 12)
+    dv2, di2 = ed.retrieve_codes(q_codes, 12)
+    np.testing.assert_array_equal(np.asarray(qi2), np.asarray(di2))
+    np.testing.assert_array_equal(np.asarray(qv2), np.asarray(dv2))
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_quantized_engine_sharded(qsetup, mode, shards, forced_device_count):
+    """Candidate-sharding the quantized index (the int8/int16 arrays are
+    what the mesh shards) must stay bit-identical to both the unsharded
+    quantized engine and the sharded dequantized engine."""
+    if shards > forced_device_count:
+        pytest.skip(f"needs {shards} devices")
+    params, qindex, dindex, queries = qsetup
+    mesh = make_candidate_mesh(shards)
+    em = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
+                         mesh=mesh)
+    e1 = RetrievalEngine(params, qindex, mode=mode, use_kernel=False)
+    ed = RetrievalEngine(params, dindex, mode=mode, use_kernel=False,
+                         mesh=mesh)
+    mv, mi = em.retrieve_dense(queries, 20)
+    sv, si = e1.retrieve_dense(queries, 20)
+    dv, di = ed.retrieve_dense(queries, 20)
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(si))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(sv))
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(dv))
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+def test_quantized_engine_sharded_fused_kernel(qsetup, mode,
+                                               forced_device_count):
+    """The distributed dispatch must also serve the quantized index
+    through the FUSED kernels (interpret mode here): sharded cand-spec
+    plumbing for the extra scales operand × the Pallas path is otherwise
+    untested.  Small 2-way mesh — the kernels are slow in interpret mode
+    inside shard_map."""
+    if forced_device_count < 2:
+        pytest.skip("needs 2 devices")
+    params, qindex, dindex, queries = qsetup
+    mesh = make_candidate_mesh(2)
+    em = RetrievalEngine(params, qindex, mode=mode, use_kernel=True,
+                         mesh=mesh)
+    ed = RetrievalEngine(params, dindex, mode=mode, use_kernel=True,
+                         mesh=mesh)
+    q = queries[:3]
+    mv, mi = em.retrieve_dense(q, 10)
+    dv, di = ed.retrieve_dense(q, 10)
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(dv))
+
+
+def test_quantized_index_via_core_retrieve(qsetup):
+    """The functional ``core.retrieve`` wrapper accepts a QuantizedIndex
+    and its n-validation still fires (QuantizedCodes carries n/k)."""
+    params, qindex, dindex, queries = qsetup
+    q_codes = encode(params, queries, CFG.k)
+    gv, gi = retrieve(qindex, q_codes, 9, use_kernel=False)
+    wv, wi = retrieve(dindex, q_codes, 9, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    assert qindex.codes.n == dindex.codes.n
+    assert qindex.codes.k == dindex.codes.k
+    with pytest.raises(ValueError, match="exceeds candidate count"):
+        retrieve(qindex, q_codes, qindex.codes.n + 1, use_kernel=False)
 
 
 def test_engine_single_dense_query(setup):

@@ -1,0 +1,182 @@
+"""Docs gate (ISSUE 4): internal links resolve and every command shown in
+README/docs bash blocks is real.
+
+Two levels, matching how the checks are consumed:
+
+* static (default; also run in-process by ``tests/test_docs.py``):
+    - every relative markdown link in README.md + docs/*.md points at a
+      file that exists (external http(s)/mailto links and pure #anchors
+      are skipped);
+    - every non-comment line inside a fenced ```bash block parses as a
+      command this repo can actually run: an optional ``ENV=value``
+      prefix, then ``pip install …``, ``python -m <importable module> …``
+      or ``python <existing file> …``.  Unrecognized commands FAIL — the
+      docs may only show commands this checker can vouch for.
+* ``--run`` (the CI docs job): additionally executes the canonical
+  commands the docs promise — the tier-1 verify line (smoke-checked via
+  ``--collect-only`` so the docs job doesn't duplicate the tier-1 job's
+  full run) and the benchmark smoke — after asserting both appear
+  verbatim in the README.
+
+Usage:
+    python tools/check_docs.py          # static checks
+    python tools/check_docs.py --run    # static + execute canonical cmds
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import re
+import shlex
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+# the required docs are listed explicitly (a deleted file must be REPORTED
+# missing, which a glob of existing files cannot do); extra docs/*.md are
+# picked up by the glob
+_REQUIRED = [REPO / "README.md", REPO / "docs" / "ARCHITECTURE.md",
+             REPO / "docs" / "BENCHMARKS.md"]
+DOC_FILES = _REQUIRED + [
+    p for p in sorted((REPO / "docs").glob("*.md")) if p not in _REQUIRED
+]
+
+TIER1_CMD = "PYTHONPATH=src python -m pytest -x -q"
+SMOKE_CMD = "PYTHONPATH=src python -m benchmarks.run --smoke"
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+ENV_TOKEN_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*=")
+
+
+def check_links(doc: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(doc.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = (doc.parent / target.split("#", 1)[0]).resolve()
+        if not path.exists():
+            errors.append(f"{doc.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def _module_exists(name: str) -> bool:
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    try:
+        return importlib.util.find_spec(name) is not None
+    except (ImportError, ModuleNotFoundError):
+        return False
+    finally:
+        sys.path.remove(str(REPO / "src"))
+        sys.path.remove(str(REPO))
+
+
+def check_command(line: str, doc: Path) -> list[str]:
+    where = f"{doc.relative_to(REPO)}: `{line}`"
+    try:
+        tokens = shlex.split(line)
+    except ValueError as e:
+        return [f"{where}: unparseable ({e})"]
+    while tokens and ENV_TOKEN_RE.match(tokens[0]):
+        tokens = tokens[1:]
+    if not tokens:
+        return []
+    if tokens[0] == "pip":
+        if len(tokens) > 1 and tokens[1] == "install":
+            return []
+        return [f"{where}: only `pip install` is vouched for"]
+    if tokens[0] != "python":
+        return [f"{where}: unrecognized command `{tokens[0]}` — docs may "
+                "only show python/pip commands this checker can verify"]
+    if len(tokens) > 2 and tokens[1] == "-m":
+        if not _module_exists(tokens[2]):
+            return [f"{where}: module `{tokens[2]}` not importable"]
+        return []
+    if len(tokens) > 1:
+        if not (REPO / tokens[1]).exists():
+            return [f"{where}: script `{tokens[1]}` does not exist"]
+        return []
+    return [f"{where}: bare `python` invocation"]
+
+
+def check_bash_blocks(doc: Path) -> list[str]:
+    errors = []
+    for block in FENCE_RE.findall(doc.read_text()):
+        for line in block.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            errors.extend(check_command(line, doc))
+    return errors
+
+
+def static_checks() -> list[str]:
+    errors = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"missing doc: {doc.relative_to(REPO)}")
+            continue
+        errors.extend(check_links(doc))
+        errors.extend(check_bash_blocks(doc))
+    # the three docs must be cross-linked (absence itself is already
+    # reported above — don't crash on a missing file, report everything)
+    if (REPO / "README.md").exists():
+        readme = (REPO / "README.md").read_text()
+        for target in ("docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"):
+            if target not in readme:
+                errors.append(f"README.md does not link {target}")
+    for name, sibling in [("ARCHITECTURE.md", "BENCHMARKS.md"),
+                          ("BENCHMARKS.md", "ARCHITECTURE.md")]:
+        doc = REPO / "docs" / name
+        if not doc.exists():
+            continue
+        text = doc.read_text()
+        if "../README.md" not in text:
+            errors.append(f"docs/{name} does not link back to README.md")
+        if sibling not in text:
+            errors.append(f"docs/{name} does not link docs/{sibling}")
+    return errors
+
+
+def run_canonical() -> list[str]:
+    readme = (REPO / "README.md").read_text()
+    errors = [f"README.md must show the canonical command: `{cmd}`"
+              for cmd in (TIER1_CMD, SMOKE_CMD) if cmd not in readme]
+    if errors:
+        return errors
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    # tier-1 line: smoke-check runnability via collect-only (the full run
+    # is the tier1 CI job's business, not the docs job's)
+    for label, argv in [
+        ("tier-1 verify (collect-only)",
+         [sys.executable, "-m", "pytest", "-x", "-q", "--collect-only"]),
+        ("benchmark smoke",
+         [sys.executable, "-m", "benchmarks.run", "--smoke"]),
+    ]:
+        print(f"[check_docs] running {label} ...", flush=True)
+        proc = subprocess.run(argv, cwd=REPO, env=env,
+                              capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            errors.append(
+                f"{label} failed (rc={proc.returncode}):\n"
+                f"{proc.stdout[-1500:]}\n{proc.stderr[-1500:]}"
+            )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    errors = static_checks()
+    if "--run" in argv and not errors:
+        errors += run_canonical()
+    if errors:
+        print("\n".join(f"FAIL: {e}" for e in errors))
+        return 1
+    docs = ", ".join(str(d.relative_to(REPO)) for d in DOC_FILES)
+    print(f"[check_docs] OK: {docs}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
