@@ -36,6 +36,7 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 PEAK_FLOPS = 197e12       # bf16 / chip
+PEAK_INT8_OPS = 394e12    # int8 MXU / chip (2x the bf16 rate on v5e)
 HBM_BW = 819e9            # bytes/s / chip
 ICI_BW = 50e9             # bytes/s / link
 
@@ -425,47 +426,93 @@ def _recsys_flops(arch: str, cfg, meta) -> float:
 
 
 # ------------------------------------------------- retrieval traffic model
+def quantized_row_bytes(k: int, h: int) -> int:
+    """Index bytes per candidate row in the compound-compressed serving
+    format: int8 values + int16/int32 indices + one f32 per-row dequant
+    scale.  Mirrors ``QuantizedCodes.nbytes_logical`` arithmetic (int16
+    indices whenever h < 65536)."""
+    idx_b = 2 if h < 65536 else 4
+    return k * (1 + idx_b) + 4
+
+
 def retrieval_traffic(
     n: int = 100_000, k: int = 32, q: int = 64, topn: int = 20,
-    block_q: int = 8,
+    block_q: int = 8, h: int = 4096,
 ) -> Dict[str, Dict[str, float]]:
-    """Analytic HBM traffic (bytes) for the three retrieval generations.
+    """Analytic HBM traffic (+ scoring-compute terms) for the retrieval
+    generations.  All serve Q queries over N fixed-k candidates; f32 codes
+    are 8 B per nonzero, quantized rows are ``quantized_row_bytes(k, h)``
+    (~3k+4 vs 8k), and every path streams 4 B/row of reciprocal norms:
 
-    All serve Q queries over N fixed-k candidates (values+indices = 8 B per
-    nonzero, f32 scores = 4 B):
+      per_query       — seed kernel: grid (Q, N/BLOCK_N) streams every
+                        candidate tile once PER QUERY, then writes the full
+                        (Q, N) score matrix to HBM and re-reads it for
+                        lax.top_k.
+      blocked         — multi-query panel: candidates stream once per
+                        BLOCK_Q queries; (Q, N) scores still round-trip HBM.
+      fused           — blocked scoring + streaming top-n epilogue in VMEM:
+                        only (Q, topn) scores+ids ever reach HBM.
+      fused_quantized — generation 4: the candidate stream is the
+                        compound-compressed format itself (+ 4 B/row of
+                        dequant scales), dequantized in VMEM — same f32
+                        scoring compute, ~2.6x less index traffic at k=32.
+      fused_quantized_mxu — generation 5: identical HBM bytes to
+                        fused_quantized (the int8 tiles are what streams
+                        either way; the query panel quantizes in VMEM, so
+                        int8 scoring adds NO HBM traffic) but the scoring
+                        contraction runs at the int8 MXU rate — the
+                        compute term halves, which is the whole point of
+                        scoring without dequantizing.
 
-      per_query   — seed kernel: grid (Q, N/BLOCK_N) streams every candidate
-                    tile once PER QUERY, then writes the full (Q, N) score
-                    matrix to HBM and re-reads it for lax.top_k.
-      blocked     — multi-query panel: candidates stream once per BLOCK_Q
-                    queries; (Q, N) scores still round-trip HBM.
-      fused       — blocked scoring + streaming top-n epilogue in VMEM:
-                    only (Q, topn) scores+ids ever reach HBM.
+    Each row carries bytes / bytes_per_row / t_mem_ms / t_comp_ms /
+    speedup_vs_per_query (HBM-traffic ratio — the roofline bound for
+    these memory-bound shapes).
     """
-    cand = n * k * 8                       # values + indices
+    cand = n * k * 8                       # f32 values + i32 indices
+    cand_q = n * quantized_row_bytes(k, h)
     norms = n * 4
     score_rt = q * n * 4 * 2               # write + re-read for top-k
     out = q * topn * 8                     # scores + ids
     panels = -(-q // block_q)              # ceil(Q / BLOCK_Q)
+    flops = 2.0 * q * n * k                # the scoring contraction
     variants = {
-        "per_query": cand * q + norms + score_rt + out,
-        "blocked": cand * panels + norms + score_rt + out,
-        "fused": cand * panels + norms + out,
+        "per_query": (cand * q + norms + score_rt + out, cand, PEAK_FLOPS),
+        "blocked": (cand * panels + norms + score_rt + out, cand, PEAK_FLOPS),
+        "fused": (cand * panels + norms + out, cand, PEAK_FLOPS),
+        "fused_quantized": (cand_q * panels + norms + out, cand_q,
+                            PEAK_FLOPS),
+        "fused_quantized_mxu": (cand_q * panels + norms + out, cand_q,
+                                PEAK_INT8_OPS),
     }
+    base = variants["per_query"][0]
     return {
-        name: {"bytes": float(b), "t_mem_ms": b / HBM_BW * 1e3,
-               "speedup_vs_per_query": variants["per_query"] / b}
-        for name, b in variants.items()
+        name: {
+            "bytes": float(b),
+            "bytes_per_row": cand_bytes / n + 4,   # + reciprocal norm
+            "t_mem_ms": b / HBM_BW * 1e3,
+            "t_comp_ms": flops / peak * 1e3,
+            "speedup_vs_per_query": base / b,
+        }
+        for name, (b, cand_bytes, peak) in variants.items()
     }
 
 
-def retrieval_traffic_report(n=100_000, k=32, q=64, topn=20, block_q=8) -> str:
-    rows = retrieval_traffic(n, k, q, topn, block_q)
+def retrieval_traffic_report(n=100_000, k=32, q=64, topn=20, block_q=8,
+                             h=4096) -> str:
+    rows = retrieval_traffic(n, k, q, topn, block_q, h)
+    idx_dtype = "int16" if h < 65536 else "int32"
     out = [f"retrieval HBM traffic model: N={n} k={k} Q={q} topn={topn} "
-           f"BLOCK_Q={block_q} (HBM {HBM_BW/1e9:.0f} GB/s)",
-           "| path | HBM bytes | t_mem (ms) | speedup |", "|---|---|---|---|"]
+           f"BLOCK_Q={block_q} h={h} (HBM {HBM_BW/1e9:.0f} GB/s, "
+           f"f32 {PEAK_FLOPS/1e12:.0f} TFLOP/s, "
+           f"int8 {PEAK_INT8_OPS/1e12:.0f} TOP/s; quantized index rows: "
+           f"int8 values + {idx_dtype} indices + f32 scale = "
+           f"{quantized_row_bytes(k, h)} B vs fp32 codes {8 * k} B)",
+           "| path | HBM bytes | B/row | t_mem (ms) | t_comp (ms) "
+           "| speedup |",
+           "|---|---|---|---|---|---|"]
     for name, r in rows.items():
-        out.append(f"| {name} | {r['bytes']:.3e} | {r['t_mem_ms']:.3f} "
+        out.append(f"| {name} | {r['bytes']:.3e} | {r['bytes_per_row']:.0f} "
+                   f"| {r['t_mem_ms']:.3f} | {r['t_comp_ms']:.3f} "
                    f"| {r['speedup_vs_per_query']:.1f}x |")
     return "\n".join(out)
 

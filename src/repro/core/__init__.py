@@ -40,6 +40,12 @@ from repro.core.quantized_codes import (
     dequantize_codes,
     quantize_codes,
 )
+from repro.core.eval import (
+    rank_displacement,
+    recall_at_n,
+    retrieval_quality,
+    score_mae,
+)
 from repro.core import sparse, baselines
 
 __all__ = [
@@ -52,4 +58,5 @@ __all__ = [
     "dequantize_index",
     "build_index", "retrieve", "score_sparse", "score_reconstructed", "score_dense",
     "sparse_dot_dense_query", "top_n", "sparse", "baselines",
+    "recall_at_n", "score_mae", "rank_displacement", "retrieval_quality",
 ]

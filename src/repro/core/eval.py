@@ -1,0 +1,157 @@
+"""Retrieval-quality evaluation harness (ISSUE 5).
+
+Generation 5 of the fused retrieve scores in int8 — the first serving
+path whose contract against the exact path is a *measured quality bound*
+rather than bit-identity.  The paper's claim is that compression
+preserves retrieval QUALITY, not bit-exact scores, so approximate paths
+are gated on the three metrics here instead of ``array_equal``:
+
+``recall_at_n``        — fraction of the reference top-n ids the
+                         approximate list recovered (order-insensitive).
+``score_mae``          — positional mean-absolute-error between the two
+                         rank-sorted top-n score curves.
+``rank_displacement``  — mean |rank in approximate − rank in reference|
+                         over the approximate list; ids missing from the
+                         reference list are charged the worst case n.
+``retrieval_quality``  — the bundle, taking the two ``(scores, ids)``
+                         pairs exactly as the serving APIs return them.
+
+Shared infrastructure: tests (``tests/test_retrieval_quality.py`` gates
+the int8 path's recall@32 in tier-1), benchmarks
+(``benchmarks/retrieval_modes.py`` reports the metrics on the
+``retrieval_sparse_quantized_mxu`` row), and any future approximate
+generation.  Everything is plain numpy on host — these are offline
+metrics, never part of a serving computation — and accepts jax arrays,
+numpy arrays, or nested lists, in single-query (n,) or batched (Q, n)
+layout.
+
+Edge semantics (pinned by tests/test_eval_harness.py):
+  * n > the rows' length clamps to what is actually there — asking for
+    recall@10 of 7-long lists measures the 7 present matches, it does not
+    deflate the denominator with phantom misses.
+  * duplicate ids in a reference row (possible with hand-built inputs)
+    count once: the denominator is the number of DISTINCT reference ids.
+  * exact score ties cost nothing in ``score_mae`` (equal values compare
+    positionally after both sides sort) and tie-reordered ids cost their
+    true positional distance in ``rank_displacement`` — ties are not
+    special-cased away, they are simply cheap.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def _as_2d(x) -> np.ndarray:
+    a = np.asarray(x)
+    if a.ndim == 1:
+        a = a[None]
+    if a.ndim != 2:
+        raise ValueError(f"expected (n,) or (Q, n) array, got shape {a.shape}")
+    return a
+
+
+def recall_at_n(ids, ref_ids, n: Optional[int] = None) -> float:
+    """Mean fraction of the reference top-n ids present in ``ids``.
+
+    ids / ref_ids: (n?,) or (Q, n?) candidate-id arrays, highest-ranked
+    first.  Both are truncated to their first ``n`` entries (default: the
+    reference row length); ``n`` beyond a row's length clamps.  The
+    denominator is the number of distinct reference ids per row, so the
+    metric stays in [0, 1] even on degenerate hand-built inputs.
+    """
+    got = _as_2d(ids)
+    ref = _as_2d(ref_ids)
+    if got.shape[0] != ref.shape[0]:
+        raise ValueError(
+            f"query-count mismatch: {got.shape[0]} vs {ref.shape[0]}"
+        )
+    if n is None:
+        n = ref.shape[1]
+    got = got[:, : min(n, got.shape[1])]
+    ref = ref[:, : min(n, ref.shape[1])]
+    recs = []
+    for g, r in zip(got, ref):
+        want = set(r.tolist())
+        recs.append(len(want & set(g.tolist())) / max(len(want), 1))
+    return float(np.mean(recs)) if recs else 0.0
+
+
+def score_mae(scores, ref_scores, n: Optional[int] = None) -> float:
+    """Positional MAE between two rank-sorted top-n score curves.
+
+    Both inputs are sorted descending per row before comparison (serving
+    outputs already are; sorting makes the metric insensitive to provider
+    order) and truncated to the shorter of the two rows (or ``n``).
+    Measures how far the approximate score CURVE sits from the exact one
+    — rank-agnostic by construction, so pair it with
+    ``rank_displacement`` for ordering damage.
+    """
+    s = _as_2d(np.asarray(scores, dtype=np.float64))
+    r = _as_2d(np.asarray(ref_scores, dtype=np.float64))
+    if s.shape[0] != r.shape[0]:
+        raise ValueError(f"query-count mismatch: {s.shape[0]} vs {r.shape[0]}")
+    width = min(s.shape[1], r.shape[1])
+    if n is not None:
+        width = min(width, n)
+    s = -np.sort(-s, axis=1)[:, :width]
+    r = -np.sort(-r, axis=1)[:, :width]
+    return float(np.mean(np.abs(s - r))) if width else 0.0
+
+
+def rank_displacement(ids, ref_ids, n: Optional[int] = None) -> float:
+    """Mean |approximate rank − reference rank| over the approximate list.
+
+    For each id in the (truncated-to-n) approximate row: its absolute
+    rank distance to the same id's position in the reference row, or the
+    worst case ``n`` when the reference row does not contain it (it
+    displaced a reference id by at least the list length).  Duplicate
+    reference ids resolve to their FIRST (best) rank.  0.0 means the two
+    rankings agree exactly.
+    """
+    got = _as_2d(ids)
+    ref = _as_2d(ref_ids)
+    if got.shape[0] != ref.shape[0]:
+        raise ValueError(
+            f"query-count mismatch: {got.shape[0]} vs {ref.shape[0]}"
+        )
+    if n is None:
+        n = min(got.shape[1], ref.shape[1])
+    got = got[:, : min(n, got.shape[1])]
+    ref = ref[:, : min(n, ref.shape[1])]
+    width = got.shape[1]
+    if width == 0:
+        return 0.0
+    disps = []
+    for g, r in zip(got, ref):
+        pos: dict = {}
+        for j, rid in enumerate(r.tolist()):
+            pos.setdefault(rid, j)              # first occurrence wins
+        disps.extend(
+            abs(i - pos[gid]) if gid in pos else width
+            for i, gid in enumerate(g.tolist())
+        )
+    return float(np.mean(disps))
+
+
+def retrieval_quality(approx, exact, n: Optional[int] = None) -> dict:
+    """The bundle: compare two ``(scores, ids)`` retrieval outputs.
+
+    ``approx`` / ``exact``: (scores, ids) pairs exactly as returned by
+    ``retrieve`` / ``RetrievalEngine.retrieve_dense`` — (n,) or (Q, n).
+    Returns ``{"n", "recall", "score_mae", "rank_displacement"}`` with
+    ``n`` the effective (clamped) comparison width.
+    """
+    a_scores, a_ids = approx
+    e_scores, e_ids = exact
+    a_ids2, e_ids2 = _as_2d(a_ids), _as_2d(e_ids)
+    width = min(a_ids2.shape[1], e_ids2.shape[1])
+    if n is not None:
+        width = min(width, n)
+    return {
+        "n": int(width),
+        "recall": recall_at_n(a_ids, e_ids, n=width),
+        "score_mae": score_mae(a_scores, e_scores, n=width),
+        "rank_displacement": rank_displacement(a_ids, e_ids, n=width),
+    }

@@ -251,6 +251,7 @@ def retrieve(
     use_kernel: UseKernel = "auto",
     mesh=None,
     shard_axis: str = "cand",
+    precision: str = "exact",
 ) -> tuple[jax.Array, jax.Array]:
     """One-call serving API: top-n (cosine scores, candidate ids).
 
@@ -273,12 +274,18 @@ def retrieve(
     the same fused/ref streaming retrieve over its slice, and per-shard
     top-n sets merge via ``sharded_top_n`` — bit-identical (scores, ids,
     ties) to the single-device path.
+
+    ``precision="int8"`` (QuantizedIndex only) serves the APPROXIMATE
+    generation-5 int8-scoring fast path instead of the exact one —
+    quality vs ``"exact"`` is a measured bound (``repro.core.eval``),
+    everything else about the call is unchanged.
     """
     from repro.serving.engine import RetrievalEngine
 
     engine = RetrievalEngine(
         params, index,
         mode=mode, use_kernel=use_kernel, mesh=mesh, shard_axis=shard_axis,
+        precision=precision,
     )
     return engine.retrieve_codes(q, n)
 

@@ -55,8 +55,12 @@ from repro.core.types import SparseCodes
 from repro.kernels.sparse_dot import (
     fused_retrieve,
     fused_retrieve_quantized,
+    fused_retrieve_quantized_mxu,
+    fused_retrieve_quantized_mxu_sparse_q,
     fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
+    retrieve_quantized_mxu_ref,
+    retrieve_quantized_mxu_sparse_q_ref,
     retrieve_quantized_ref,
     retrieve_quantized_sparse_q_ref,
     retrieve_ref,
@@ -84,6 +88,7 @@ def distributed_retrieve_prepped(
     axis_name: str = CAND_AXIS,
     use_fused: bool,
     inv_norms: Optional[jax.Array] = None,
+    precision: str = "exact",
 ) -> tuple[jax.Array, jax.Array]:
     """Serve one prepped query batch (``serving.engine.PreppedQuery``) over
     a candidate-sharded mesh.  The prepped representation — sparse codes or
@@ -91,9 +96,20 @@ def distributed_retrieve_prepped(
     Per shard, the matching streaming retrieve produces a local top-n in
     the norm-folded space; the merge is one all-gather of n·n_shards
     (score, id) pairs per query.
+
+    ``precision="int8"`` runs generation 5's approximate int8 scoring per
+    shard (QuantizedIndex only).  Sharding stays exactly transparent even
+    on the approximate path: the query quantizes per ROW over the full h
+    (replicated, so every shard derives the identical int8 panel) and
+    per-candidate scores are shard-local int32/f32 ops on the same
+    inputs — sharded int8 serving is bit-identical to unsharded int8
+    serving, it is only int8-vs-exact that is approximate.
     """
     from repro.core.retrieval import NORM_EPS, sharded_top_n
-    from repro.serving.engine import mode_inv_norms
+    from repro.serving.engine import check_precision, mode_inv_norms
+
+    check_precision(index, precision)
+    int8_scoring = precision == "int8"
 
     N = index.codes.n
     if n > N:
@@ -153,7 +169,10 @@ def distributed_retrieve_prepped(
     if pq.is_sparse:
         qv = pq.values[None] if squeeze else pq.values
         qi = pq.indices[None] if squeeze else pq.indices
-        if quantized:
+        if int8_scoring:
+            fn = (fused_retrieve_quantized_mxu_sparse_q if use_fused
+                  else retrieve_quantized_mxu_sparse_q_ref)
+        elif quantized:
             fn = (fused_retrieve_quantized_sparse_q if use_fused
                   else retrieve_quantized_sparse_q_ref)
         else:
@@ -169,7 +188,10 @@ def distributed_retrieve_prepped(
         q_specs = (P(None, None), P(None, None))
     else:
         qd = pq.dense[None] if squeeze else pq.dense
-        if quantized:
+        if int8_scoring:
+            fn = (fused_retrieve_quantized_mxu if use_fused
+                  else retrieve_quantized_mxu_ref)
+        elif quantized:
             fn = fused_retrieve_quantized if use_fused else retrieve_quantized_ref
         else:
             fn = fused_retrieve if use_fused else retrieve_ref
@@ -209,6 +231,7 @@ def distributed_retrieve(
     mesh,
     axis_name: str = CAND_AXIS,
     use_kernel=None,
+    precision: str = "exact",
 ) -> tuple[jax.Array, jax.Array]:
     """Top-n (cosine scores, global candidate ids) over a candidate-sharded
     mesh.  Same signature/semantics as ``core.retrieve`` plus ``mesh``;
@@ -225,5 +248,5 @@ def distributed_retrieve(
     return distributed_retrieve_prepped(
         index, pq, n,
         mesh=mesh, axis_name=axis_name, use_fused=use_fused,
-        inv_norms=mode_inv_norms(index, mode),
+        inv_norms=mode_inv_norms(index, mode), precision=precision,
     )

@@ -1,11 +1,15 @@
 from repro.kernels.sparse_dot.ops import (
     fused_retrieve,
     fused_retrieve_quantized,
+    fused_retrieve_quantized_mxu,
+    fused_retrieve_quantized_mxu_sparse_q,
     fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
     sparse_dot,
 )
 from repro.kernels.sparse_dot.ref import (
+    retrieve_quantized_mxu_ref,
+    retrieve_quantized_mxu_sparse_q_ref,
     retrieve_quantized_ref,
     retrieve_quantized_sparse_q_ref,
     retrieve_ref,
@@ -24,4 +28,8 @@ __all__ = [
     "retrieve_quantized_ref",
     "fused_retrieve_quantized_sparse_q",
     "retrieve_quantized_sparse_q_ref",
+    "fused_retrieve_quantized_mxu",
+    "retrieve_quantized_mxu_ref",
+    "fused_retrieve_quantized_mxu_sparse_q",
+    "retrieve_quantized_mxu_sparse_q_ref",
 ]

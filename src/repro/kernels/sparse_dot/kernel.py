@@ -56,6 +56,28 @@ Generation 4 — ``fused_retrieve_quantized_pallas`` (+ sparse-query variant):
     VMEM query densification with the quantized candidate stream: neither
     a dense query panel nor an fp32 index ever exists in HBM.
 
+Generation 5 — ``fused_retrieve_quantized_mxu_pallas`` (+ sparse-query
+variant): the APPROXIMATE int8-scoring fast path.
+  * Candidate tiles stream in the same quantized storage dtypes as
+    generation 4, but are never dequantized: scoring runs int8×int8 with
+    int32 accumulation — the int8 MXU's native contraction on real
+    hardware (one (BLOCK_Q, BLOCK_N) i32 accumulator, k gather-FMA
+    rounds), instead of f32 VPU FMAs on dequantized tiles.
+  * The query panel is quantized ONCE per panel into VMEM scratch
+    (``_quantize_panel``: per-row symmetric amax/127, the same arithmetic
+    as ``quantize_codes``): an int8 (BLOCK_Q, h) panel + (BLOCK_Q, 1) f32
+    scales.  Per tile, the single f32 rescale
+    ``(acc·q_scale) · (row_scale·inv_norm)`` folds into the streaming
+    ``_mask_fold_merge`` epilogue — no per-element dequant anywhere.
+  * Contract change: this is the first generation whose relationship to
+    the exact path is a MEASURED QUALITY BOUND (recall@n / score MAE /
+    rank displacement via ``repro.core.eval``), not bit-identity.  What
+    *is* bit-identical is kernel↔ref: int32 accumulation is exact and
+    order-invariant and the panel quantization is the shared
+    ``_quantize_panel``, so the chunked jnp ref reproduces the kernel
+    exactly — unlike the f32 generations, where kernel and ref only agree
+    to rounding.
+
 Generation 3 — ``fused_retrieve_sparse_q_pallas`` (sparse queries in):
   * The scatter-query SpMV from *both* sides: the query panel arrives as
     (BLOCK_Q, kq) (values, indices) sparse codes — the ``fused_encode``
@@ -98,7 +120,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.sparse_dot.ref import _widen_idx
+from repro.kernels.sparse_dot.ref import _quantize_panel, _widen_idx
 
 BLOCK_N = 256  # candidate rows per tile (8-sublane multiple)
 BLOCK_Q = 8    # query rows per VMEM-resident panel
@@ -517,6 +539,198 @@ def fused_retrieve_quantized_sparse_q_pallas(
             jax.ShapeDtypeStruct((nq, n), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
+        interpret=interpret,
+    )(q_values, indices, scales, inv_norms,
+      query_values.astype(jnp.float32), query_indices)
+    return out_v, out_i
+
+
+def _score_tile_int8(vals_i8, idx, q_panel_i8):
+    """(BLOCK_Q, BLOCK_N) int32 scores: k int8 lane-gathers, exact int32
+    accumulation (generation 5).
+
+    vals_i8 (BLOCK_N, k) int8, idx (BLOCK_N, k) i32 (already widened),
+    q_panel_i8 (BLOCK_Q, h) int8.  Products are ≤ 127² and k ≤ a few
+    hundred, so the int32 accumulator cannot overflow; int32 addition is
+    associative, which is what makes the kernel bit-identical to the
+    chunked jnp ref's ``jnp.sum`` over the same products.
+    """
+    bn, k = vals_i8.shape
+    bq = q_panel_i8.shape[0]
+
+    def body(j, acc):
+        col = jax.lax.dynamic_slice_in_dim(idx, j, 1, axis=1)      # (BLOCK_N, 1)
+        vcol = jax.lax.dynamic_slice_in_dim(vals_i8, j, 1, axis=1)
+        gathered = jnp.take_along_axis(
+            q_panel_i8, jnp.broadcast_to(col.T, (bq, bn)), axis=1
+        )                                                          # (BLOCK_Q, BLOCK_N)
+        return acc + gathered.astype(jnp.int32) * vcol.T.astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((bq, bn), jnp.int32))
+
+
+def _make_retrieve_quantized_mxu_kernel(n: int, n_valid: int, block_n: int):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, q_ref,
+               out_v_ref, out_i_ref, qi8_ref, qs_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            qi8, qs = _quantize_panel(q_ref[...])
+            qi8_ref[...] = qi8
+            qs_ref[...] = qs
+
+        acc = _score_tile_int8(
+            qvals_ref[...], _widen_idx(idx_ref[...]), qi8_ref[...]
+        )
+        scores = acc.astype(jnp.float32) * qs_ref[...]             # fold q scale
+        # candidate-side rescale (row dequant scale × reciprocal norm)
+        # rides the existing inv-norm fold in the shared epilogue
+        _mask_fold_merge(scores, scale_ref[...] * inv_ref[...], nb,
+                         out_v_ref, out_i_ref,
+                         n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "n_valid", "interpret", "block_n", "block_q")
+)
+def fused_retrieve_quantized_mxu_pallas(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-scoring fused score+select (generation 5, APPROXIMATE).
+
+    Same operands as ``fused_retrieve_quantized_pallas``, but the tile is
+    never dequantized: the f32 query panel quantizes once per panel into
+    int8 VMEM scratch, scoring runs int8×int8 → int32, and one f32
+    rescale folds into the merge.  Bit-identical to
+    ``retrieve_quantized_mxu_ref``; quality vs the exact quantized path
+    is measured (``repro.core.eval``), not exact.
+    """
+    N, k = q_values.shape
+    nq, h = q.shape
+    grid = (nq // block_q, N // block_n)  # candidate axis innermost
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_quantized_mxu_kernel(n, n_valid, block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, h), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, h), jnp.int8),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_values, indices, scales, inv_norms, q.astype(jnp.float32))
+    return out_v, out_i
+
+
+def _make_retrieve_quantized_mxu_sparse_q_kernel(
+    n: int, n_valid: int, block_n: int, h: int
+):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, qv_ref, qi_ref,
+               out_v_ref, out_i_ref, qi8_ref, qs_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            # densify the code panel (generation 3's scatter) and quantize
+            # it in one go — the f32 panel is a temporary value, only the
+            # int8 panel + scales persist in scratch
+            qi8, qs = _quantize_panel(
+                _densify_panel(qv_ref[...], qi_ref[...], h)
+            )
+            qi8_ref[...] = qi8
+            qs_ref[...] = qs
+
+        acc = _score_tile_int8(
+            qvals_ref[...], _widen_idx(idx_ref[...]), qi8_ref[...]
+        )
+        scores = acc.astype(jnp.float32) * qs_ref[...]
+        _mask_fold_merge(scores, scale_ref[...] * inv_ref[...], nb,
+                         out_v_ref, out_i_ref,
+                         n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "n", "n_valid", "interpret", "block_n", "block_q"),
+)
+def fused_retrieve_quantized_mxu_sparse_q_pallas(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-scoring × sparse query codes (generation 5, APPROXIMATE): the
+    full-compression serving kernel with no dequant anywhere.  The (Q, kq)
+    codes densify into a VMEM panel, quantize per row into int8 scratch,
+    and score the int8 candidate stream with exact int32 accumulation.
+    Bit-identical to ``retrieve_quantized_mxu_sparse_q_ref``.
+    """
+    N, k = q_values.shape
+    nq = query_values.shape[0]
+    grid = (nq // block_q, N // block_n)  # candidate axis innermost
+    kq = query_values.shape[1]
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_quantized_mxu_sparse_q_kernel(n, n_valid, block_n, h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, h), jnp.int8),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
         interpret=interpret,
     )(q_values, indices, scales, inv_norms,
       query_values.astype(jnp.float32), query_indices)

@@ -16,6 +16,8 @@ from repro.kernels.sparse_dot.kernel import (
     BLOCK_N,
     BLOCK_Q,
     fused_retrieve_pallas,
+    fused_retrieve_quantized_mxu_pallas,
+    fused_retrieve_quantized_mxu_sparse_q_pallas,
     fused_retrieve_quantized_pallas,
     fused_retrieve_quantized_sparse_q_pallas,
     fused_retrieve_sparse_q_pallas,
@@ -272,6 +274,115 @@ def fused_retrieve_quantized_sparse_q(
         query_values = jnp.pad(query_values, ((0, qpad), (0, 0)))
         query_indices = jnp.pad(query_indices, ((0, qpad), (0, 0)))
     out_v, out_i = fused_retrieve_quantized_sparse_q_pallas(
+        q_values,
+        indices,
+        scales.astype(jnp.float32).reshape(-1, 1),
+        inv_norms.astype(jnp.float32).reshape(-1, 1),
+        query_values,
+        query_indices,
+        h,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    out_v, out_i = out_v[:nq], out_i[:nq]
+    return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_quantized_mxu(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-scoring fused score+select (generation 5, APPROXIMATE).
+
+    Same operands/padding contract as ``fused_retrieve_quantized``, but
+    candidate tiles are scored in int8 (query panel quantized per panel in
+    VMEM, int32 accumulation, one f32 rescale in the merge) instead of
+    being dequantized.  Bit-identical to ``retrieve_quantized_mxu_ref``;
+    quality vs the exact quantized path is a measured bound
+    (``repro.core.eval``), not an equality.
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    if n > q_values.shape[0]:
+        raise ValueError(
+            f"top-n {n} exceeds candidate count {q_values.shape[0]}"
+        )
+    nq = q.shape[0]
+    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
+        q_values, indices, inv_norms, block_n, scales
+    )
+    qpad = (-nq) % block_q
+    if qpad:
+        q = jnp.pad(q, ((0, qpad), (0, 0)))
+    out_v, out_i = fused_retrieve_quantized_mxu_pallas(
+        q_values,
+        indices,
+        scales.astype(jnp.float32).reshape(-1, 1),
+        inv_norms.astype(jnp.float32).reshape(-1, 1),
+        q,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    out_v, out_i = out_v[:nq], out_i[:nq]
+    return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_quantized_mxu_sparse_q(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-scoring × sparse query codes (generation 5, APPROXIMATE): the
+    no-dequant full-compression serving op.  Codes densify + quantize into
+    VMEM scratch once per panel; candidates stream and score in int8.
+    Bit-identical to ``retrieve_quantized_mxu_sparse_q_ref``.
+    """
+    squeeze = query_values.ndim == 1
+    if squeeze:
+        query_values, query_indices = query_values[None], query_indices[None]
+    if n > q_values.shape[0]:
+        raise ValueError(
+            f"top-n {n} exceeds candidate count {q_values.shape[0]}"
+        )
+    nq = query_values.shape[0]
+    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
+        q_values, indices, inv_norms, block_n, scales
+    )
+    qpad = (-nq) % block_q
+    if qpad:
+        query_values = jnp.pad(query_values, ((0, qpad), (0, 0)))
+        query_indices = jnp.pad(query_indices, ((0, qpad), (0, 0)))
+    out_v, out_i = fused_retrieve_quantized_mxu_sparse_q_pallas(
         q_values,
         indices,
         scales.astype(jnp.float32).reshape(-1, 1),

@@ -29,9 +29,23 @@
                       of ``fused_retrieve_quantized_pallas``'s VMEM
                       dequant, bit-identical to dequantize-then-
                       ``retrieve_ref`` on the same quantized values.
+``retrieve_quantized_mxu_ref`` / ``retrieve_quantized_mxu_sparse_q_ref`` —
+                      generation 5, the APPROXIMATE int8-scoring path: the
+                      query panel is quantized per row to int8
+                      (``_quantize_panel`` — the same symmetric arithmetic
+                      as ``quantize_codes``), scores accumulate as
+                      int8×int8 products in int32, and one f32 rescale by
+                      q_scale·(row_scale·inv_norm) lands in the merge.
+                      Because int32 accumulation is exact and
+                      order-invariant, this is the one generation whose
+                      ref is BIT-identical to its Pallas kernel — the
+                      kernel↔exact-f32 relationship, by contrast, is a
+                      measured quality bound (``repro.core.eval``), not an
+                      equality.
 
-All four streaming variants share one chunked impl (``_retrieve_chunked``);
-the fp32 and quantized paths differ only in the per-block dequant step.
+The exact streaming variants share one chunked impl (``_retrieve_chunked``)
+and the int8-scoring pair shares ``_retrieve_chunked_mxu``; all differ
+only in the per-block dequant / int8-scoring step.
 """
 from __future__ import annotations
 
@@ -60,6 +74,182 @@ def _widen_idx(indices: jax.Array) -> jax.Array:
     if indices.dtype == jnp.int32:
         return indices
     return jnp.bitwise_and(indices.astype(jnp.int32), 0xFFFF)
+
+
+def _quantize_panel(panel: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization of a dense (Q, h) query panel.
+
+    Exactly ``core.quantized_codes.quantize_codes``'s value arithmetic
+    (amax/127 scale floored at 1e-12, round, clip to ±127) applied to
+    query rows.  Shared by the jnp refs AND the Pallas generation-5
+    kernels (the kernel quantizes its VMEM panel with this very function),
+    which is one of the two reasons kernel↔ref is bit-identical on the
+    int8-scoring path — the other being exact int32 accumulation.
+    Rows of zeros (query padding) quantize to all-zero codes.
+
+    Returns ((Q, h) int8 panel, (Q, 1) f32 per-row scales).
+    """
+    amax = jnp.max(jnp.abs(panel), axis=-1, keepdims=True)         # (Q, 1)
+    q_scales = jnp.maximum(amax / 127.0, 1e-12).astype(jnp.float32)
+    qi8 = jnp.clip(jnp.round(panel / q_scales), -127, 127).astype(jnp.int8)
+    return qi8, q_scales
+
+
+def _retrieve_chunked_mxu(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    qp_i8: jax.Array,
+    q_scales: jax.Array,
+    *,
+    n: int,
+    block_n: int,
+    q_chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked streaming top-n over int8×int8 scores (generation 5).
+
+    q_values (N, k) int8 candidate codes, indices (N, k) int16/int32,
+    scales (N,) f32 per-row candidate dequant scales, inv_norms (N,) f32,
+    qp_i8 (Q, h) int8 quantized query panel + q_scales (Q, 1) f32 from
+    ``_quantize_panel``.  Per block: int8 gather, int32 accumulate (exact),
+    then one f32 rescale (acc · q_scale) · (row_scale · inv_norm) — the
+    same op order as the kernel's ``_mask_fold_merge`` fold, so the two
+    paths agree bit-for-bit.
+    """
+    N, k = q_values.shape
+    nq = qp_i8.shape[0]
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+        qp = jnp.pad(qp_i8, ((0, qpad), (0, 0))) if qpad else qp_i8
+        qs = jnp.pad(q_scales, ((0, qpad), (0, 0))) if qpad else q_scales
+        chunks_p = qp.reshape(-1, q_chunk, qp.shape[-1])
+        chunks_s = qs.reshape(-1, q_chunk, 1)
+        bv, bi = jax.lax.map(
+            lambda c: _retrieve_chunked_mxu(
+                q_values, indices, scales, inv_norms, c[0], c[1],
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            (chunks_p, chunks_s),
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    block_n = min(block_n, max(N, 1))
+    pad = (-N) % block_n
+    if pad:
+        q_values = jnp.pad(q_values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        scales = jnp.pad(scales, (0, pad))
+        inv_norms = jnp.pad(inv_norms, (0, pad))
+    nb = (N + pad) // block_n
+    vals_b = q_values.reshape(nb, block_n, k)
+    idx_b = indices.reshape(nb, block_n, k)
+    sc_b = scales.reshape(nb, block_n)
+    inv_b = inv_norms.reshape(nb, block_n)
+    ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+
+    init = (
+        jnp.full((nq, n), -jnp.inf, jnp.float32),
+        jnp.zeros((nq, n), jnp.int32),
+    )
+
+    def step(carry, blk):
+        best_v, best_i = carry
+        bv, bi, bsc, binv, bids = blk
+        bi = _widen_idx(bi)
+        gathered = qp_i8[:, bi]                              # (Q, block_n, k) i8
+        acc = jnp.sum(
+            gathered.astype(jnp.int32) * bv.astype(jnp.int32)[None], axis=-1
+        )                                                    # (Q, block_n) i32
+        s = acc.astype(jnp.float32) * q_scales               # fold q scale
+        s = s * (bsc * binv)[None]                           # fold cand rescale
+        s = jnp.where(bids[None] < N, s, -jnp.inf)           # mask padding
+        cand_v = jnp.concatenate([best_v, s], axis=1)
+        cand_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
+        )
+        v, p = jax.lax.top_k(cand_v, n)
+        return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
+
+    (best_v, best_i), _ = jax.lax.scan(
+        step, init, (vals_b, idx_b, sc_b, inv_b, ids_b)
+    )
+    return best_v, best_i
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_n", "q_chunk"))
+def retrieve_quantized_mxu_ref(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-scoring chunked streaming top-n (generation 5, APPROXIMATE).
+
+    Same signature as ``retrieve_quantized_ref``; the dense (Q, h) query
+    is quantized per row (``_quantize_panel`` — row-independent, so query
+    chunking cannot change it) and candidates are scored int8×int8 with
+    exact int32 accumulation.  Bit-identical to
+    ``fused_retrieve_quantized_mxu``; approximate vs the exact quantized
+    path with quality measured by ``repro.core.eval``.
+    """
+    qp_i8, q_scales = _quantize_panel(q.astype(jnp.float32))
+    return _retrieve_chunked_mxu(
+        q_values, indices, scales, inv_norms, qp_i8, q_scales,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "q_chunk")
+)
+def retrieve_quantized_mxu_sparse_q_ref(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-scoring × sparse query codes (generation 5, APPROXIMATE).
+
+    Query slabs (≤ q_chunk) densify row-wise (the same scatter-add as the
+    kernel's VMEM panel), quantize per row, then stream the int8 scoring.
+    Bit-identical to ``fused_retrieve_quantized_mxu_sparse_q``.
+    """
+    nq = query_values.shape[0]
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+        qv = (jnp.pad(query_values, ((0, qpad), (0, 0)))
+              if qpad else query_values)
+        qi = (jnp.pad(query_indices, ((0, qpad), (0, 0)))
+              if qpad else query_indices)
+        chunks_v = qv.reshape(-1, q_chunk, qv.shape[-1])
+        chunks_i = qi.reshape(-1, q_chunk, qi.shape[-1])
+        bv, bi = jax.lax.map(
+            lambda c: retrieve_quantized_mxu_sparse_q_ref(
+                q_values, indices, scales, inv_norms, c[0], c[1], h,
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            (chunks_v, chunks_i),
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    qp_i8, q_scales = _quantize_panel(
+        _densify_rows(query_values.astype(jnp.float32), query_indices, h)
+    )
+    return _retrieve_chunked_mxu(
+        q_values, indices, scales, inv_norms, qp_i8, q_scales,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )
 
 
 def _retrieve_chunked(

@@ -33,6 +33,15 @@ dequantizes candidate tiles in VMEM.  Results are bit-identical to
 serving the dequantized index; composes with ``--shards``:
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized
+
+Approximate int8 scoring (``--precision int8``, requires ``--quantized``):
+candidate tiles are scored in int8×int8 with int32 accumulation
+(generation 5) instead of being dequantized to f32 first — the quality
+cost vs exact scoring is reported live as recall@n against the same
+exact quantized engine (``repro.core.eval``), alongside the usual recall
+against dense truth:
+
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --precision int8
 """
 from __future__ import annotations
 
@@ -83,6 +92,7 @@ from repro.core import (
     train_step,
 )
 from repro.core.retrieval import kernel_path
+from repro.core.eval import recall_at_n, retrieval_quality
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
 from repro.serving import RetrievalEngine
@@ -112,7 +122,15 @@ def main(argv=None):
                          "(int8 values + int16/int32 indices + fp32 scales "
                          "in HBM, dequantized tile-by-tile in VMEM) — "
                          "bit-identical to serving the dequantized index")
+    ap.add_argument("--precision", choices=["exact", "int8"], default="exact",
+                    help="scoring precision: 'exact' (default; bit-identical "
+                         "to the fp32 path) or 'int8' (approximate int8-MXU "
+                         "scoring, requires --quantized; quality vs exact "
+                         "is reported per request)")
     args = ap.parse_args(argv)
+    if args.precision == "int8" and not args.quantized:
+        ap.error("--precision int8 requires --quantized (the int8 scoring "
+                 "path reads int8 candidate tiles)")
 
     use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
     path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
@@ -151,12 +169,23 @@ def main(argv=None):
               f"({100 * q_bytes / sparse_bytes:.0f}% of the fp32 codes, "
               f"{dense_bytes/q_bytes:.1f}x vs dense)")
 
+    if args.precision == "int8":
+        path = f"{path}+int8"
     engine = RetrievalEngine(
         state.params, index,
         mode=args.mode, use_kernel=use_kernel, mesh=mesh,
+        precision=args.precision,
     )
+    # int8 scoring is approximate: measure its live quality against the
+    # SAME engine at exact precision (the harness's reference path)
+    exact_engine = None
+    if args.precision == "int8":
+        exact_engine = RetrievalEngine(
+            state.params, index,
+            mode=args.mode, use_kernel=use_kernel, mesh=mesh,
+        )
 
-    lat, recalls = [], []
+    lat, recalls, vs_exact = [], [], []
     for r in range(args.requests):
         q = clustered_embeddings(jax.random.PRNGKey(1000 + r), args.batch, d=cfg.d)
         t0 = time.time()
@@ -164,14 +193,15 @@ def main(argv=None):
         jax.block_until_ready(ids)
         lat.append(time.time() - t0)
         _, true_ids = top_n(score_dense(catalog, q), args.topn)
-        hits = sum(
-            len(set(a.tolist()) & set(b.tolist()))
-            for a, b in zip(np.asarray(ids), np.asarray(true_ids))
-        )
-        recalls.append(hits / true_ids.size)
+        recalls.append(recall_at_n(ids, true_ids))
+        if exact_engine is not None:
+            exact = exact_engine.retrieve_dense(q, args.topn)
+            vs_exact.append(retrieval_quality((vals, ids), exact)["recall"])
     lat_ms = np.array(lat[1:]) * 1e3  # drop compile step
+    quality = (f"int8-vs-exact recall@{args.topn} {np.mean(vs_exact):.3f} "
+               if vs_exact else "")
     prefix = (f"[serve] mode={args.mode} path={path} shards={args.shards} "
-              f"recall@{args.topn} {np.mean(recalls):.3f} | ")
+              f"recall@{args.topn} {np.mean(recalls):.3f} {quality}| ")
     if lat_ms.size:
         print(prefix +
               f"latency p50 {np.percentile(lat_ms, 50):.1f} ms "

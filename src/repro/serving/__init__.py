@@ -1,6 +1,8 @@
 from repro.serving.engine import (
+    PRECISIONS,
     PreppedQuery,
     RetrievalEngine,
+    check_precision,
     mode_inv_norms,
     prep_query,
     retrieve_prepped,
@@ -12,4 +14,6 @@ __all__ = [
     "prep_query",
     "retrieve_prepped",
     "mode_inv_norms",
+    "check_precision",
+    "PRECISIONS",
 ]

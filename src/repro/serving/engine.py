@@ -52,13 +52,39 @@ from repro.kernels.fused_encode import fused_encode
 from repro.kernels.sparse_dot import (
     fused_retrieve,
     fused_retrieve_quantized,
+    fused_retrieve_quantized_mxu,
+    fused_retrieve_quantized_mxu_sparse_q,
     fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
+    retrieve_quantized_mxu_ref,
+    retrieve_quantized_mxu_sparse_q_ref,
     retrieve_quantized_ref,
     retrieve_quantized_sparse_q_ref,
     retrieve_ref,
     retrieve_sparse_q_ref,
 )
+
+PRECISIONS = ("exact", "int8")
+
+
+def check_precision(index, precision: str) -> str:
+    """Validate a scoring-precision switch against an index format.
+
+    ``"exact"`` — dequantize-(if needed)-and-score-in-f32, bit-identical
+    to the fp32 path (every index).  ``"int8"`` — generation 5's
+    approximate int8×int8 scoring; requires a ``QuantizedIndex`` (the
+    candidate tiles must already live in int8).
+    """
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r} (expected one of {PRECISIONS})"
+        )
+    if precision == "int8" and not isinstance(index.codes, QuantizedCodes):
+        raise ValueError(
+            "precision='int8' requires a QuantizedIndex "
+            "(build_index(..., quantize=True)); got fp32 codes"
+        )
+    return precision
 
 
 class PreppedQuery(NamedTuple):
@@ -130,6 +156,7 @@ def retrieve_prepped(
     *,
     use_fused: bool,
     inv_norms: Optional[jax.Array] = None,
+    precision: str = "exact",
 ) -> tuple[jax.Array, jax.Array]:
     """Single-device streaming score+select over a prepped query batch.
 
@@ -143,13 +170,22 @@ def retrieve_prepped(
     the candidate side streams int8/int16 + per-row scales and dequantizes
     in VMEM (kernel) or per block (ref) — bit-identical to serving the
     dequantized index, with the index never materialized in fp32.
+
+    ``precision="int8"`` (QuantizedIndex only) instead routes to
+    generation 5: candidate tiles are scored in int8 (query panel
+    quantized in VMEM, int32 accumulation, one f32 rescale in the merge)
+    — an APPROXIMATE path whose quality vs ``"exact"`` is measured by
+    ``repro.core.eval`` and gated on recall, not bit-identity.  Kernel
+    and ref remain bit-identical to each other on this path too.
     """
+    check_precision(index, precision)
     if inv_norms is None:
         inv_norms = mode_inv_norms(
             index, "sparse" if pq.is_sparse else "reconstructed"
         )
     squeeze = pq.norm.ndim == 0
     quantized = isinstance(index.codes, QuantizedCodes)
+    int8_scoring = precision == "int8"
     if quantized:
         cand = (index.codes.q_values, index.codes.indices, index.codes.scales)
     else:
@@ -158,7 +194,10 @@ def retrieve_prepped(
         qv = pq.values[None] if squeeze else pq.values
         qi = pq.indices[None] if squeeze else pq.indices
         h = index.codes.dim
-        if quantized:
+        if int8_scoring:
+            fn = (fused_retrieve_quantized_mxu_sparse_q if use_fused
+                  else retrieve_quantized_mxu_sparse_q_ref)
+        elif quantized:
             fn = (fused_retrieve_quantized_sparse_q if use_fused
                   else retrieve_quantized_sparse_q_ref)
         else:
@@ -166,7 +205,10 @@ def retrieve_prepped(
         vals, ids = fn(*cand, inv_norms, qv, qi, h, n=n)
     else:
         qd = pq.dense[None] if squeeze else pq.dense
-        if quantized:
+        if int8_scoring:
+            fn = (fused_retrieve_quantized_mxu if use_fused
+                  else retrieve_quantized_mxu_ref)
+        elif quantized:
             fn = fused_retrieve_quantized if use_fused else retrieve_quantized_ref
         else:
             fn = fused_retrieve if use_fused else retrieve_ref
@@ -193,6 +235,9 @@ class RetrievalEngine:
     ``mesh``: a mesh with a ``shard_axis`` axis routes every request
     through candidate-sharded distributed retrieval, with the prepped
     query replicated (for sparse mode: just the (Q, k) codes).
+    ``precision``: ``"exact"`` (default; bit-identical to the fp32 path)
+    or ``"int8"`` (generation 5's approximate int8-scoring fast path —
+    QuantizedIndex only, quality gated on recall via ``repro.core.eval``).
 
     ``retrieve_dense`` jit-compiles the whole request (encode → score →
     select) once per distinct ``n`` and caches the executable, so steady
@@ -209,6 +254,7 @@ class RetrievalEngine:
         mesh=None,
         shard_axis: str = "cand",
         k: Optional[int] = None,
+        precision: str = "exact",
     ):
         if mode not in ("sparse", "reconstructed"):
             raise ValueError(f"unknown retrieval mode: {mode!r}")
@@ -227,6 +273,7 @@ class RetrievalEngine:
         self.mesh = mesh
         self.shard_axis = shard_axis
         self.k = index.codes.k if k is None else k
+        self.precision = check_precision(index, precision)
         self._inv_norms = mode_inv_norms(index, mode)
         self._serve_cache: dict[int, callable] = {}
 
@@ -262,10 +309,12 @@ class RetrievalEngine:
                 self.index, pq, n,
                 mesh=self.mesh, axis_name=self.shard_axis,
                 use_fused=self.use_fused, inv_norms=self._inv_norms,
+                precision=self.precision,
             )
         return retrieve_prepped(
             self.index, pq, n,
             use_fused=self.use_fused, inv_norms=self._inv_norms,
+            precision=self.precision,
         )
 
     def retrieve_dense(

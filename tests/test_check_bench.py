@@ -1,0 +1,130 @@
+"""The bench-regression gate itself (tools/check_bench.py) on hand-built
+records — CI trusts it to tell schema/row-set/recall regressions (gate)
+apart from timing noise (warn-only)."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "tools"))
+from check_bench import compare, main, render_summary  # noqa: E402
+
+
+def rec(name, **over):
+    base = {"name": name, "us_per_call": 1000.0, "recall": 0.5,
+            "path": "jnp-chunked", "shards": 1, "n": 1024, "q": 16,
+            "topn": 5, "smoke": True}
+    base.update(over)
+    return base
+
+
+def by_name(*records):
+    return {r["name"]: r for r in records}
+
+
+def test_identical_records_pass():
+    b = by_name(rec("retrieval_sparse"), rec("retrieval_dense"))
+    failures, warnings = compare(b, dict(b), recall_tol=0.02)
+    assert failures == [] and warnings == []
+
+
+def test_missing_baseline_row_fails_new_row_warns():
+    b = by_name(rec("retrieval_sparse"), rec("retrieval_dense"))
+    f = by_name(rec("retrieval_sparse"), rec("retrieval_new"))
+    failures, warnings = compare(b, f, recall_tol=0.02)
+    assert any("disappeared" in x and "retrieval_dense" in x
+               for x in failures)
+    assert any("new row" in w and "retrieval_new" in w for w in warnings)
+
+
+def test_recall_regression_gates_but_improvement_passes():
+    b = by_name(rec("retrieval_sparse", recall=0.50))
+    worse = by_name(rec("retrieval_sparse", recall=0.40))
+    failures, _ = compare(b, worse, recall_tol=0.02)
+    assert any("recall regression" in x for x in failures)
+    better = by_name(rec("retrieval_sparse", recall=0.60))
+    failures, _ = compare(b, better, recall_tol=0.02)
+    assert failures == []
+    # a drop within tolerance passes too
+    close = by_name(rec("retrieval_sparse", recall=0.49))
+    failures, _ = compare(b, close, recall_tol=0.02)
+    assert failures == []
+
+
+def test_recall_star_fields_are_gated_too():
+    # the int8 row's recall_vs_exact is a recall* field: regression gates
+    b = by_name(rec("retrieval_sparse_quantized_mxu", k=32,
+                    precision="int8", recall_vs_exact=0.99,
+                    score_mae=1e-4, rank_displacement=0.1, quality_n=32))
+    f = by_name(rec("retrieval_sparse_quantized_mxu", k=32,
+                    precision="int8", recall_vs_exact=0.80,
+                    score_mae=1e-4, rank_displacement=0.1, quality_n=32))
+    failures, _ = compare(b, f, recall_tol=0.02)
+    assert any("recall_vs_exact" in x for x in failures)
+
+
+def test_us_per_call_is_warn_only():
+    b = by_name(rec("retrieval_sparse", us_per_call=1000.0))
+    f = by_name(rec("retrieval_sparse", us_per_call=3000.0))
+    failures, warnings = compare(b, f, recall_tol=0.02)
+    assert failures == []
+    assert any("us_per_call" in w and "warn-only" in w for w in warnings)
+
+
+def test_changed_configuration_skips_recall_gate_with_warning():
+    # different shape/path/shards: not comparable per docs/BENCHMARKS.md
+    b = by_name(rec("retrieval_sparse", n=1024, recall=0.9))
+    f = by_name(rec("retrieval_sparse", n=16384, recall=0.2))
+    failures, warnings = compare(b, f, recall_tol=0.02)
+    assert failures == []
+    assert any("not comparable" in w for w in warnings)
+
+
+def test_schema_gate_on_required_and_extra_fields():
+    f = by_name({"name": "retrieval_sparse", "us_per_call": 1.0})
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("schema" in x and "recall" in x for x in failures)
+    # the int8 row's extra fields are required on the fresh side
+    f = by_name(rec("retrieval_sparse_quantized_mxu", k=32))
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("recall_vs_exact" in x for x in failures)
+
+
+def test_main_end_to_end_with_summary(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    summary = tmp_path / "summary.md"
+    base.write_text(json.dumps([rec("retrieval_sparse", recall=0.5)]))
+    fresh.write_text(json.dumps([rec("retrieval_sparse", recall=0.5)]))
+    assert main([str(base), str(fresh), "--summary", str(summary)]) == 0
+    assert "**OK**" in summary.read_text()
+    fresh.write_text(json.dumps([rec("retrieval_sparse", recall=0.1)]))
+    assert main([str(base), str(fresh), "--summary", str(summary)]) == 1
+    assert "**FAIL**" in summary.read_text()
+
+
+def test_nameless_record_fails_cleanly(tmp_path):
+    # a record without "name" must be a clean gate failure (reported in
+    # the summary), not a KeyError traceback
+    bad = tmp_path / "bad.json"
+    good = tmp_path / "good.json"
+    summary = tmp_path / "summary.md"
+    bad.write_text(json.dumps([{"us_per_call": 1.0}]))
+    good.write_text(json.dumps([rec("retrieval_sparse")]))
+    assert main([str(bad), str(good), "--summary", str(summary)]) == 1
+    assert "no 'name' field" in summary.read_text()
+
+
+def test_render_summary_lists_findings():
+    md = render_summary(["bad thing"], ["meh thing"])
+    assert ":x: bad thing" in md and ":warning: meh thing" in md
+
+
+def test_gate_accepts_the_committed_record():
+    """The committed BENCH_retrieval.json must pass its own gate against
+    itself — otherwise the CI step is born red."""
+    bench = pathlib.Path(__file__).parents[1] / "BENCH_retrieval.json"
+    if not bench.exists():
+        pytest.skip("no committed perf record")
+    assert main([str(bench), str(bench)]) == 0

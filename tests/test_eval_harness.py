@@ -1,0 +1,131 @@
+"""The retrieval-quality harness itself (repro.core.eval, ISSUE 5) on
+hand-built cases with known answers — the harness gates the approximate
+int8 serving path, so its own semantics (ties, clamping, the n > matches
+edge) must be pinned before anything trusts it."""
+import numpy as np
+import pytest
+
+from repro.core.eval import (
+    rank_displacement,
+    recall_at_n,
+    retrieval_quality,
+    score_mae,
+)
+
+
+# ------------------------------------------------------------- recall_at_n
+def test_recall_known_overlap():
+    # 3 of 4 reference ids recovered, order-insensitive
+    assert recall_at_n([9, 1, 3, 7], [1, 3, 5, 9]) == pytest.approx(0.75)
+    # perfect and zero overlap
+    assert recall_at_n([1, 2], [2, 1]) == 1.0
+    assert recall_at_n([5, 6], [1, 2]) == 0.0
+
+
+def test_recall_batched_means_over_queries():
+    got = [[1, 2, 3], [10, 11, 12]]
+    ref = [[1, 2, 3], [12, 99, 98]]
+    assert recall_at_n(got, ref) == pytest.approx((1.0 + 1 / 3) / 2)
+
+
+def test_recall_truncates_to_n():
+    # only the first n entries of both lists count
+    assert recall_at_n([1, 2, 99, 98], [1, 2, 3, 4], n=2) == 1.0
+    assert recall_at_n([99, 98, 1, 2], [1, 2, 3, 4], n=2) == 0.0
+
+
+def test_recall_n_exceeds_matches_edge():
+    # n beyond the rows' length clamps: a 3-long list measured at n=10 is
+    # recall over the 3 ids actually present, not 3/10
+    assert recall_at_n([4, 5, 6], [6, 5, 4], n=10) == 1.0
+    assert recall_at_n([4, 5, 7], [6, 5, 4], n=10) == pytest.approx(2 / 3)
+
+
+def test_recall_duplicate_reference_ids_count_once():
+    # ties in a hand-built reference can duplicate an id: denominator is
+    # the number of DISTINCT reference ids, keeping recall within [0, 1]
+    assert recall_at_n([7, 8], [7, 7, 8]) == 1.0
+    assert recall_at_n([7, 1], [7, 7, 8]) == pytest.approx(0.5)
+
+
+def test_recall_query_count_mismatch_raises():
+    with pytest.raises(ValueError, match="query-count mismatch"):
+        recall_at_n([[1, 2]], [[1, 2], [3, 4]])
+
+
+# --------------------------------------------------------------- score_mae
+def test_score_mae_known_values():
+    assert score_mae([3.0, 2.0, 1.0], [3.0, 2.0, 1.0]) == 0.0
+    # positional |Δ| after both sides sort descending: (.5 + .5 + 0) / 3
+    assert score_mae([2.5, 1.5, 1.0], [3.0, 2.0, 1.0]) == pytest.approx(0.5 * 2 / 3)
+
+
+def test_score_mae_sorts_before_comparing():
+    # provider order must not matter — only the score curves
+    assert score_mae([1.0, 3.0, 2.0], [3.0, 2.0, 1.0]) == 0.0
+
+
+def test_score_mae_ties_cost_nothing():
+    # exactly tied scores compare equal positionally regardless of which
+    # tied candidate each path surfaced first
+    assert score_mae([2.0, 2.0, 1.0], [2.0, 2.0, 1.0]) == 0.0
+
+
+def test_score_mae_truncates_to_common_width():
+    # different lengths: compare the overlapping (sorted) prefix
+    assert score_mae([3.0, 2.0], [3.0, 2.0, 1.0]) == 0.0
+    assert score_mae([3.0, 2.0, 1.0], [3.0, 1.0], n=2) == pytest.approx(0.5)
+
+
+# -------------------------------------------------------- rank_displacement
+def test_rank_displacement_identity_is_zero():
+    assert rank_displacement([5, 6, 7], [5, 6, 7]) == 0.0
+
+
+def test_rank_displacement_adjacent_swap():
+    # one adjacent transposition: two ids displaced by 1 each, one exact
+    assert rank_displacement([6, 5, 7], [5, 6, 7]) == pytest.approx(2 / 3)
+
+
+def test_rank_displacement_missing_id_charged_n():
+    # 99 is absent from the reference: worst-case charge n (=3 here)
+    assert rank_displacement([5, 6, 99], [5, 6, 7]) == pytest.approx(3 / 3)
+
+
+def test_rank_displacement_duplicate_ref_resolves_to_best_rank():
+    # a duplicated reference id maps to its FIRST (best) position: the 7
+    # at approx rank 0 costs |0-0|, not |0-1|; 9 sits 1 rank off
+    assert rank_displacement([7, 9], [7, 7, 9], n=3) == pytest.approx(0.5)
+
+
+def test_rank_displacement_clamps_n():
+    assert rank_displacement([5, 6], [6, 5], n=10) == 1.0
+
+
+# -------------------------------------------------------- retrieval_quality
+def test_retrieval_quality_bundle():
+    approx = (np.array([[0.9, 0.8, 0.7]]), np.array([[4, 5, 9]]))
+    exact = (np.array([[0.95, 0.8, 0.7]]), np.array([[5, 4, 6]]))
+    out = retrieval_quality(approx, exact)
+    assert out["n"] == 3
+    assert out["recall"] == pytest.approx(2 / 3)
+    assert out["score_mae"] == pytest.approx(0.05 / 3)
+    # 4 and 5 swapped (1 each), 9 missing (charged 3): (1 + 1 + 3) / 3
+    assert out["rank_displacement"] == pytest.approx(5 / 3)
+
+
+def test_retrieval_quality_single_query_layout():
+    # (n,) single-query layout, exactly as the squeezed serving API returns
+    approx = (np.array([0.9, 0.8]), np.array([1, 2]))
+    exact = (np.array([0.9, 0.8]), np.array([1, 2]))
+    out = retrieval_quality(approx, exact)
+    assert out == {"n": 2, "recall": 1.0, "score_mae": 0.0,
+                   "rank_displacement": 0.0}
+
+
+def test_retrieval_quality_respects_n():
+    approx = (np.array([[0.9, 0.1]]), np.array([[1, 99]]))
+    exact = (np.array([[0.9, 0.8]]), np.array([[1, 2]]))
+    out = retrieval_quality(approx, exact, n=1)
+    assert out["n"] == 1 and out["recall"] == 1.0
+    assert out["score_mae"] == 0.0 and out["rank_displacement"] == 0.0

@@ -18,11 +18,16 @@ from repro.kernels.fused_encode.ref import fused_encode_ref
 from repro.kernels.sparse_dot.ops import (
     fused_retrieve,
     fused_retrieve_quantized,
+    fused_retrieve_quantized_mxu,
+    fused_retrieve_quantized_mxu_sparse_q,
     fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
     sparse_dot,
 )
 from repro.kernels.sparse_dot.ref import (
+    _quantize_panel,
+    retrieve_quantized_mxu_ref,
+    retrieve_quantized_mxu_sparse_q_ref,
     retrieve_quantized_ref,
     retrieve_quantized_sparse_q_ref,
     retrieve_ref,
@@ -368,6 +373,160 @@ def test_quantized_single_query_and_validation():
     qv = jnp.zeros((1, 8)); qi = jnp.zeros((1, 8), jnp.int32)
     with pytest.raises(ValueError):
         fused_retrieve_quantized_sparse_q(
+            qc.q_values, qc.indices, qc.scales, inv, qv, qi, 128, n=97
+        )
+
+
+# -------------------------------------------- fused_retrieve_quantized_mxu
+# Generation 5 is APPROXIMATE vs the exact quantized path, but its kernel
+# and chunked jnp ref must be BIT-identical to each other: int32
+# accumulation is exact/order-invariant and the query-panel quantization
+# is one shared function — the only generation where kernel↔ref equality
+# is array_equal rather than allclose.
+@pytest.mark.parametrize("n,q,topn", [(64, 9, 64), (256, 1, 5),
+                                      (1000, 3, 10), (4097, 5, 20),
+                                      (300, 150, 7)])
+def test_quantized_mxu_kernel_ref_bit_identical(n, q, topn):
+    qc, deq, inv, qq = _quantized_case(n, q, 8, 256, seed=n + q)
+    got_v, got_i = fused_retrieve_quantized_mxu(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=topn
+    )
+    ref_v, ref_i = retrieve_quantized_mxu_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+    # and the ref's candidate blocking cannot change the result either
+    blk_v, blk_i = retrieve_quantized_mxu_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=topn, block_n=96
+    )
+    np.testing.assert_array_equal(np.asarray(blk_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(blk_i), np.asarray(ref_i))
+
+
+def test_quantized_mxu_close_to_exact_scores():
+    """The approximate path's contract vs the exact quantized path is a
+    quality bound, not equality: per-element error of the int8 scoring is
+    bounded by the two symmetric-quantization steps (≲1% of each side's
+    amax), so norm-folded cosine scores must agree to ~1e-2."""
+    qc, deq, inv, qq = _quantized_case(512, 6, 8, 256, seed=99)
+    ex_v, _ = retrieve_quantized_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=16
+    )
+    ap_v, _ = retrieve_quantized_mxu_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=16
+    )
+    np.testing.assert_allclose(np.asarray(ap_v), np.asarray(ex_v), atol=5e-2)
+    assert float(np.abs(np.asarray(ap_v) - np.asarray(ex_v)).mean()) < 2e-2
+
+
+def test_quantized_mxu_tied_scores_match_lax_topk():
+    # duplicated candidate rows share a quantization scale AND quantize to
+    # identical int8 codes, so int8 scores tie EXACTLY across tile
+    # boundaries; the merge must resolve them like lax.top_k (lowest id)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    vals = jnp.tile(jax.random.normal(ks[0], (40, 4), jnp.float32), (8, 1))
+    idx = jnp.tile(jax.random.randint(ks[1], (40, 4), 0, 64, jnp.int32), (8, 1))
+    qq = jax.random.normal(ks[2], (3, 64), jnp.float32)
+    qc = quantize_codes(SparseCodes(values=vals, indices=idx, dim=64))
+    deq = dequantize_codes(qc)
+    inv = 1.0 / jnp.maximum(jnp.linalg.norm(deq.values, axis=-1), 1e-8)
+    got_v, got_i = fused_retrieve_quantized_mxu(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=17,
+        block_n=64, block_q=2,
+    )
+    ref_v, ref_i = retrieve_quantized_mxu_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=17, block_n=96
+    )
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+    # within a tied run, ids must come out ascending (lowest id wins)
+    gi = np.asarray(got_i)
+    gv = np.asarray(got_v)
+    for row_v, row_i in zip(gv, gi):
+        for a in range(16):
+            if row_v[a] == row_v[a + 1]:
+                assert row_i[a] < row_i[a + 1]
+
+
+@pytest.mark.parametrize("h,want_dtype", [(256, jnp.int16),
+                                          (40000, jnp.int16),
+                                          (70000, jnp.int32)])
+def test_quantized_mxu_int16_wraparound(h, want_dtype):
+    """The int8-scoring path shares the low-16-bit index widen: indices in
+    the two's-complement wrap region (h=40000) and the int32 fallback
+    (h >= 65536) must stay kernel↔ref bit-identical."""
+    qc, deq, inv, qq = _quantized_case(300, 2, 8, h, seed=h)
+    assert qc.indices.dtype == want_dtype
+    got = fused_retrieve_quantized_mxu(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=7
+    )
+    ref = retrieve_quantized_mxu_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qq, n=7
+    )
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+# ragged N/Q, Q > the ref q_chunk (chunked densify+quantize), duplicate
+# query indices (densify-then-quantize must share the scatter-add order)
+@pytest.mark.parametrize("n,q,topn,idx_hi", [(64, 9, 64, None),
+                                             (1000, 13, 10, None),
+                                             (300, 150, 7, None),
+                                             (200, 11, 9, 9)])
+def test_quantized_mxu_sparse_q_bit_identical(n, q, topn, idx_hi):
+    kq = 8
+    qc, deq, inv, _ = _quantized_case(n, q, kq, 256, seed=n + q)
+    ks = jax.random.split(jax.random.PRNGKey(n * q + 1), 2)
+    qv = jax.random.normal(ks[0], (q, kq), jnp.float32)
+    qi = jax.random.randint(ks[1], (q, kq), 0, idx_hi or 256, dtype=jnp.int32)
+    got_v, got_i = fused_retrieve_quantized_mxu_sparse_q(
+        qc.q_values, qc.indices, qc.scales, inv, qv, qi, 256, n=topn
+    )
+    ref_v, ref_i = retrieve_quantized_mxu_sparse_q_ref(
+        qc.q_values, qc.indices, qc.scales, inv, qv, qi, 256, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+    # the sparse-q path must equal densify + the dense-query mxu path:
+    # same panel values -> same quantized panel -> same int8 scores
+    qd = _densify(qv, qi, 256)
+    dn_v, dn_i = fused_retrieve_quantized_mxu(
+        qc.q_values, qc.indices, qc.scales, inv, qd, n=topn
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(dn_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(dn_i))
+
+
+def test_quantize_panel_matches_quantize_codes_arithmetic():
+    """The shared panel quantizer must reproduce quantize_codes' value
+    arithmetic exactly (same scale floor, rounding, clip) — it is the
+    reason the offline and online int8 representations agree."""
+    vals = jax.random.normal(jax.random.PRNGKey(0), (5, 16), jnp.float32)
+    idx = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (5, 16))
+    qc = quantize_codes(SparseCodes(values=vals, indices=idx, dim=16))
+    qi8, qs = _quantize_panel(vals)
+    np.testing.assert_array_equal(np.asarray(qi8), np.asarray(qc.q_values))
+    np.testing.assert_array_equal(np.asarray(qs[:, 0]), np.asarray(qc.scales))
+    # zero rows (query padding) quantize to zeros with the floored scale
+    zi8, zs = _quantize_panel(jnp.zeros((2, 8), jnp.float32))
+    assert (np.asarray(zi8) == 0).all() and (np.asarray(zs) == 1e-12).all()
+
+
+def test_quantized_mxu_single_query_and_validation():
+    qc, deq, inv, qq = _quantized_case(96, 1, 8, 128, seed=11)
+    v, i = fused_retrieve_quantized_mxu(
+        qc.q_values, qc.indices, qc.scales, inv, qq[0], n=96
+    )
+    assert v.shape == (96,) and i.shape == (96,)
+    assert sorted(np.asarray(i).tolist()) == list(range(96))
+    with pytest.raises(ValueError):
+        fused_retrieve_quantized_mxu(
+            qc.q_values, qc.indices, qc.scales, inv, qq, n=97
+        )
+    qv = jnp.zeros((1, 8)); qi = jnp.zeros((1, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        fused_retrieve_quantized_mxu_sparse_q(
             qc.q_values, qc.indices, qc.scales, inv, qv, qi, 128, n=97
         )
 

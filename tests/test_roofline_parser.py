@@ -1,4 +1,5 @@
-"""Unit tests for the loop-adjusted HLO cost model (benchmarks/roofline.py)."""
+"""Unit tests for the loop-adjusted HLO cost model and the analytic
+retrieval traffic model (benchmarks/roofline.py)."""
 import math
 import pathlib
 import sys
@@ -7,7 +8,9 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "benchmarks"))
 from roofline import (  # noqa: E402
-    _trip_count, collective_bytes, hlo_cost, split_computations,
+    HBM_BW, PEAK_FLOPS, PEAK_INT8_OPS,
+    _trip_count, collective_bytes, hlo_cost, quantized_row_bytes,
+    retrieval_traffic, retrieval_traffic_report, split_computations,
 )
 
 HLO = """\
@@ -72,6 +75,67 @@ def test_hlo_cost_dot_flops_and_loop_bytes():
     assert cost["coll"] == pytest.approx(512 * 2 * 5)
     # bytes include the dot (in+out) and 5x the loop body's AR traffic
     assert cost["bytes"] >= (8 * 16 + 16 * 32 + 8 * 32) * 4
+
+
+# ------------------------------------------- retrieval traffic model (g5)
+def test_quantized_row_bytes_formula():
+    # k·(1 + idx_bytes) + 4-byte scale; int16 indices below 65536, int32 at
+    assert quantized_row_bytes(32, 4096) == 32 * 3 + 4
+    assert quantized_row_bytes(32, 65535) == 32 * 3 + 4
+    assert quantized_row_bytes(32, 65536) == 32 * 5 + 4
+    assert quantized_row_bytes(16, 70000) == 16 * 5 + 4
+
+
+def test_retrieval_traffic_quantized_bytes():
+    n, k, q, topn, bq, h = 1000, 32, 64, 20, 8, 4096
+    rows = retrieval_traffic(n, k, q, topn, bq, h)
+    panels = -(-q // bq)
+    out = q * topn * 8
+    # fp32 fused: 8k B/row streamed once per panel + norms + results
+    assert rows["fused"]["bytes"] == n * k * 8 * panels + n * 4 + out
+    # quantized fused: the compound storage format is what streams
+    assert rows["fused_quantized"]["bytes"] == (
+        n * quantized_row_bytes(k, h) * panels + n * 4 + out
+    )
+    # per-row accounting includes the 4 B reciprocal norm on both formats
+    assert rows["fused"]["bytes_per_row"] == 8 * k + 4
+    assert rows["fused_quantized"]["bytes_per_row"] == (
+        quantized_row_bytes(k, h) + 4
+    )
+    # t_mem is bytes over HBM bandwidth
+    assert rows["fused"]["t_mem_ms"] == pytest.approx(
+        rows["fused"]["bytes"] / HBM_BW * 1e3
+    )
+
+
+def test_retrieval_traffic_int8_mxu_terms():
+    rows = retrieval_traffic(100_000, 32, 64, 20, 8, 4096)
+    g4, g5 = rows["fused_quantized"], rows["fused_quantized_mxu"]
+    # int8 scoring adds NO HBM traffic: the query panel quantizes in VMEM
+    # and the candidate stream is the same int8/int16 storage either way
+    assert g5["bytes"] == g4["bytes"]
+    assert g5["speedup_vs_per_query"] == g4["speedup_vs_per_query"]
+    # ...but the scoring contraction runs at the int8 MXU rate (2x)
+    assert g5["t_comp_ms"] == pytest.approx(
+        g4["t_comp_ms"] * PEAK_FLOPS / PEAK_INT8_OPS
+    )
+    assert g5["t_comp_ms"] < g4["t_comp_ms"]
+    # generation ordering on HBM traffic (the roofline bound here)
+    b = {name: r["bytes"] for name, r in rows.items()}
+    assert (b["fused_quantized"] < b["fused"] < b["blocked"]
+            < b["per_query"])
+    # at k=32, h<65536 the quantized stream is ~2.5x lighter per row
+    assert g4["bytes_per_row"] / rows["fused"]["bytes_per_row"] < 0.41
+
+
+def test_retrieval_traffic_report_lists_all_generations():
+    report = retrieval_traffic_report(1000, 32, 16, 5, 8, 4096)
+    for row in ("per_query", "blocked", "fused", "fused_quantized",
+                "fused_quantized_mxu"):
+        assert f"| {row} |" in report
+    assert "int16 indices" in report
+    assert "int32 indices" in retrieval_traffic_report(1000, 32, 16, 5, 8,
+                                                       70000)
 
 
 def test_real_artifact_parses():

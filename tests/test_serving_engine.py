@@ -173,6 +173,104 @@ def test_quantized_index_via_core_retrieve(qsetup):
         retrieve(qindex, q_codes, qindex.codes.n + 1, use_kernel=False)
 
 
+# ------------------------------------------------- precision="int8" (ISSUE 5)
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+def test_int8_engine_kernel_ref_bit_identical(qsetup, mode):
+    """The approximate path keeps the OTHER bit-identity: engine over the
+    fused kernels (interpret mode) == engine over the jnp refs, exactly —
+    int32 accumulation plus the shared panel quantizer leave no rounding
+    slack between the two backends."""
+    params, qindex, _, queries = qsetup
+    ek = RetrievalEngine(params, qindex, mode=mode, use_kernel=True,
+                         precision="int8")
+    er = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
+                         precision="int8")
+    kv, ki = ek.retrieve_dense(queries, 25)
+    rv, ri = er.retrieve_dense(queries, 25)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+
+
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+def test_int8_engine_quality_vs_exact(qsetup, mode):
+    """int8 vs exact on the same QuantizedIndex is approximate by design;
+    the harness-measured quality must clear a comfortable floor even on
+    this tiny corpus (and the score curves must be close)."""
+    from repro.core.eval import retrieval_quality
+
+    params, qindex, _, queries = qsetup
+    exact = RetrievalEngine(params, qindex, mode=mode, use_kernel=False)
+    approx = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
+                             precision="int8")
+    e = exact.retrieve_dense(queries, 25)
+    a = approx.retrieve_dense(queries, 25)
+    quality = retrieval_quality(a, e)
+    assert quality["recall"] >= 0.85, quality
+    assert quality["score_mae"] < 2e-2, quality
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("mode", ["sparse", "reconstructed"])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_int8_engine_sharded_bit_identical(qsetup, mode, shards,
+                                           forced_device_count):
+    """Sharding stays exactly transparent on the approximate path: the
+    replicated query quantizes identically on every shard and candidate
+    scores are shard-local, so sharded int8 == unsharded int8 bit-for-bit
+    (only int8-vs-exact is approximate)."""
+    if shards > forced_device_count:
+        pytest.skip(f"needs {shards} devices")
+    params, qindex, _, queries = qsetup
+    mesh = make_candidate_mesh(shards)
+    em = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
+                         mesh=mesh, precision="int8")
+    e1 = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
+                         precision="int8")
+    mv, mi = em.retrieve_dense(queries, 20)
+    sv, si = e1.retrieve_dense(queries, 20)
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(si))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(sv))
+
+
+@pytest.mark.distributed
+def test_int8_engine_sharded_fused_kernel(qsetup, forced_device_count):
+    """The distributed dispatch must route the int8 generation through the
+    FUSED kernels too (scales operand + int8 scratch × shard_map plumbing
+    is otherwise untested).  2-way mesh, tiny batch — interpret mode."""
+    if forced_device_count < 2:
+        pytest.skip("needs 2 devices")
+    params, qindex, _, queries = qsetup
+    mesh = make_candidate_mesh(2)
+    em = RetrievalEngine(params, qindex, use_kernel=True, mesh=mesh,
+                         precision="int8")
+    er = RetrievalEngine(params, qindex, use_kernel=False,
+                         precision="int8")
+    q = queries[:3]
+    mv, mi = em.retrieve_dense(q, 10)
+    rv, ri = er.retrieve_dense(q, 10)
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(rv))
+
+
+def test_precision_validation(setup, qsetup):
+    """int8 needs a QuantizedIndex; unknown precisions are rejected —
+    at construction AND at the functional retrieve() entry point."""
+    params, index, queries = setup
+    _, qindex, _, _ = qsetup
+    with pytest.raises(ValueError, match="requires a QuantizedIndex"):
+        RetrievalEngine(params, index, precision="int8")
+    with pytest.raises(ValueError, match="unknown precision"):
+        RetrievalEngine(params, qindex, precision="fp8")
+    q_codes = encode(params, queries, CFG.k)
+    with pytest.raises(ValueError, match="requires a QuantizedIndex"):
+        retrieve(index, q_codes, 5, use_kernel=False, precision="int8")
+    # and the exact default keeps serving the fp32 index unchanged
+    gv, gi = retrieve(index, q_codes, 5, use_kernel=False, precision="exact")
+    wv, wi = retrieve(index, q_codes, 5, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+
+
 def test_engine_single_dense_query(setup):
     params, index, queries = setup
     engine = RetrievalEngine(params, index, use_kernel=False)

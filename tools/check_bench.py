@@ -1,0 +1,148 @@
+"""Bench-regression gate (ISSUE 5): diff a freshly written
+``BENCH_retrieval.json`` against the committed baseline.
+
+Applies docs/BENCHMARKS.md's comparison rules mechanically so CI can
+gate what is gateable and only warn about what is noise:
+
+GATES (exit 1):
+  * schema — every fresh record carries the required fields
+    (name/us_per_call/recall/path/shards, plus the quantized and int8
+    rows' extra fields);
+  * row-set — a baseline row name may not disappear (new rows are fine:
+    that is how the record grows PR by PR);
+  * recall — for rows whose configuration matches the baseline (same
+    path, shards, n, q, topn — records of different configurations are
+    not comparable), any ``recall*`` field may not drop by more than
+    ``--recall-tol`` (default 0.02; CPU runs are seeded and
+    deterministic, so a real drop means a serving-path change).
+
+WARN-ONLY (exit 0):
+  * ``us_per_call`` movement in either direction — CPU-runner timing is
+    noise-dominated at smoke sizes (see docs/BENCHMARKS.md §Comparing);
+  * rows whose configuration changed (reported as not comparable).
+
+Usage:
+    python tools/check_bench.py BASELINE.json FRESH.json \
+        [--recall-tol 0.02] [--summary PATH]
+
+``--summary`` appends a markdown report (for ``$GITHUB_STEP_SUMMARY``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REQUIRED = {"name", "us_per_call", "recall", "path", "shards"}
+EXTRA_REQUIRED = {
+    "retrieval_sparse_quantized": {"k", "index_bytes", "index_bytes_fp32"},
+    "retrieval_sparse_quantized_mxu": {
+        "k", "precision", "recall_vs_exact", "score_mae",
+        "rank_displacement", "quality_n",
+    },
+}
+# records are only comparable within an identical configuration
+CONFIG_FIELDS = ("path", "shards", "n", "q", "topn")
+
+
+def load(path: pathlib.Path) -> dict:
+    records = json.loads(path.read_text())
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: expected a JSON list of records")
+    for i, r in enumerate(records):
+        if not isinstance(r, dict) or "name" not in r:
+            raise ValueError(f"{path}: record #{i} has no 'name' field")
+    return {r["name"]: r for r in records}
+
+
+def compare(baseline: dict, fresh: dict, recall_tol: float
+            ) -> tuple[list[str], list[str]]:
+    """-> (failures, warnings)."""
+    failures, warnings = [], []
+
+    for name, rec in fresh.items():
+        missing = (REQUIRED | EXTRA_REQUIRED.get(name, set())) - set(rec)
+        if missing:
+            failures.append(f"schema: row `{name}` missing {sorted(missing)}")
+
+    gone = sorted(set(baseline) - set(fresh))
+    if gone:
+        failures.append(f"row-set: baseline rows disappeared: {gone}")
+    for name in sorted(set(fresh) - set(baseline)):
+        warnings.append(f"new row `{name}` (no baseline to compare)")
+
+    for name in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[name], fresh[name]
+        cfg_b = tuple(b.get(c) for c in CONFIG_FIELDS)
+        cfg_f = tuple(f.get(c) for c in CONFIG_FIELDS)
+        if cfg_b != cfg_f:
+            warnings.append(
+                f"`{name}`: configuration changed "
+                f"{dict(zip(CONFIG_FIELDS, cfg_b))} -> "
+                f"{dict(zip(CONFIG_FIELDS, cfg_f))} — not comparable, "
+                "recall gate skipped"
+            )
+            continue
+        for field in sorted(set(b) & set(f)):
+            if not field.startswith("recall"):
+                continue
+            drop = b[field] - f[field]
+            if drop > recall_tol:
+                failures.append(
+                    f"recall regression: `{name}`.{field} "
+                    f"{b[field]:.4f} -> {f[field]:.4f} "
+                    f"(drop {drop:.4f} > tol {recall_tol})"
+                )
+        if b.get("us_per_call") and f.get("us_per_call"):
+            ratio = f["us_per_call"] / b["us_per_call"]
+            if ratio > 1.5 or ratio < 0.67:
+                warnings.append(
+                    f"`{name}`: us_per_call {b['us_per_call']:.0f} -> "
+                    f"{f['us_per_call']:.0f} ({ratio:.2f}x) — timing is "
+                    "warn-only (CPU-runner noise)"
+                )
+    return failures, warnings
+
+
+def render_summary(failures: list[str], warnings: list[str]) -> str:
+    lines = ["## Bench-regression gate",
+             f"**{'FAIL' if failures else 'OK'}** — "
+             f"{len(failures)} failure(s), {len(warnings)} warning(s)"]
+    lines += [f"- :x: {f}" for f in failures]
+    lines += [f"- :warning: {w}" for w in warnings]
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", type=pathlib.Path)
+    ap.add_argument("fresh", type=pathlib.Path)
+    ap.add_argument("--recall-tol", type=float, default=0.02)
+    ap.add_argument("--summary", type=pathlib.Path, default=None,
+                    help="append a markdown report to this file "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    try:
+        baseline, fresh = load(args.baseline), load(args.fresh)
+    except (ValueError, json.JSONDecodeError) as e:
+        # an unreadable record is a gate failure with a clean report, not
+        # a traceback that skips the summary
+        failures, warnings = [f"unreadable record: {e}"], []
+    else:
+        failures, warnings = compare(baseline, fresh, args.recall_tol)
+    for w in warnings:
+        print(f"WARN: {w}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if args.summary is not None:
+        with args.summary.open("a") as fh:
+            fh.write(render_summary(failures, warnings))
+    if failures:
+        return 1
+    print(f"[check_bench] OK ({len(warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
