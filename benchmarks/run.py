@@ -10,6 +10,9 @@ Modules:
     retrieval_modes  — §3.2 three retrieval modes (timing + recall + the
                        kernel-trick exactness check)
     kernels_bench    — kernel reference-path microbenches + kernel/ref err
+    fault_matrix     — ISSUE 6 hardened serving: every injected fault
+                       through the degradation ladder (recover
+                       bit-identically or degrade visibly, never crash)
 
 The roofline/dry-run reports are separate (they need a 512-device
 process): see benchmarks.roofline and repro.launch.dryrun.
@@ -20,10 +23,13 @@ import sys
 import time
 
 MODULES = ["size_table", "convergence", "tradeoff", "retrieval_modes",
-           "kernels_bench", "quantized_codes_bench", "inverted_index_bench"]
+           "kernels_bench", "quantized_codes_bench", "inverted_index_bench",
+           "fault_matrix"]
 # --smoke: tiny-size perf record (writes BENCH_retrieval.json) — wired into
-# the tier-1 flow as a non-gating step (tests/test_benchmarks_smoke.py)
-SMOKE_MODULES = ["retrieval_modes", "kernels_bench"]
+# the tier-1 flow as a non-gating step (tests/test_benchmarks_smoke.py).
+# fault_matrix must run AFTER retrieval_modes: retrieval_modes rewrites
+# BENCH_retrieval.json wholesale, fault_matrix appends its row to it
+SMOKE_MODULES = ["retrieval_modes", "kernels_bench", "fault_matrix"]
 
 
 def main() -> None:

@@ -28,15 +28,19 @@ from repro.core.retrieval import (
     SparseIndex,
     build_index,
     dequantize_index,
+    index_checksum,
     retrieve,
     score_sparse,
     score_reconstructed,
     score_dense,
     sparse_dot_dense_query,
     top_n,
+    verify_index,
 )
 from repro.core.quantized_codes import (
     QuantizedCodes,
+    codes_checksum,
+    content_checksum,
     dequantize_codes,
     quantize_codes,
 )
@@ -55,7 +59,8 @@ __all__ = [
     "preactivations", "compressae_loss", "cosine_distance", "TrainState",
     "init_train_state", "train_step", "eval_step", "SparseIndex",
     "QuantizedIndex", "QuantizedCodes", "quantize_codes", "dequantize_codes",
-    "dequantize_index",
+    "dequantize_index", "index_checksum", "verify_index",
+    "codes_checksum", "content_checksum",
     "build_index", "retrieve", "score_sparse", "score_reconstructed", "score_dense",
     "sparse_dot_dense_query", "top_n", "sparse", "baselines",
     "recall_at_n", "score_mae", "rank_displacement", "retrieval_quality",

@@ -34,10 +34,12 @@ change to the wraparound scheme must update both.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import zlib
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import SparseCodes
 
@@ -95,6 +97,46 @@ def dequantize_codes(q: QuantizedCodes) -> SparseCodes:
     vals = q.q_values.astype(jnp.float32) * q.scales[:, None]
     return SparseCodes(values=vals, indices=widen_indices(q.indices),
                        dim=q.dim)
+
+
+def content_checksum(named_arrays) -> Optional[int]:
+    """CRC32 over the byte content of ``(name, array)`` pairs — the
+    integrity fingerprint stored on an index at build time (ISSUE 6).
+
+    The digest covers each array's field name, dtype, shape, AND raw
+    bytes, so a single flipped bit anywhere in the stored codes changes
+    it, and so do shape/dtype edits that leave bytes coincidentally
+    equal.  ``None`` entries are skipped (optional index fields).
+    Returns ``None`` when any array is an abstract tracer (checksums are
+    a host-side build/startup concern, never part of a traced
+    computation).
+    """
+    crc = 0
+    for name, arr in named_arrays:
+        if arr is None:
+            continue
+        try:
+            a = np.asarray(arr)
+        except Exception:  # jax tracer under jit — no concrete bytes
+            return None
+        crc = zlib.crc32(
+            f"{name}:{a.dtype}:{a.shape}:".encode(), crc
+        )
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc
+
+
+def codes_checksum(codes) -> Optional[int]:
+    """Content checksum of a ``SparseCodes`` or ``QuantizedCodes``."""
+    if isinstance(codes, QuantizedCodes):
+        fields = [("q_values", codes.q_values), ("indices", codes.indices),
+                  ("scales", codes.scales)]
+    else:
+        fields = [("values", codes.values), ("indices", codes.indices)]
+    crc = content_checksum(fields)
+    if crc is None:
+        return None
+    return zlib.crc32(f"dim:{codes.dim}".encode(), crc)
 
 
 def compression_ratio(d: int, k: int, h: int) -> float:

@@ -53,6 +53,7 @@ route the SpMV through the blocked Pallas kernel or the pure-jnp path.
 """
 from __future__ import annotations
 
+import zlib
 from typing import NamedTuple, Optional, Union
 
 import jax
@@ -61,9 +62,12 @@ import jax.numpy as jnp
 from repro.core import sae, sparse
 from repro.core.quantized_codes import (
     QuantizedCodes,
+    codes_checksum,
+    content_checksum,
     dequantize_codes,
     quantize_codes,
 )
+from repro.errors import IndexIntegrityError
 from repro.core.types import SparseCodes
 from repro.kernels.sparse_dot import sparse_dot as sparse_dot_kernel
 
@@ -132,6 +136,10 @@ class SparseIndex(NamedTuple):
     inv_sparse_norms / inv_recon_norms: precomputed 1/max(norm, NORM_EPS),
                   streamed alongside candidate values by the fused
                   retrieval kernel (division folded into the epilogue).
+    checksum:     build-time content CRC over codes + norms (ISSUE 6);
+                  ``verify_index`` recomputes and compares it so a flipped
+                  byte is a typed startup error, never a silently wrong
+                  result.  None for hand-built or traced indexes.
     """
 
     codes: SparseCodes
@@ -139,6 +147,7 @@ class SparseIndex(NamedTuple):
     recon_norms: Optional[jax.Array]
     inv_sparse_norms: Optional[jax.Array] = None
     inv_recon_norms: Optional[jax.Array] = None
+    checksum: Optional[int] = None
 
 
 class QuantizedIndex(NamedTuple):
@@ -153,7 +162,9 @@ class QuantizedIndex(NamedTuple):
     is exactly self-consistent: scores/ids/ties are bit-identical to
     dequantize-then-retrieve on the same quantized values.  Field names
     mirror ``SparseIndex`` so the serving engine and the distributed
-    retrieve treat both index formats uniformly.
+    retrieve treat both index formats uniformly (``checksum`` included —
+    see ``SparseIndex``; here it fingerprints the int8/int16 bytes that
+    actually live in HBM).
     """
 
     codes: QuantizedCodes
@@ -161,9 +172,68 @@ class QuantizedIndex(NamedTuple):
     recon_norms: Optional[jax.Array]
     inv_sparse_norms: Optional[jax.Array] = None
     inv_recon_norms: Optional[jax.Array] = None
+    checksum: Optional[int] = None
 
 
 Index = Union[SparseIndex, QuantizedIndex]
+
+
+def index_checksum(index: Index) -> Optional[int]:
+    """Recompute the content CRC of an index (codes + every norm array).
+
+    Pure function of the index's array content — independent of the
+    stored ``checksum`` field — so ``verify_index`` can diff stored vs
+    actual.  ``None`` when the arrays are abstract tracers (integrity is
+    a host-side concern; never checked inside a traced computation).
+    """
+    base = codes_checksum(index.codes)
+    if base is None:
+        return None
+    extra = content_checksum([
+        ("sparse_norms", index.sparse_norms),
+        ("recon_norms", index.recon_norms),
+        ("inv_sparse_norms", index.inv_sparse_norms),
+        ("inv_recon_norms", index.inv_recon_norms),
+    ])
+    if extra is None:
+        return None
+    # mix: order-stable combination of the two digests
+    return zlib.crc32(f"{base:08x}:{extra:08x}".encode())
+
+
+def verify_index(index: Index, *, require: bool = True) -> bool:
+    """Check the index's content against its build-time checksum.
+
+    Returns True when the stored checksum matches the recomputed one.
+    A mismatch raises ``IndexIntegrityError`` (a single flipped byte in
+    any stored array is caught).  An index with no stored checksum
+    raises when ``require=True`` (the startup self-check's default:
+    don't accept traffic on unverifiable bytes) and returns False when
+    ``require=False`` (opportunistic callers).
+    """
+    fmt = type(index).__name__
+    if index.checksum is None:
+        if require:
+            raise IndexIntegrityError(
+                f"{fmt} has no stored checksum — built before ISSUE 6, "
+                "hand-constructed, or built under tracing; rebuild with "
+                "build_index(...) to make integrity verifiable"
+            )
+        return False
+    got = index_checksum(index)
+    if got is None:
+        raise IndexIntegrityError(
+            f"{fmt} content is not concrete (traced arrays); integrity "
+            "can only be verified on host-resident index bytes"
+        )
+    if got != index.checksum:
+        raise IndexIntegrityError(
+            f"{fmt} content checksum mismatch: stored 0x{index.checksum:08x}, "
+            f"recomputed 0x{got:08x} (N={index.codes.n}, k={index.codes.k}) — "
+            "the index bytes changed since build_index (corruption or "
+            "out-of-band mutation); refusing to serve from them"
+        )
+    return True
 
 
 def build_index(
@@ -188,13 +258,14 @@ def build_index(
     if quantize:
         q_codes = quantize_codes(codes)
         base = build_index(dequantize_codes(q_codes), params)
-        return QuantizedIndex(
+        idx = QuantizedIndex(
             codes=q_codes,
             sparse_norms=base.sparse_norms,
             recon_norms=base.recon_norms,
             inv_sparse_norms=base.inv_sparse_norms,
             inv_recon_norms=base.inv_recon_norms,
         )
+        return idx._replace(checksum=index_checksum(idx))
     sparse_norms = jnp.linalg.norm(codes.values, axis=-1)
     recon_norms = None
     inv_recon_norms = None
@@ -202,13 +273,14 @@ def build_index(
         x_hat = sae.decode(params, codes)                 # (N, d)
         recon_norms = jnp.linalg.norm(x_hat, axis=-1)
         inv_recon_norms = 1.0 / jnp.maximum(recon_norms, NORM_EPS)
-    return SparseIndex(
+    idx = SparseIndex(
         codes=codes,
         sparse_norms=sparse_norms,
         recon_norms=recon_norms,
         inv_sparse_norms=1.0 / jnp.maximum(sparse_norms, NORM_EPS),
         inv_recon_norms=inv_recon_norms,
     )
+    return idx._replace(checksum=index_checksum(idx))
 
 
 def dequantize_index(index: QuantizedIndex) -> SparseIndex:
@@ -220,13 +292,15 @@ def dequantize_index(index: QuantizedIndex) -> SparseIndex:
     oracle used by tests and benchmarks), including reconstructed mode
     when the original build had params, with no decoder recompute.
     """
-    return SparseIndex(
+    idx = SparseIndex(
         codes=dequantize_codes(index.codes),
         sparse_norms=index.sparse_norms,
         recon_norms=index.recon_norms,
         inv_sparse_norms=index.inv_sparse_norms,
         inv_recon_norms=index.inv_recon_norms,
     )
+    # fresh digest: the fp32 twin's bytes differ from the quantized ones
+    return idx._replace(checksum=index_checksum(idx))
 
 
 def index_codes_f32(index: Index) -> SparseCodes:

@@ -52,20 +52,7 @@ from repro.compat import P
 from repro.core import sae
 from repro.core.quantized_codes import QuantizedCodes
 from repro.core.types import SparseCodes
-from repro.kernels.sparse_dot import (
-    fused_retrieve,
-    fused_retrieve_quantized,
-    fused_retrieve_quantized_mxu,
-    fused_retrieve_quantized_mxu_sparse_q,
-    fused_retrieve_quantized_sparse_q,
-    fused_retrieve_sparse_q,
-    retrieve_quantized_mxu_ref,
-    retrieve_quantized_mxu_sparse_q_ref,
-    retrieve_quantized_ref,
-    retrieve_quantized_sparse_q_ref,
-    retrieve_ref,
-    retrieve_sparse_q_ref,
-)
+from repro.errors import ShardFailureError
 
 CAND_AXIS = "cand"
 
@@ -106,7 +93,9 @@ def distributed_retrieve_prepped(
     serving, it is only int8-vs-exact that is approximate.
     """
     from repro.core.retrieval import NORM_EPS, sharded_top_n
-    from repro.serving.engine import check_precision, mode_inv_norms
+    from repro.serving.engine import (
+        check_precision, mode_inv_norms, select_retrieve_fn,
+    )
 
     check_precision(index, precision)
     int8_scoring = precision == "int8"
@@ -166,18 +155,13 @@ def distributed_retrieve_prepped(
     cand_specs = (P(axis_name, None),) * 2
     cand_specs += (P(axis_name),) * (2 if quantized else 1)
 
+    fn = select_retrieve_fn(
+        sparse_query=pq.is_sparse, quantized=quantized,
+        int8_scoring=int8_scoring, use_fused=use_fused,
+    )
     if pq.is_sparse:
         qv = pq.values[None] if squeeze else pq.values
         qi = pq.indices[None] if squeeze else pq.indices
-        if int8_scoring:
-            fn = (fused_retrieve_quantized_mxu_sparse_q if use_fused
-                  else retrieve_quantized_mxu_sparse_q_ref)
-        elif quantized:
-            fn = (fused_retrieve_quantized_sparse_q if use_fused
-                  else retrieve_quantized_sparse_q_ref)
-        else:
-            fn = (fused_retrieve_sparse_q if use_fused
-                  else retrieve_sparse_q_ref)
 
         def local(*args):
             *cand_l, qv_r, qi_r = args
@@ -188,13 +172,6 @@ def distributed_retrieve_prepped(
         q_specs = (P(None, None), P(None, None))
     else:
         qd = pq.dense[None] if squeeze else pq.dense
-        if int8_scoring:
-            fn = (fused_retrieve_quantized_mxu if use_fused
-                  else retrieve_quantized_mxu_ref)
-        elif quantized:
-            fn = fused_retrieve_quantized if use_fused else retrieve_quantized_ref
-        else:
-            fn = fused_retrieve if use_fused else retrieve_ref
 
         def local(*args):
             *cand_l, qd_r = args
@@ -219,6 +196,109 @@ def distributed_retrieve_prepped(
     if squeeze:
         scores, ids = scores[0], ids[0]
     return scores, ids
+
+
+def shard_slices(N: int, n_shards: int) -> list[tuple[int, int]]:
+    """Global candidate-row range ``[start, stop)`` owned by each shard.
+
+    Matches ``distributed_retrieve_prepped``'s padded layout exactly:
+    rows are zero-padded to a multiple of ``n_shards`` and dealt out in
+    equal contiguous slices, so the last shard's slice may be short (the
+    padding rows belong to no shard).  The recovery path uses this to
+    know which global ids died with a shard.
+    """
+    pad = (-N) % n_shards
+    n_loc_cand = (N + pad) // n_shards
+    return [
+        (s * n_loc_cand, min((s + 1) * n_loc_cand, N))
+        for s in range(n_shards)
+    ]
+
+
+def partial_retrieve_prepped(
+    index,
+    pq,
+    n: int,
+    *,
+    n_shards: int,
+    dead_shards,
+    use_fused: bool,
+    inv_norms: Optional[jax.Array] = None,
+    precision: str = "exact",
+) -> tuple[jax.Array, jax.Array, float]:
+    """Degraded-mode retrieve over the shards that survived (ISSUE 6).
+
+    When retries exhaust and ``dead_shards`` still won't answer, serving
+    a partial result beats serving nothing: gather the surviving shards'
+    candidate rows (per ``shard_slices``' layout), run the ordinary
+    single-device streaming retrieve over them, and remap local ids back
+    to global candidate ids.  Returns ``(scores, ids, coverage)`` where
+    ``coverage`` = surviving candidates / N — the caller's bound on
+    achieved recall: results are bit-identical to an exact retrieve over
+    the survivor rows, so recall@n vs the full index is lower-bounded by
+    the fraction of the true top-n that lived on surviving shards (in
+    expectation ≈ coverage under a uniform catalog).
+
+    If ``n`` exceeds the surviving candidate count the result is padded
+    with ``(-inf, N)`` rows, mirroring the sharded path's
+    n-exceeds-slice convention.  All shards dead raises
+    ``ShardFailureError`` — there is nothing left to serve from.
+    """
+    from repro.serving.engine import mode_inv_norms, retrieve_prepped
+
+    N = index.codes.n
+    dead = frozenset(dead_shards)
+    survivors = [s for s in range(n_shards) if s not in dead]
+    if not survivors:
+        raise ShardFailureError(
+            f"all {n_shards} candidate shards failed; no rows left to "
+            "serve a partial result from"
+        )
+    if inv_norms is None:
+        inv_norms = mode_inv_norms(index, "sparse" if pq.is_sparse
+                                   else "reconstructed")
+
+    slices = shard_slices(N, n_shards)
+    rows = jnp.concatenate([
+        jnp.arange(start, stop, dtype=jnp.int32)
+        for start, stop in (slices[s] for s in survivors)
+    ])
+    n_live = int(rows.shape[0])
+
+    take = lambda a: None if a is None else jnp.take(a, rows, axis=0)
+    codes = index.codes
+    if isinstance(codes, QuantizedCodes):
+        live_codes = QuantizedCodes(
+            q_values=take(codes.q_values), indices=take(codes.indices),
+            scales=take(codes.scales), dim=codes.dim,
+        )
+    else:
+        live_codes = SparseCodes(
+            values=take(codes.values), indices=take(codes.indices),
+            dim=codes.dim,
+        )
+    # a fresh sub-index over the survivor rows; its checksum is unknowable
+    # here (and irrelevant — integrity was verified on the full index)
+    live_index = index._replace(
+        codes=live_codes,
+        sparse_norms=take(index.sparse_norms),
+        recon_norms=take(index.recon_norms),
+        inv_sparse_norms=take(index.inv_sparse_norms),
+        inv_recon_norms=take(index.inv_recon_norms),
+        checksum=None,
+    )
+
+    n_local = min(n, n_live)
+    scores, ids = retrieve_prepped(
+        live_index, pq, n_local,
+        use_fused=use_fused, inv_norms=take(inv_norms), precision=precision,
+    )
+    gids = rows[ids]
+    if n_local < n:
+        pad_width = [(0, 0)] * (scores.ndim - 1) + [(0, n - n_local)]
+        scores = jnp.pad(scores, pad_width, constant_values=-jnp.inf)
+        gids = jnp.pad(gids, pad_width, constant_values=N)
+    return scores, gids, n_live / N
 
 
 def distributed_retrieve(

@@ -1,0 +1,70 @@
+"""Typed serving/retrieval errors (ISSUE 6).
+
+One hierarchy for every failure the serving stack can name, rooted at
+``RetrievalError`` so callers can catch "anything the retrieval path
+classified" with a single except clause while still dispatching on the
+concrete type.  The module lives at the repo root of the package — below
+``core``, ``distributed`` and ``serving`` alike — so every layer can
+raise these without an import cycle (``serving.guard`` re-exports them
+as its public admission-error API).
+
+Two deliberate multiple-inheritance choices:
+
+* Validation errors (``EngineConfigError``, ``InvalidQueryError``) also
+  subclass ``ValueError``: pre-ISSUE-6 callers that caught/matched
+  ``ValueError`` keep working, while new callers get the typed class.
+* ``DeadlineExceededError`` also subclasses ``TimeoutError`` for the
+  same reason (standard-library timeout semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class RetrievalError(Exception):
+    """Base of every typed failure raised by the serving stack."""
+
+
+class EngineConfigError(RetrievalError, ValueError):
+    """Engine/request CONSTRUCTION is invalid (bad mode, precision,
+    missing params/norms) — the caller's configuration, not the data."""
+
+
+class InvalidQueryError(RetrievalError, ValueError):
+    """A request failed admission: non-finite values, wrong shape/dtype,
+    or an unservable top-n.  Messages name the offending argument and
+    the expected vs actual value."""
+
+
+class IndexIntegrityError(RetrievalError):
+    """Index content does not match its build-time checksum (corruption,
+    out-of-band mutation, or a checksum-less index where one is
+    required)."""
+
+
+class DeadlineExceededError(RetrievalError, TimeoutError):
+    """The per-request deadline budget ran out at the recorded stage."""
+
+
+class ShardFailureError(RetrievalError):
+    """A candidate shard failed to answer.  ``shard`` is the failing
+    shard's mesh position when known, else None."""
+
+    def __init__(self, message: str, shard: Optional[int] = None):
+        super().__init__(message)
+        self.shard = shard
+
+
+class KernelFaultError(RetrievalError):
+    """The kernel serving path raised (or fault injection simulated it
+    raising) — the degradation ladder's cue to step down a generation."""
+
+
+class SelfCheckError(RetrievalError):
+    """The startup self-check's canary batch failed: the configured
+    serving path disagrees with its reference contract."""
+
+
+class DegradationExhaustedError(RetrievalError):
+    """Every rung of the degradation ladder failed for one request; the
+    message chains each rung's fault reason."""

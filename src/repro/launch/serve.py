@@ -42,6 +42,19 @@ exact quantized engine (``repro.core.eval``), alongside the usual recall
 against dense truth:
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --precision int8
+
+Hardened serving (ISSUE 6): requests flow through a
+``repro.serving.GuardedEngine`` — admission guards, an optional
+per-request deadline, and the degradation ladder — and the ``[serve]``
+line reports degraded/sanitized request counters.  ``--self-check``
+verifies the index checksum and runs the canary batch before traffic;
+``--inject-fault`` exercises one deterministic failure end to end
+(``corrupt-index`` keeps a pristine fallback index so startup degrades
+instead of dying; ``dead-shard``/``slow-shard`` need ``--shards > 1``):
+
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --self-check
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --self-check --inject-fault corrupt-index
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --shards 4 --inject-fault dead-shard
 """
 from __future__ import annotations
 
@@ -95,7 +108,14 @@ from repro.core.retrieval import kernel_path
 from repro.core.eval import recall_at_n, retrieval_quality
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
-from repro.serving import RetrievalEngine
+from repro.serving import (
+    FAULTS,
+    FaultInjector,
+    GuardedEngine,
+    RetrievalEngine,
+    flip_index_byte,
+    poison_queries,
+)
 
 
 def main(argv=None):
@@ -127,10 +147,24 @@ def main(argv=None):
                          "to the fp32 path) or 'int8' (approximate int8-MXU "
                          "scoring, requires --quantized; quality vs exact "
                          "is reported per request)")
+    ap.add_argument("--self-check", action="store_true",
+                    help="verify the index content checksum and run a "
+                         "canary batch against the reference contract "
+                         "before accepting traffic (typed error on failure)")
+    ap.add_argument("--inject-fault", choices=FAULTS, default=None,
+                    help="deterministically inject one serving fault and "
+                         "serve through it (demonstrates the degradation "
+                         "ladder; see repro.serving.faults)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline budget; slow paths are "
+                         "abandoned when it expires and the response is "
+                         "tagged deadline_exceeded (default: unbounded)")
     args = ap.parse_args(argv)
     if args.precision == "int8" and not args.quantized:
         ap.error("--precision int8 requires --quantized (the int8 scoring "
                  "path reads int8 candidate tiles)")
+    if args.inject_fault in ("dead-shard", "slow-shard") and args.shards < 2:
+        ap.error(f"--inject-fault {args.inject_fault} requires --shards > 1")
 
     use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
     path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
@@ -171,27 +205,68 @@ def main(argv=None):
 
     if args.precision == "int8":
         path = f"{path}+int8"
+
+    # ------------------------------------------------ hardened serving setup
+    fallback_index = None
+    if args.inject_fault == "corrupt-index":
+        # serve the corrupted bytes, keep the pristine build as the
+        # verified fallback replica — startup must catch the flip by
+        # checksum and degrade onto the fallback instead of dying
+        fallback_index, index = index, flip_index_byte(index, byte=17, bit=2)
+        args.self_check = True
+        print("[faults] corrupt-index: flipped one bit in the served "
+              "index; pristine fallback retained")
+    injector = None
+    if args.inject_fault in ("dead-shard", "slow-shard", "kernel-exception"):
+        injector = FaultInjector(args.inject_fault, shard=0)
+        print(f"[faults] injecting {args.inject_fault} "
+              f"(deterministic, shard 0)")
+
     engine = RetrievalEngine(
         state.params, index,
         mode=args.mode, use_kernel=use_kernel, mesh=mesh,
         precision=args.precision,
     )
+    guard = GuardedEngine(
+        engine,
+        deadline_ms=args.deadline_ms,
+        on_invalid=("sanitize" if args.inject_fault == "nonfinite-query"
+                    else "reject"),
+        injector=injector,
+        fallback_index=fallback_index,
+        run_self_check=args.self_check,
+    )
+    if guard.self_check_report is not None:
+        rep = guard.self_check_report
+        print(f"[self-check] index checksum verified; canary "
+              f"{rep.canary_q}x top-{rep.canary_n} on {rep.path} ok "
+              f"(kernel-vs-ref: {rep.kernel_vs_ref or 'same path'}, "
+              f"max |Δscore| {rep.max_abs_diff:.2e})")
+    if guard.degraded_from_start:
+        print(f"[self-check] DEGRADED: {guard.degraded_from_start}")
+        engine = guard.engine  # the fallback-backed engine now serves
     # int8 scoring is approximate: measure its live quality against the
     # SAME engine at exact precision (the harness's reference path)
     exact_engine = None
-    if args.precision == "int8":
+    if args.precision == "int8" and guard.engine.precision == "int8":
         exact_engine = RetrievalEngine(
-            state.params, index,
+            state.params, guard.engine.index,
             mode=args.mode, use_kernel=use_kernel, mesh=mesh,
         )
 
     lat, recalls, vs_exact = [], [], []
     for r in range(args.requests):
         q = clustered_embeddings(jax.random.PRNGKey(1000 + r), args.batch, d=cfg.d)
+        if args.inject_fault == "nonfinite-query":
+            q = poison_queries(q, kind="nan" if r % 2 == 0 else "inf",
+                               position=(r % args.batch, r % cfg.d))
         t0 = time.time()
-        vals, ids = engine.retrieve_dense(q, args.topn)
+        vals, ids, status = guard.retrieve_dense(q, args.topn)
         jax.block_until_ready(ids)
         lat.append(time.time() - t0)
+        if status.degraded and r < 3:
+            print(f"[guard] request {r} degraded -> {status.path} "
+                  f"({status.fault})")
         _, true_ids = top_n(score_dense(catalog, q), args.topn)
         recalls.append(recall_at_n(ids, true_ids))
         if exact_engine is not None:
@@ -200,8 +275,12 @@ def main(argv=None):
     lat_ms = np.array(lat[1:]) * 1e3  # drop compile step
     quality = (f"int8-vs-exact recall@{args.topn} {np.mean(vs_exact):.3f} "
                if vs_exact else "")
+    c = guard.counters
+    guard_stats = (f"degraded {c['degraded']}/{c['requests']} "
+                   f"sanitized {c['sanitized']} rejected {c['rejected']} ")
     prefix = (f"[serve] mode={args.mode} path={path} shards={args.shards} "
-              f"recall@{args.topn} {np.mean(recalls):.3f} {quality}| ")
+              f"recall@{args.topn} {np.mean(recalls):.3f} {quality}"
+              f"{guard_stats}| ")
     if lat_ms.size:
         print(prefix +
               f"latency p50 {np.percentile(lat_ms, 50):.1f} ms "

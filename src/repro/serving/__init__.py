@@ -6,6 +6,23 @@ from repro.serving.engine import (
     mode_inv_norms,
     prep_query,
     retrieve_prepped,
+    select_retrieve_fn,
+    validate_dense_query,
+    validate_query_codes,
+    validate_topn,
+)
+from repro.serving.faults import (
+    FAULTS,
+    FaultInjector,
+    flip_index_byte,
+    poison_queries,
+)
+from repro.serving.guard import (
+    Deadline,
+    GuardedEngine,
+    SelfCheckReport,
+    ServingStatus,
+    self_check,
 )
 
 __all__ = [
@@ -13,7 +30,20 @@ __all__ = [
     "PreppedQuery",
     "prep_query",
     "retrieve_prepped",
+    "select_retrieve_fn",
     "mode_inv_norms",
     "check_precision",
     "PRECISIONS",
+    "validate_dense_query",
+    "validate_query_codes",
+    "validate_topn",
+    "FAULTS",
+    "FaultInjector",
+    "flip_index_byte",
+    "poison_queries",
+    "Deadline",
+    "GuardedEngine",
+    "SelfCheckReport",
+    "ServingStatus",
+    "self_check",
 ]

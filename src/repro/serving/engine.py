@@ -43,11 +43,13 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sae
 from repro.core.quantized_codes import QuantizedCodes
 from repro.core.retrieval import NORM_EPS, kernel_path
 from repro.core.types import SparseCodes
+from repro.errors import EngineConfigError, InvalidQueryError
 from repro.kernels.fused_encode import fused_encode
 from repro.kernels.sparse_dot import (
     fused_retrieve,
@@ -76,15 +78,98 @@ def check_precision(index, precision: str) -> str:
     candidate tiles must already live in int8).
     """
     if precision not in PRECISIONS:
-        raise ValueError(
+        raise EngineConfigError(
             f"unknown precision {precision!r} (expected one of {PRECISIONS})"
         )
     if precision == "int8" and not isinstance(index.codes, QuantizedCodes):
-        raise ValueError(
+        raise EngineConfigError(
             "precision='int8' requires a QuantizedIndex "
             "(build_index(..., quantize=True)); got fp32 codes"
         )
     return precision
+
+
+def validate_topn(n, n_candidates: int) -> int:
+    """Admission check for the ``n`` of a top-n request (typed, named)."""
+    if isinstance(n, bool) or not isinstance(n, (int, np.integer)):
+        raise InvalidQueryError(
+            f"n: expected a Python int, got {type(n).__name__} ({n!r})"
+        )
+    if n < 1:
+        raise InvalidQueryError(f"n: top-n must be >= 1, got {n}")
+    if n > n_candidates:
+        raise InvalidQueryError(
+            f"n: top-n {n} exceeds candidate count {n_candidates}"
+        )
+    return int(n)
+
+
+def validate_dense_query(
+    x, *, d: Optional[int] = None, name: str = "x"
+):
+    """Trace-safe admission checks for a dense query batch: array-ness,
+    rank, embedding dim, floating dtype.  Every failure is an
+    ``InvalidQueryError`` naming the offending argument and the expected
+    vs actual shape/dtype.  Value checks (finiteness) are the guard
+    layer's job — they need concrete bytes and never belong under jit.
+    """
+    if not hasattr(x, "shape") or not hasattr(x, "dtype"):
+        raise InvalidQueryError(
+            f"{name}: expected an array of dense embeddings, got "
+            f"{type(x).__name__}"
+        )
+    if x.ndim not in (1, 2):
+        raise InvalidQueryError(
+            f"{name}: expected shape (d,) or (Q, d), got rank-{x.ndim} "
+            f"shape {tuple(x.shape)}"
+        )
+    if d is not None and x.shape[-1] != d:
+        raise InvalidQueryError(
+            f"{name}: embedding dim mismatch — expected last axis {d} "
+            f"(the SAE input dim), got {x.shape[-1]} "
+            f"(shape {tuple(x.shape)})"
+        )
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise InvalidQueryError(
+            f"{name}: expected a floating dtype, got {x.dtype}"
+        )
+    return x
+
+
+def validate_query_codes(
+    q: SparseCodes, *, h: int, name: str = "q"
+) -> SparseCodes:
+    """Trace-safe admission checks for query ``SparseCodes``: matching
+    values/indices shapes, integer indices, code dim == index dim."""
+    if tuple(q.values.shape) != tuple(q.indices.shape):
+        raise InvalidQueryError(
+            f"{name}: values shape {tuple(q.values.shape)} != indices "
+            f"shape {tuple(q.indices.shape)} (fixed-k codes must pair "
+            "one index per value)"
+        )
+    if q.values.ndim not in (1, 2):
+        raise InvalidQueryError(
+            f"{name}: expected code shape (k,) or (Q, k), got rank-"
+            f"{q.values.ndim} shape {tuple(q.values.shape)}"
+        )
+    if not jnp.issubdtype(q.indices.dtype, jnp.integer):
+        raise InvalidQueryError(
+            f"{name}: indices must be an integer dtype, got "
+            f"{q.indices.dtype}"
+        )
+    # dim rides the SparseCodes pytree as a leaf, so a jit'd producer
+    # (fused_encode) hands it back traced — the check only applies where
+    # dim is still concrete (every external entry point)
+    try:
+        dim = int(q.dim)
+    except jax.errors.ConcretizationTypeError:
+        dim = h
+    if dim != h:
+        raise InvalidQueryError(
+            f"{name}: code dim mismatch — query codes address a "
+            f"{dim}-wide latent space, index stores {h}"
+        )
+    return q
 
 
 class PreppedQuery(NamedTuple):
@@ -117,12 +202,14 @@ def mode_inv_norms(index, mode: str) -> jax.Array:
         return inv
     if mode == "reconstructed":
         if index.recon_norms is None:
-            raise ValueError("index built without params; recon norms missing")
+            raise EngineConfigError(
+                "index built without params; recon norms missing"
+            )
         inv = index.inv_recon_norms
         if inv is None:
             inv = 1.0 / jnp.maximum(index.recon_norms, NORM_EPS)
         return inv
-    raise ValueError(f"unknown retrieval mode: {mode!r}")
+    raise EngineConfigError(f"unknown retrieval mode: {mode!r}")
 
 
 def prep_query(
@@ -139,14 +226,42 @@ def prep_query(
         )
     if mode == "reconstructed":
         if params is None:
-            raise ValueError("mode='reconstructed' requires SAE params")
+            raise EngineConfigError("mode='reconstructed' requires SAE params")
         x_hat_q = sae.decode(params, q)                    # (Q?, d)
         z = x_hat_q @ params["w_dec"].T                    # (Q?, h) == K s_q
         return PreppedQuery(
             values=None, indices=None, dense=z,
             norm=jnp.linalg.norm(x_hat_q, axis=-1),
         )
-    raise ValueError(f"unknown retrieval mode: {mode!r}")
+    raise EngineConfigError(f"unknown retrieval mode: {mode!r}")
+
+
+def select_retrieve_fn(
+    *, sparse_query: bool, quantized: bool, int8_scoring: bool,
+    use_fused: bool,
+):
+    """THE kernel-generation dispatch table, in one place.
+
+    Maps (query representation, index format, scoring precision, backend)
+    to the streaming retrieve callable.  ``retrieve_prepped``, the
+    distributed shard body, and the partial-merge recovery path all select
+    through here, so the three serving paths cannot drift onto different
+    generations for the same configuration.
+    """
+    if int8_scoring:
+        if sparse_query:
+            return (fused_retrieve_quantized_mxu_sparse_q if use_fused
+                    else retrieve_quantized_mxu_sparse_q_ref)
+        return (fused_retrieve_quantized_mxu if use_fused
+                else retrieve_quantized_mxu_ref)
+    if quantized:
+        if sparse_query:
+            return (fused_retrieve_quantized_sparse_q if use_fused
+                    else retrieve_quantized_sparse_q_ref)
+        return fused_retrieve_quantized if use_fused else retrieve_quantized_ref
+    if sparse_query:
+        return fused_retrieve_sparse_q if use_fused else retrieve_sparse_q_ref
+    return fused_retrieve if use_fused else retrieve_ref
 
 
 def retrieve_prepped(
@@ -190,28 +305,16 @@ def retrieve_prepped(
         cand = (index.codes.q_values, index.codes.indices, index.codes.scales)
     else:
         cand = (index.codes.values, index.codes.indices)
+    fn = select_retrieve_fn(
+        sparse_query=pq.is_sparse, quantized=quantized,
+        int8_scoring=int8_scoring, use_fused=use_fused,
+    )
     if pq.is_sparse:
         qv = pq.values[None] if squeeze else pq.values
         qi = pq.indices[None] if squeeze else pq.indices
-        h = index.codes.dim
-        if int8_scoring:
-            fn = (fused_retrieve_quantized_mxu_sparse_q if use_fused
-                  else retrieve_quantized_mxu_sparse_q_ref)
-        elif quantized:
-            fn = (fused_retrieve_quantized_sparse_q if use_fused
-                  else retrieve_quantized_sparse_q_ref)
-        else:
-            fn = fused_retrieve_sparse_q if use_fused else retrieve_sparse_q_ref
-        vals, ids = fn(*cand, inv_norms, qv, qi, h, n=n)
+        vals, ids = fn(*cand, inv_norms, qv, qi, index.codes.dim, n=n)
     else:
         qd = pq.dense[None] if squeeze else pq.dense
-        if int8_scoring:
-            fn = (fused_retrieve_quantized_mxu if use_fused
-                  else retrieve_quantized_mxu_ref)
-        elif quantized:
-            fn = fused_retrieve_quantized if use_fused else retrieve_quantized_ref
-        else:
-            fn = fused_retrieve if use_fused else retrieve_ref
         vals, ids = fn(*cand, inv_norms, qd, n=n)
     norm = pq.norm[None] if squeeze else pq.norm
     scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
@@ -257,14 +360,22 @@ class RetrievalEngine:
         precision: str = "exact",
     ):
         if mode not in ("sparse", "reconstructed"):
-            raise ValueError(f"unknown retrieval mode: {mode!r}")
+            raise EngineConfigError(f"unknown retrieval mode: {mode!r}")
         if mode == "reconstructed":
             if params is None:
-                raise ValueError("mode='reconstructed' requires SAE params")
+                raise EngineConfigError(
+                    "mode='reconstructed' requires SAE params"
+                )
             if index.recon_norms is None:
-                raise ValueError(
+                raise EngineConfigError(
                     "index built without params; recon norms missing"
                 )
+        if params is not None and index.codes.dim != params["w_enc"].shape[1]:
+            raise EngineConfigError(
+                "params/index latent-dim mismatch: w_enc encodes into "
+                f"h={params['w_enc'].shape[1]} but the index codes address "
+                f"h={index.codes.dim}"
+            )
         self.params = params
         self.index = index
         self.mode = mode
@@ -283,7 +394,7 @@ class RetrievalEngine:
         ``fused_encode`` (abs-top-k epilogue in VMEM, no (Q, h)
         pre-activations in HBM); jnp path: ``sae.encode``."""
         if self.params is None:
-            raise ValueError("encoding queries requires SAE params")
+            raise EngineConfigError("encoding queries requires SAE params")
         if self.use_fused:
             return fused_encode(
                 x, self.params["w_enc"], self.params["b_enc"], self.k
@@ -297,10 +408,8 @@ class RetrievalEngine:
         self, q: SparseCodes, n: int
     ) -> tuple[jax.Array, jax.Array]:
         """Serve a request whose queries are already compressed codes."""
-        if n > self.index.codes.n:
-            raise ValueError(
-                f"top-n {n} exceeds candidate count {self.index.codes.n}"
-            )
+        n = validate_topn(n, self.index.codes.n)
+        validate_query_codes(q, h=self.index.codes.dim)
         pq = self.prep_query(q)
         if self.mesh is not None:
             from repro.distributed.retrieve import distributed_retrieve_prepped
@@ -321,6 +430,9 @@ class RetrievalEngine:
         self, x: jax.Array, n: int
     ) -> tuple[jax.Array, jax.Array]:
         """The end-to-end request: dense embeddings in, top-n out, one jit."""
+        d = None if self.params is None else self.params["w_enc"].shape[0]
+        validate_dense_query(x, d=d)
+        validate_topn(n, self.index.codes.n)
         squeeze = x.ndim == 1
         fn = self._serve_cache.get(n)
         if fn is None:

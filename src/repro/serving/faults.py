@@ -1,0 +1,146 @@
+"""Deterministic fault injection for the hardened serving stack (ISSUE 6).
+
+Production failure modes, reproduced on demand so the fault-matrix suite
+(tests/test_fault_matrix.py, benchmarks/fault_matrix.py) can assert the
+degradation ladder's contract — recover bit-identically or degrade with a
+measured quality bound, never crash, never silently serve wrong results:
+
+    corrupt-index      a single flipped bit in the index's stored bytes
+                       (the startup self-check must catch it by checksum)
+    nonfinite-query    NaN/Inf planted at a known position in the request
+                       (admission must reject or sanitize it)
+    dead-shard         one mesh shard never answers (retry, then partial
+                       merge over the survivors)
+    slow-shard         one shard answers after a delay (deadline budget)
+    kernel-exception   the kernel serving path raises mid-request (ladder
+                       steps down a generation)
+
+Everything here is host-side and deterministic: the same ``FaultInjector``
+configuration produces the same failure at the same step every run — no
+randomness, no monkeypatching of jax internals.  The injector is a plain
+collaborator object the ``GuardedEngine`` consults at its decision points;
+``None`` (the default everywhere) means production behaviour.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retrieval import Index
+from repro.errors import KernelFaultError
+
+FAULTS = (
+    "corrupt-index",
+    "nonfinite-query",
+    "dead-shard",
+    "slow-shard",
+    "kernel-exception",
+)
+
+
+class FaultInjector:
+    """One configured fault, injected deterministically.
+
+    fault:          one of ``FAULTS`` (or None — injects nothing).
+    shard:          which mesh position misbehaves (dead-/slow-shard).
+    recover_after:  for dead-shard — the retry attempt (0-based) at which
+                    the shard comes back.  None = permanently dead, which
+                    forces the partial-result merge over the survivors.
+    delay_s:       for slow-shard — how long the shard stalls on the
+                    first attempt.
+    trip_once:     for kernel-exception — raise only on the first request
+                    (the ladder's fallback then serves; a subsequent
+                    request on the same rung would trip again if False).
+    """
+
+    def __init__(
+        self,
+        fault: Optional[str] = None,
+        *,
+        shard: int = 0,
+        recover_after: Optional[int] = None,
+        delay_s: float = 0.05,
+        trip_once: bool = True,
+    ):
+        if fault is not None and fault not in FAULTS:
+            raise ValueError(
+                f"unknown fault {fault!r} (expected one of {FAULTS})"
+            )
+        self.fault = fault
+        self.shard = shard
+        self.recover_after = recover_after
+        self.delay_s = delay_s
+        self.trip_once = trip_once
+        self.kernel_trips = 0
+
+    # ------------------------------------------------------- ladder hooks
+    def before_step(self, step: int) -> None:
+        """Called by the ladder immediately before serving on rung
+        ``step`` (0 = the configured primary path).  kernel-exception
+        raises on the primary rung so the ladder must step down."""
+        if self.fault != "kernel-exception" or step != 0:
+            return
+        if self.trip_once and self.kernel_trips > 0:
+            return
+        self.kernel_trips += 1
+        raise KernelFaultError(
+            "injected kernel fault on the primary serving path "
+            f"(trip {self.kernel_trips})"
+        )
+
+    def dead_shards(self, attempt: int) -> frozenset[int]:
+        """Mesh positions that do not answer on retry ``attempt``."""
+        if self.fault != "dead-shard":
+            return frozenset()
+        if self.recover_after is not None and attempt >= self.recover_after:
+            return frozenset()
+        return frozenset({self.shard})
+
+    def shard_delay(self, attempt: int) -> float:
+        """Seconds shard ``self.shard`` stalls before answering."""
+        if self.fault == "slow-shard" and attempt == 0:
+            return self.delay_s
+        return 0.0
+
+    def stall(self, attempt: int) -> float:
+        """Simulate the slow shard's stall (host-side sleep); returns the
+        seconds slept so the caller can charge them to the deadline."""
+        delay = self.shard_delay(attempt)
+        if delay > 0.0:
+            time.sleep(delay)
+        return delay
+
+
+def flip_index_byte(index: Index, *, byte: int = 0, bit: int = 0) -> Index:
+    """A copy of ``index`` with ONE bit flipped in its stored code bytes.
+
+    Flips bit ``bit`` of byte ``byte`` in the primary value array
+    (``q_values`` for a QuantizedIndex, fp32 ``values`` otherwise) and
+    leaves the stored checksum stale — exactly what in-place corruption
+    looks like, so ``verify_index`` must raise ``IndexIntegrityError``.
+    """
+    codes = index.codes
+    primary = "q_values" if hasattr(codes, "q_values") else "values"
+    arr = np.asarray(getattr(codes, primary)).copy()
+    flat = arr.view(np.uint8).reshape(-1)
+    flat[byte % flat.size] ^= np.uint8(1 << (bit % 8))
+    return index._replace(
+        codes=codes._replace(**{primary: jnp.asarray(arr)})
+    )
+
+
+def poison_queries(
+    x, *, kind: str = "nan", position: tuple[int, int] = (0, 0)
+):
+    """A copy of the dense query batch with one non-finite value planted
+    at ``position`` (row, col).  ``kind``: "nan" | "inf" | "-inf"."""
+    bad = {"nan": np.nan, "inf": np.inf, "-inf": -np.inf}[kind]
+    arr = np.asarray(x).copy()
+    if arr.ndim == 1:
+        arr[position[-1] % arr.shape[0]] = bad
+    else:
+        arr[position[0] % arr.shape[0], position[1] % arr.shape[1]] = bad
+    return jnp.asarray(arr)

@@ -73,3 +73,16 @@ def test_benchmarks_smoke_writes_perf_record(forced_device_count):
     # int8-vs-exact quality is seeded and deterministic on CPU: even the
     # tiny smoke corpus clears a comfortable floor
     assert mxu["recall_vs_exact"] >= 0.8, mxu
+    # ISSUE 6: the fault-matrix row records the recovery-path outcome of
+    # every injected fault — all entries are either bit-identical
+    # recoveries or visibly degraded answers, and the worst full-coverage
+    # recall vs exact clears the smoke floor
+    fm = by_name["retrieval_fault_matrix"]
+    assert set(fm["faults"]) >= {"corrupt-index", "nonfinite-query",
+                                 "kernel-exception"}, fm
+    if fm["shards"] > 1:  # shard faults need the forced multi-device mesh
+        assert {"dead-shard-flaky", "dead-shard-permanent",
+                "slow-shard"} <= set(fm["faults"]), fm
+    assert fm["recovered_exact"] + fm["degraded"] >= len(fm["faults"]), fm
+    assert fm["recall_vs_exact_min"] >= 0.8, fm
+    assert 0.0 < fm["coverage_min"] <= 1.0, fm

@@ -64,6 +64,33 @@ def test_recall_star_fields_are_gated_too():
     assert any("recall_vs_exact" in x for x in failures)
 
 
+def test_fault_matrix_row_schema_and_recall_gate():
+    """ISSUE 6: the fault-matrix row's recovery-path fields are required,
+    and its recall_vs_exact_min is a recall* field — a drop gates."""
+    fm = dict(faults=["corrupt-index", "nonfinite-query"],
+              recovered_exact=1, degraded=1,
+              recall_vs_exact_min=0.98, coverage_min=0.75)
+    # missing recovery-path fields fail the schema gate
+    f = by_name(rec("retrieval_fault_matrix"))
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("schema" in x and "recovered_exact" in x for x in failures)
+    # complete row passes
+    f = by_name(rec("retrieval_fault_matrix", **fm))
+    failures, _ = compare(dict(f), f, recall_tol=0.02)
+    assert failures == []
+    # a recall_vs_exact_min drop beyond tolerance gates
+    worse = by_name(rec("retrieval_fault_matrix",
+                        **{**fm, "recall_vs_exact_min": 0.70}))
+    failures, _ = compare(f, worse, recall_tol=0.02)
+    assert any("recall_vs_exact_min" in x for x in failures)
+    # timing movement on the row stays warn-only
+    slow = by_name(rec("retrieval_fault_matrix",
+                       **{**fm, "us_per_call": 9000.0}))
+    failures, warnings = compare(f, slow, recall_tol=0.02)
+    assert failures == []
+    assert any("us_per_call" in w for w in warnings)
+
+
 def test_us_per_call_is_warn_only():
     b = by_name(rec("retrieval_sparse", us_per_call=1000.0))
     f = by_name(rec("retrieval_sparse", us_per_call=3000.0))

@@ -1,0 +1,296 @@
+"""Fault-matrix acceptance suite (ISSUE 6): every injected fault through
+the full guarded serving stack must either recover BIT-identically to the
+exact path or return a visibly degraded answer (``ServingStatus.degraded``
+with a measured quality bound) — never crash, never silently serve wrong
+results.
+
+Covers the issue's acceptance criteria directly:
+  * the startup self-check detects a single flipped byte in a quantized
+    index (checksum mismatch -> typed error);
+  * a 4-way sharded retrieve with one dead shard returns merged results
+    from the 3 survivors, with the degradation (and its recall bound, the
+    coverage) reported;
+  * the full fault matrix never crashes and never quietly degrades.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    QuantizedIndex, SAEConfig, build_index, dequantize_index, encode,
+    index_checksum, init_params, verify_index,
+)
+from repro.distributed.retrieve import (
+    mesh_shard_count, partial_retrieve_prepped, shard_slices,
+)
+from repro.errors import IndexIntegrityError, ShardFailureError
+from repro.launch.mesh import make_candidate_mesh
+from repro.serving import (
+    FAULTS, FaultInjector, GuardedEngine, RetrievalEngine, flip_index_byte,
+    poison_queries,
+)
+
+CFG = SAEConfig(d=32, h=128, k=8)
+N, Q, TOPN = 327, 9, 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (N, CFG.d))
+    queries = jax.random.normal(jax.random.PRNGKey(2), (Q, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    index = build_index(codes, params)
+    qindex = build_index(codes, params, quantize=True)
+    assert isinstance(qindex, QuantizedIndex)
+    return params, index, qindex, queries
+
+
+def recall_vs(ids, ref_ids):
+    a, b = np.asarray(ids), np.asarray(ref_ids)
+    return float(np.mean([
+        len(set(r) & set(w)) / len(w) for r, w in zip(a, b)
+    ]))
+
+
+# -------------------------------------------------------- index integrity
+def test_build_index_stores_verifiable_checksum(setup):
+    _, index, qindex, _ = setup
+    for idx in (index, qindex):
+        assert idx.checksum is not None
+        assert verify_index(idx)
+        assert index_checksum(idx) == idx.checksum
+    # dequantization mints a fresh digest over the new fp32 bytes
+    d = dequantize_index(qindex)
+    assert d.checksum is not None and d.checksum != qindex.checksum
+    assert verify_index(d)
+
+
+@pytest.mark.parametrize("byte,bit", [(0, 0), (17, 2), (1001, 7)])
+def test_single_flipped_byte_is_detected(setup, byte, bit):
+    """Acceptance criterion: ONE flipped bit anywhere in the stored code
+    bytes -> typed IndexIntegrityError, before any request is served."""
+    params, index, qindex, _ = setup
+    for idx in (index, qindex):
+        corrupt = flip_index_byte(idx, byte=byte, bit=bit)
+        with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
+            verify_index(corrupt)
+        with pytest.raises(IndexIntegrityError):
+            GuardedEngine(RetrievalEngine(params, corrupt, use_kernel=False),
+                          run_self_check=True)
+
+
+def test_norm_corruption_is_detected_too(setup):
+    """The checksum covers the norm arrays, not just the codes — poisoned
+    norms would silently rerank everything."""
+    _, index, _, _ = setup
+    bad = index._replace(
+        sparse_norms=index.sparse_norms.at[3].multiply(2.0)
+    )
+    with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
+        verify_index(bad)
+
+
+# ------------------------------------------------- dead shard: merge path
+@pytest.mark.distributed
+def test_dead_shard_partial_merge_matches_survivor_oracle(
+        setup, forced_device_count):
+    """Acceptance criterion: 4-way sharded retrieve, shard 1 permanently
+    dead -> merged results from the 3 survivors, bit-identical to an
+    exact retrieve over exactly the surviving rows, degradation and
+    coverage reported."""
+    if forced_device_count < 4:
+        pytest.skip("needs 4 devices")
+    params, index, _, queries = setup
+    mesh = make_candidate_mesh(4)
+    assert mesh_shard_count(mesh) == 4
+    g = GuardedEngine(
+        RetrievalEngine(params, index, use_kernel=False, mesh=mesh),
+        injector=FaultInjector("dead-shard", shard=1),
+        retries=1, backoff_s=1e-4,
+    )
+    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    assert status.degraded and status.path == "fp32-ref-sharded"
+    assert status.shards_total == 4 and status.shards_used == 3
+    assert "partial merge over 3/4 shards" in status.fault
+
+    # survivor oracle: mask shard 1's global rows out of the full-catalog
+    # exact answer and re-rank — the merge must equal it bit-for-bit
+    slices = shard_slices(N, 4)
+    dead_rows = np.arange(*slices[1])
+    oracle = RetrievalEngine(params, index, use_kernel=False)
+    codes = oracle.encode_queries(queries)
+    pq = oracle.prep_query(codes)
+    ws, wi, cov = partial_retrieve_prepped(
+        index, pq, TOPN, n_shards=4, dead_shards={1}, use_fused=False,
+    )
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(ws))
+    assert status.coverage == pytest.approx(cov)
+    assert status.coverage == pytest.approx(1.0 - len(dead_rows) / N)
+    # no survivor id comes from the dead shard's row range
+    assert not np.isin(np.asarray(ids), dead_rows).any()
+
+
+@pytest.mark.distributed
+def test_flaky_shard_recovers_bit_identically(setup, forced_device_count):
+    if forced_device_count < 4:
+        pytest.skip("needs 4 devices")
+    params, index, _, queries = setup
+    mesh = make_candidate_mesh(4)
+    g = GuardedEngine(
+        RetrievalEngine(params, index, use_kernel=False, mesh=mesh),
+        injector=FaultInjector("dead-shard", shard=2, recover_after=1),
+        retries=2, backoff_s=1e-4,
+    )
+    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    # recovered on retry: full-coverage answer, annotated but NOT degraded
+    assert not status.degraded and status.retries == 1
+    assert status.coverage == 1.0
+    assert "recovered after 1 retry" in status.fault
+    wv, wi = RetrievalEngine(params, index,
+                             use_kernel=False).retrieve_dense(queries, TOPN)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
+
+
+@pytest.mark.distributed
+def test_slow_shard_deadline_annotates_not_drops(setup, forced_device_count):
+    """The deadline abandons slow retry paths, never the answer: an
+    expired budget yields the correct full-coverage result tagged
+    deadline_exceeded."""
+    if forced_device_count < 2:
+        pytest.skip("needs 2 devices")
+    params, index, _, queries = setup
+    mesh = make_candidate_mesh(2)
+    g = GuardedEngine(
+        RetrievalEngine(params, index, use_kernel=False, mesh=mesh),
+        injector=FaultInjector("slow-shard", delay_s=0.02),
+        deadline_ms=1.0,
+    )
+    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    assert status.deadline_exceeded
+    assert not status.degraded and status.coverage == 1.0
+    wv, wi = RetrievalEngine(params, index,
+                             use_kernel=False).retrieve_dense(queries, TOPN)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
+
+
+def test_all_shards_dead_is_typed(setup):
+    params, index, _, queries = setup
+    oracle = RetrievalEngine(params, index, use_kernel=False)
+    pq = oracle.prep_query(oracle.encode_queries(queries))
+    with pytest.raises(ShardFailureError, match="all 4 candidate shards"):
+        partial_retrieve_prepped(index, pq, TOPN, n_shards=4,
+                                 dead_shards={0, 1, 2, 3}, use_fused=False)
+
+
+# ------------------------------------------------------- the full matrix
+def test_fault_matrix_never_crashes(setup, forced_device_count):
+    """Every fault in serving.faults.FAULTS, end to end: the guarded
+    engine returns (scores, ids, status) where the answer is either
+    bit-identical to the healthy exact path or explicitly degraded with
+    recall@16 vs exact still clearing a floor.  No fault crashes."""
+    params, index, qindex, queries = setup
+    exact = RetrievalEngine(params, qindex, use_kernel=False)
+    ev, ei = exact.retrieve_dense(queries, TOPN)
+    mesh = (make_candidate_mesh(min(4, forced_device_count))
+            if forced_device_count > 1 else None)
+    fp_index = dequantize_index(qindex)
+
+    def int8_engine():
+        return RetrievalEngine(params, qindex, use_kernel=False,
+                               precision="int8")
+
+    matrix = {
+        "corrupt-index": lambda: GuardedEngine(
+            RetrievalEngine(params, flip_index_byte(qindex, byte=11, bit=5),
+                            use_kernel=False, precision="int8"),
+            run_self_check=True, fallback_index=fp_index,
+        ),
+        "nonfinite-query": lambda: GuardedEngine(
+            int8_engine(), on_invalid="sanitize"
+        ),
+        "dead-shard": lambda: GuardedEngine(
+            RetrievalEngine(params, qindex, use_kernel=False, mesh=mesh),
+            injector=FaultInjector("dead-shard", shard=1),
+            retries=1, backoff_s=1e-4,
+        ),
+        "slow-shard": lambda: GuardedEngine(
+            RetrievalEngine(params, qindex, use_kernel=False, mesh=mesh),
+            injector=FaultInjector("slow-shard", delay_s=0.005),
+            deadline_ms=1.0,
+        ),
+        "kernel-exception": lambda: GuardedEngine(
+            int8_engine(), injector=FaultInjector("kernel-exception")
+        ),
+    }
+    assert set(matrix) == set(FAULTS)
+
+    for fault, build in matrix.items():
+        if fault in ("dead-shard", "slow-shard") and mesh is None:
+            continue
+        guard = build()
+        x = (poison_queries(queries, kind="nan", position=(1, 3))
+             if fault == "nonfinite-query" else queries)
+        scores, ids, status = guard.retrieve_dense(x, TOPN)  # never raises
+        assert np.asarray(ids).shape == (Q, TOPN), fault
+        identical = (np.array_equal(np.asarray(ids), np.asarray(ei))
+                     and np.array_equal(np.asarray(scores), np.asarray(ev)))
+        assert identical or status.degraded, (fault, status)
+        r = recall_vs(ids, ei)
+        if status.coverage == 1.0:
+            # full-coverage recoveries: int8 vs exact quality floor on
+            # this tiny corpus (see test_serving_engine's 0.85 bound)
+            assert r >= 0.85, (fault, r, status)
+        else:
+            # partial merge: coverage itself is the recall bound
+            assert r >= status.coverage - 0.25, (fault, r, status)
+        assert np.all(np.isfinite(np.asarray(scores))), fault
+
+
+def test_fault_matrix_specific_outcomes(setup):
+    """Pin the recovery PATH per fault (not just 'did not crash'):
+    corrupt-index serves the fallback exactly; kernel-exception lands on
+    the exact rung bit-identically; sanitize reports the plant."""
+    params, _, qindex, queries = setup
+    exact = RetrievalEngine(params, qindex, use_kernel=False)
+    ev, ei = exact.retrieve_dense(queries, TOPN)
+    fp_index = dequantize_index(qindex)
+
+    g = GuardedEngine(
+        RetrievalEngine(params, flip_index_byte(qindex, byte=11, bit=5),
+                        use_kernel=False, precision="int8"),
+        run_self_check=True, fallback_index=fp_index,
+    )
+    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    assert status.degraded and "fallback" in status.fault
+    # fallback = dequantized twin served exactly == the exact oracle
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ei))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(ev))
+
+    g = GuardedEngine(
+        RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
+        injector=FaultInjector("kernel-exception"),
+    )
+    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    assert status.degraded and status.path == "quantized-ref"
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ei))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(ev))
+
+    g = GuardedEngine(
+        RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
+        on_invalid="sanitize",
+    )
+    x = poison_queries(queries, kind="inf", position=(1, 3))
+    scores, ids, status = g.retrieve_dense(x, TOPN)
+    assert status.degraded and status.sanitized == 1
+    # only the poisoned row's answer may differ from the healthy int8 one
+    hv, hi = RetrievalEngine(
+        params, qindex, use_kernel=False, precision="int8"
+    ).retrieve_dense(queries, TOPN)
+    keep = [r for r in range(Q) if r != 1]
+    np.testing.assert_array_equal(np.asarray(ids)[keep],
+                                  np.asarray(hi)[keep])

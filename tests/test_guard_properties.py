@@ -1,0 +1,143 @@
+"""Hypothesis property tests for the guard layer (ISSUE 6 satellite).
+
+Properties:
+  * a dense query with non-finite values at ANY positions is never served
+    raw — "reject" raises a typed error naming the count, "sanitize"
+    serves the zeroed batch and reports it as degraded;
+  * ragged shapes / wrong dtypes / bad top-n never reach the kernel — the
+    engine's jit cache stays cold across every rejection;
+  * valid (finite, well-shaped) inputs are never rejected and never
+    flagged degraded.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from repro.core import SAEConfig, build_index, encode, init_params
+from repro.errors import InvalidQueryError
+from repro.serving import GuardedEngine, RetrievalEngine
+
+hypothesis.settings.register_profile(
+    "repro_guard", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("repro_guard")
+
+CFG = SAEConfig(d=16, h=64, k=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (96, CFG.d))
+    index = build_index(encode(params, corpus, CFG.k), params)
+    return params, index
+
+
+def fresh_guard(setup, **kw):
+    params, index = setup
+    return GuardedEngine(RetrievalEngine(params, index, use_kernel=False),
+                         **kw)
+
+
+@st.composite
+def poisoned_batches(draw, d=CFG.d, max_rows=6):
+    """A finite query batch + 1..4 distinct non-finite plants."""
+    rows = draw(st.integers(1, max_rows))
+    seed = draw(st.integers(0, 2**31 - 1))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (rows, d)))
+    n_bad = draw(st.integers(1, 4))
+    positions = draw(
+        st.lists(
+            st.tuples(st.integers(0, rows - 1), st.integers(0, d - 1)),
+            min_size=n_bad, max_size=n_bad, unique=True,
+        )
+    )
+    for k, (r, c) in enumerate(positions):
+        x[r, c] = [np.nan, np.inf, -np.inf][k % 3]
+    return x, len(positions)
+
+
+@given(poisoned_batches())
+def test_nonfinite_always_rejected(setup, batch):
+    x, n_bad = batch
+    g = fresh_guard(setup)
+    with pytest.raises(InvalidQueryError, match=f"{n_bad} non-finite"):
+        g.retrieve_dense(x, 5)
+    assert g.counters["rejected"] == 1
+
+
+@given(poisoned_batches())
+def test_nonfinite_always_sanitized(setup, batch):
+    x, n_bad = batch
+    g = fresh_guard(setup, on_invalid="sanitize")
+    scores, ids, status = g.retrieve_dense(x, 5)
+    assert status.degraded and status.sanitized == n_bad
+    assert np.all(np.isfinite(np.asarray(scores)))
+    # serving the pre-zeroed batch is the same request
+    clean = np.where(np.isfinite(x), x, 0.0)
+    wv, wi = g.engine.retrieve_dense(jnp.asarray(clean), 5)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+
+
+@st.composite
+def malformed_requests(draw, d=CFG.d):
+    """(x, n) pairs that must ALL fail admission before any kernel."""
+    kind = draw(st.sampled_from(
+        ["rank3", "rank0", "wrong_d", "int_dtype", "not_array",
+         "bad_topn_type", "bad_topn_range"]
+    ))
+    x = jnp.zeros((2, d))
+    n = 5
+    if kind == "rank3":
+        x = jnp.zeros((2, 3, d))
+    elif kind == "rank0":
+        x = jnp.zeros(())
+    elif kind == "wrong_d":
+        x = jnp.zeros((2, d + draw(st.integers(1, 7))))
+    elif kind == "int_dtype":
+        x = jnp.zeros((2, d), dtype=jnp.int32)
+    elif kind == "not_array":
+        x = [[0.0] * d]
+    elif kind == "bad_topn_type":
+        n = draw(st.sampled_from([5.0, "5", None, True]))
+    elif kind == "bad_topn_range":
+        n = draw(st.sampled_from([0, -3, 10**6]))
+    return x, n
+
+
+@given(malformed_requests())
+def test_malformed_never_reaches_the_kernel(setup, req):
+    x, n = req
+    g = fresh_guard(setup)
+    with pytest.raises(InvalidQueryError):
+        g.retrieve_dense(x, n)
+    # cold jit cache == no serving computation was ever traced/compiled
+    assert g.engine._serve_cache == {}
+    assert g.counters["rejected"] == 1 and g.counters["degraded"] == 0
+
+
+@st.composite
+def valid_batches(draw, d=CFG.d):
+    rows = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d)) * scale
+    n = draw(st.integers(1, 12))
+    return x, n
+
+
+@given(valid_batches())
+def test_valid_inputs_never_rejected(setup, req):
+    x, n = req
+    g = fresh_guard(setup)
+    scores, ids, status = g.retrieve_dense(x, n)
+    assert not status.degraded and status.step == 0
+    assert status.fault is None and status.sanitized == 0
+    assert scores.shape == (x.shape[0], n)
+    assert g.counters["rejected"] == 0 and g.counters["degraded"] == 0

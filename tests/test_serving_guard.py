@@ -1,0 +1,331 @@
+"""GuardedEngine unit contract (ISSUE 6 tentpole): admission, deadline
+budget, degradation-ladder composition, startup self-check, counters.
+
+The fault-matrix acceptance suite (every injected fault end-to-end) lives
+in tests/test_fault_matrix.py; this file pins the guard layer's pieces in
+isolation so a matrix failure is attributable.
+"""
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SAEConfig, build_index, dequantize_index, encode, init_params,
+    verify_index,
+)
+from repro.errors import (
+    DeadlineExceededError,
+    DegradationExhaustedError,
+    IndexIntegrityError,
+    InvalidQueryError,
+    SelfCheckError,
+)
+from repro.launch.mesh import make_candidate_mesh
+from repro.serving import (
+    Deadline,
+    FaultInjector,
+    GuardedEngine,
+    RetrievalEngine,
+    ServingStatus,
+    flip_index_byte,
+    self_check,
+)
+
+CFG = SAEConfig(d=32, h=128, k=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (310, CFG.d))
+    queries = jax.random.normal(jax.random.PRNGKey(2), (9, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    index = build_index(codes, params)
+    qindex = build_index(codes, params, quantize=True)
+    return params, index, qindex, queries
+
+
+# ---------------------------------------------------------------- deadline
+def test_deadline_unbounded_never_expires():
+    d = Deadline(None)
+    assert not d.expired and d.remaining_ms == float("inf")
+    d.check("anything")  # no raise
+
+
+def test_deadline_expires_and_names_the_stage():
+    d = Deadline(0.01)
+    time.sleep(0.005)
+    assert d.expired
+    with pytest.raises(DeadlineExceededError, match="shard retry"):
+        d.check("shard retry backoff")
+    # typed AND a TimeoutError for generic callers
+    with pytest.raises(TimeoutError):
+        d.check("again")
+
+
+# ------------------------------------------------------ ladder composition
+def test_ladder_fp32_unsharded(setup):
+    params, index, _, _ = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    # the dequant pre-floor rung coincides with the primary -> deduped
+    assert g.ladder == ("fp32-ref", "fp32-fullscore")
+
+
+def test_ladder_int8(setup):
+    params, _, qindex, _ = setup
+    g = GuardedEngine(
+        RetrievalEngine(params, qindex, use_kernel=False, precision="int8")
+    )
+    assert g.ladder == ("int8-ref", "quantized-ref", "fp32-ref",
+                        "fp32-fullscore")
+
+
+@pytest.mark.distributed
+def test_ladder_sharded_sheds_mesh_first(setup, forced_device_count):
+    if forced_device_count < 2:
+        pytest.skip("needs 2 devices")
+    params, index, _, _ = setup
+    mesh = make_candidate_mesh(2)
+    g = GuardedEngine(
+        RetrievalEngine(params, index, use_kernel=False, mesh=mesh)
+    )
+    assert g.ladder == ("fp32-ref-sharded", "fp32-ref", "fp32-fullscore")
+
+
+# ------------------------------------------------------------- admission
+def test_healthy_request_is_not_degraded(setup):
+    params, index, _, queries = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    scores, ids, status = g.retrieve_dense(queries, 7)
+    assert isinstance(status, ServingStatus)
+    assert status.path == "fp32-ref" and status.step == 0
+    assert not status.degraded and status.fault is None
+    assert status.coverage == 1.0 and status.sanitized == 0
+    # bit-identical to the bare engine
+    bv, bi = g.engine.retrieve_dense(queries, 7)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(bv))
+    assert g.counters["requests"] == 1 and g.counters["degraded"] == 0
+
+
+def test_reject_names_position_and_counts(setup):
+    params, index, _, queries = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    bad = np.asarray(queries).copy()
+    bad[2, 5] = np.nan
+    with pytest.raises(InvalidQueryError,
+                       match=r"x: 1 non-finite value\(s\).*\(2, 5\)"):
+        g.retrieve_dense(bad, 5)
+    assert g.counters["rejected"] == 1
+    # typed errors still read as ValueError for legacy callers
+    with pytest.raises(ValueError):
+        g.retrieve_dense(bad, 5)
+
+
+def test_sanitize_serves_degraded_with_count(setup):
+    params, index, _, queries = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False),
+                      on_invalid="sanitize")
+    bad = np.asarray(queries).copy()
+    bad[0, 0] = np.inf
+    bad[3, 7] = np.nan
+    scores, ids, status = g.retrieve_dense(bad, 5)
+    assert status.degraded and status.sanitized == 2
+    assert "sanitized 2 non-finite" in status.fault
+    assert np.all(np.isfinite(np.asarray(scores)))
+    # the sanitized request equals serving the zeroed batch
+    clean = np.where(np.isfinite(bad), bad, 0.0).astype(bad.dtype)
+    wv, wi = g.engine.retrieve_dense(jnp.asarray(clean), 5)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    assert g.counters["sanitized"] == 1 and g.counters["degraded"] == 1
+
+
+def test_typed_shape_dtype_topn_rejections(setup):
+    params, index, _, queries = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    with pytest.raises(InvalidQueryError, match="expected an array"):
+        g.retrieve_dense([[1.0, 2.0]], 5)
+    with pytest.raises(InvalidQueryError, match="rank-3"):
+        g.retrieve_dense(jnp.zeros((2, 3, CFG.d)), 5)
+    with pytest.raises(InvalidQueryError, match="embedding dim mismatch"):
+        g.retrieve_dense(jnp.zeros((2, CFG.d + 1)), 5)
+    with pytest.raises(InvalidQueryError, match="floating dtype"):
+        g.retrieve_dense(jnp.zeros((2, CFG.d), dtype=jnp.int32), 5)
+    with pytest.raises(InvalidQueryError, match="top-n must be >= 1"):
+        g.retrieve_dense(queries, 0)
+    with pytest.raises(InvalidQueryError, match="exceeds candidate count"):
+        g.retrieve_dense(queries, index.codes.n + 1)
+    with pytest.raises(InvalidQueryError, match="expected a Python int"):
+        g.retrieve_dense(queries, 5.0)
+    assert g.counters["rejected"] == 7
+    assert g.counters["requests"] == 7 and g.counters["degraded"] == 0
+
+
+def test_on_invalid_validated(setup):
+    params, index, _, _ = setup
+    engine = RetrievalEngine(params, index, use_kernel=False)
+    with pytest.raises(ValueError, match="'reject' or 'sanitize'"):
+        GuardedEngine(engine, on_invalid="explode")
+
+
+# ------------------------------------------------------------- the ladder
+def test_kernel_fault_steps_down_and_recovers(setup):
+    params, _, qindex, queries = setup
+    inj = FaultInjector("kernel-exception")
+    g = GuardedEngine(
+        RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
+        injector=inj,
+    )
+    scores, ids, status = g.retrieve_dense(queries, 10)
+    assert status.degraded and status.step == 1
+    assert status.path == "quantized-ref"
+    assert "injected kernel fault" in status.fault
+    # the step-down rung is the exact path over the SAME index: equals the
+    # exact oracle bit-for-bit
+    oracle = RetrievalEngine(params, qindex, use_kernel=False)
+    wv, wi = oracle.retrieve_dense(queries, 10)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
+    # trip_once: the next request serves healthy on the primary again
+    _, _, status2 = g.retrieve_dense(queries, 10)
+    assert not status2.degraded and status2.step == 0
+    assert g.counters["degraded"] == 1
+
+
+def test_unanticipated_exception_degrades_not_crashes(setup):
+    """A bare RuntimeError on the primary rung (not a typed
+    RetrievalError) must also step the ladder down."""
+    params, index, _, queries = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+
+    class Boom:
+        mesh = None
+
+        def retrieve_dense(self, x, n):
+            raise RuntimeError("boom: simulated runtime fault")
+
+    g._rung_engines[0] = Boom()
+    scores, ids, status = g.retrieve_dense(queries, 6)
+    assert status.degraded and status.step == 1
+    assert status.path == "fp32-fullscore"
+    assert "RuntimeError: boom" in status.fault
+    # the floor is the battle-tested oracle composition
+    oracle = RetrievalEngine(params, index, use_kernel=False)
+    wv, wi = oracle.retrieve_dense(queries, 6)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    # same ids; scores agree to f32 rounding (full-score vs streaming sum)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(wv),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_degradation_exhausted_chains_every_rung(setup):
+    params, index, _, queries = setup
+    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+
+    class Boom:
+        mesh = None
+
+        def retrieve_dense(self, x, n):
+            raise RuntimeError("boom")
+
+    g._rung_engines = {i: Boom() for i in range(len(g._ladder))}
+    with pytest.raises(DegradationExhaustedError,
+                       match="every degradation-ladder rung failed"):
+        g.retrieve_dense(queries, 5)
+
+
+def test_rung_engines_are_memoized(setup):
+    params, _, qindex, queries = setup
+    inj = FaultInjector("kernel-exception", trip_once=False)
+    g = GuardedEngine(
+        RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
+        injector=inj,
+    )
+    g.retrieve_dense(queries, 5)
+    rung1 = g._rung_engines[1]
+    g.retrieve_dense(queries, 5)
+    assert g._rung_engines[1] is rung1  # same engine (and jit cache) reused
+
+
+# ----------------------------------------------------------- self-check
+def test_self_check_passes_on_healthy_engine(setup):
+    params, index, _, _ = setup
+    report = self_check(RetrievalEngine(params, index, use_kernel=False))
+    assert report.index_verified
+    assert report.canary_q >= 1 and report.canary_n >= 1
+    assert report.path == "fp32-ref"
+    assert report.kernel_vs_ref is None  # primary already IS the ref path
+
+
+def test_self_check_int8_kernel_vs_ref_bit_identical(setup):
+    params, _, qindex, _ = setup
+    report = self_check(
+        RetrievalEngine(params, qindex, use_kernel=True, precision="int8"),
+        canary_q=2, canary_n=4,
+    )
+    assert report.kernel_vs_ref == "bit-identical"
+    assert report.max_abs_diff == 0.0
+
+
+def test_self_check_catches_flipped_byte(setup):
+    params, _, qindex, _ = setup
+    corrupt = flip_index_byte(qindex, byte=17, bit=2)
+    with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
+        self_check(RetrievalEngine(params, corrupt, use_kernel=False))
+
+
+def test_self_check_requires_checksum_by_default(setup):
+    params, index, _, _ = setup
+    bare = index._replace(checksum=None)
+    with pytest.raises(IndexIntegrityError, match="no stored checksum"):
+        self_check(RetrievalEngine(params, bare, use_kernel=False))
+    # opt out for ad-hoc indexes: canary still runs
+    report = self_check(RetrievalEngine(params, bare, use_kernel=False),
+                        require_checksum=False)
+    assert not report.index_verified
+
+
+def test_self_check_catches_poisoned_norms(setup):
+    """A checksumless index with NaN norms must fail the canary's own
+    sanity gate, not slip through to traffic."""
+    params, index, _, _ = setup
+    poisoned = index._replace(
+        sparse_norms=index.sparse_norms.at[0].set(jnp.nan),
+        inv_sparse_norms=None, checksum=None,
+    )
+    with pytest.raises(SelfCheckError, match="non-finite"):
+        self_check(RetrievalEngine(params, poisoned, use_kernel=False),
+                   require_checksum=False)
+
+
+def test_guard_startup_self_check_and_fallback(setup):
+    params, index, qindex, queries = setup
+    corrupt = flip_index_byte(qindex, byte=17, bit=2)
+    # no fallback: the integrity failure surfaces typed
+    with pytest.raises(IndexIntegrityError):
+        GuardedEngine(
+            RetrievalEngine(params, corrupt, use_kernel=False,
+                            precision="int8"),
+            run_self_check=True,
+        )
+    # with a verified fallback: serve from it, degraded from the start
+    fp_index = dequantize_index(qindex)
+    assert verify_index(fp_index)
+    g = GuardedEngine(
+        RetrievalEngine(params, corrupt, use_kernel=False,
+                        precision="int8"),
+        run_self_check=True, fallback_index=fp_index,
+    )
+    assert g.degraded_from_start is not None
+    assert "failed integrity check" in g.degraded_from_start
+    assert g.engine.index is fp_index and g.engine.precision == "exact"
+    scores, ids, status = g.retrieve_dense(queries, 8)
+    assert status.degraded and "fallback index" in status.fault
+    # the fallback answer is the fp32 oracle's answer
+    wv, wi = RetrievalEngine(params, fp_index,
+                             use_kernel=False).retrieve_dense(queries, 8)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))

@@ -41,6 +41,13 @@ EXTRA_REQUIRED = {
         "k", "precision", "recall_vs_exact", "score_mae",
         "rank_displacement", "quality_n",
     },
+    # hardened serving (ISSUE 6): the recovery-path fields gate
+    # (recall_vs_exact_min is a recall* field, so a drop beyond tol also
+    # gates against the baseline); timing stays warn-only like every row
+    "retrieval_fault_matrix": {
+        "faults", "recovered_exact", "degraded", "recall_vs_exact_min",
+        "coverage_min",
+    },
 }
 # records are only comparable within an identical configuration
 CONFIG_FIELDS = ("path", "shards", "n", "q", "topn")
