@@ -52,6 +52,7 @@ from repro.serving import (
     FaultInjector,
     GuardedEngine,
     RetrievalEngine,
+    corrupt_postings,
     flip_index_byte,
     poison_queries,
 )
@@ -98,6 +99,12 @@ def main(smoke: bool = False):
         )
         return GuardedEngine(eng, backoff_s=0.001, **guard_kw)
 
+    def corrupted_two_stage():
+        eng = RetrievalEngine(params, qindex, stage="two_stage",
+                              candidate_fraction=0.5)
+        eng.inverted = corrupt_postings(eng.inverted)
+        return eng
+
     def healthy_twin(precision="exact", sharded=False):
         eng = RetrievalEngine(
             params, qindex, precision=precision,
@@ -138,6 +145,12 @@ def main(smoke: bool = False):
         ("kernel-exception",
          lambda: guarded(precision="int8", injector=FaultInjector(
              "kernel-exception")),
+         queries, False),
+        # planted out-of-range posting id -> stage-1 integrity check
+        # fires, the ladder sheds candidate generation and serves the
+        # exact single-stage scan (ISSUE 7)
+        ("corrupt-postings",
+         lambda: GuardedEngine(corrupted_two_stage(), backoff_s=0.001),
          queries, False),
     ]
 

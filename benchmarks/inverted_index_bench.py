@@ -1,60 +1,139 @@
 """Beyond-paper: inverted-file sparse retrieval vs the exact scan.
 
 Measures the work reduction (fraction of catalog scanned per query) and
-the recall cost of posting-list capping, vs the paper's exact O(N·k) scan.
+the recall cost of posting-list capping, vs the paper's exact O(N·k)
+scan — and, at full size, the single-stage vs two-stage N-sweep whose
+crossover docs/BENCHMARKS.md snapshots.
+
+Since ISSUE 7 this bench is part of the schema-gated BENCH flow: it
+APPENDS one ``retrieval_inverted_index`` row to ``BENCH_retrieval.json``
+(the candidate-generation quality at the serving cap — scan fraction +
+recall vs the exact sparse scan), so ``tools/check_bench.py`` gates it
+like every other row.  It must therefore run AFTER
+``benchmarks.retrieval_modes``, which rewrites the record wholesale.
 """
 from __future__ import annotations
+
+import json
+import pathlib
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    SAEConfig, build_index, encode, init_train_state, score_dense,
-    score_sparse, top_n, train_step,
+    SAEConfig, build_index, encode, init_train_state, score_sparse,
+    top_n, train_step,
 )
 from repro.core.inverted_index import (
     build_inverted_index, expected_scan_fraction, search_inverted,
 )
+from repro.core.retrieval import kernel_path, retrieve, two_stage_retrieve
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
 
 D, H, K = 256, 1024, 16
 N, Q, TOPN = 8192, 64, 10
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_retrieval.json"
 
 
-def main():
-    cfg = SAEConfig(d=D, h=H, k=K)
-    corpus = clustered_embeddings(jax.random.PRNGKey(0), N, d=D)
-    queries = clustered_embeddings(jax.random.PRNGKey(1), Q, d=D)
+def _timeit(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def _train(cfg, corpus, n, steps):
     state = init_train_state(cfg, jax.random.PRNGKey(2))
     step = jax.jit(lambda s, b: train_step(s, b, cfg, AdamConfig(lr=3e-3)))
-    for i in range(250):
+    for i in range(steps):
         idx = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(3), i),
-                                 (2048,), 0, N)
+                                 (min(2048, n),), 0, n)
         state, _ = step(state, corpus[idx])
-    params = state.params
+    return state.params
+
+
+def main(smoke: bool = False):
+    n, q_count, topn = (1024, 16, 5) if smoke else (N, Q, TOPN)
+    train_steps = 40 if smoke else 250
+    caps = (64, 256) if smoke else (256, 1024, 4096)
+    serving_cap = caps[-1]
+    cfg = SAEConfig(d=D, h=H, k=K)
+    corpus = clustered_embeddings(jax.random.PRNGKey(0), n, d=D)
+    queries = clustered_embeddings(jax.random.PRNGKey(1), q_count, d=D)
+    params = _train(cfg, corpus, n, train_steps)
     codes = encode(params, corpus, cfg.k)
     q_codes = encode(params, queries, cfg.k)
     exact = build_index(codes)
-    truth = top_n(score_sparse(exact, q_codes), TOPN)[1]   # exact sparse scan
+    truth = top_n(score_sparse(exact, q_codes), topn)[1]   # exact sparse scan
+
+    def rec_vs_exact(ids):
+        return float(np.mean([
+            len(set(a.tolist()) & set(b.tolist())) / topn
+            for a, b in zip(np.asarray(ids), np.asarray(truth))
+        ]))
 
     print("name,us_per_call,derived")
-    for cap in (256, 1024, 4096):
+    serving_row = None
+    for cap in caps:
         inv = build_inverted_index(codes, cap=cap)
         frac = expected_scan_fraction(codes, cap)
-        _, ids = search_inverted(inv, q_codes, TOPN)
-        rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / TOPN
-                       for a, b in zip(np.asarray(ids), np.asarray(truth))])
-        print(f"inverted_cap{cap},0,scan_frac={frac:.3f};"
+        us = _timeit(lambda qc: search_inverted(inv, qc, topn), q_codes)
+        rec = rec_vs_exact(search_inverted(inv, q_codes, topn)[1])
+        print(f"inverted_cap{cap},{us:.0f},scan_frac={frac:.3f};"
               f"recall_vs_exact_scan={rec:.3f}")
+        if cap == serving_cap:
+            serving_row = (us, rec, frac)
     # uncapped lists must reproduce the exact scan ordering
-    inv_full = build_inverted_index(codes, cap=N)
-    _, ids_full = search_inverted(inv_full, q_codes, TOPN)
-    rec_full = np.mean([len(set(a.tolist()) & set(b.tolist())) / TOPN
-                        for a, b in zip(np.asarray(ids_full), np.asarray(truth))])
+    inv_full = build_inverted_index(codes, cap=n)
+    _, ids_full = search_inverted(inv_full, q_codes, topn)
+    rec_full = rec_vs_exact(ids_full)
     print(f"inverted_uncapped,0,recall_vs_exact_scan={rec_full:.3f}")
     assert rec_full > 0.999, rec_full
+
+    # ---- the schema-gated BENCH row (appended; see module docstring) ----
+    us, rec, frac = serving_row
+    record = {
+        "name": "retrieval_inverted_index",
+        "us_per_call": round(us, 1),
+        # recall here is vs the exact sparse scan — the candidate
+        # generator's own quality bound (check_bench gates recall* drops)
+        "recall": round(rec, 4),
+        "path": "fused-kernel" if kernel_path("auto") else "jnp-chunked",
+        "shards": 1, "n": n, "q": q_count, "topn": topn, "smoke": smoke,
+        "cap": serving_cap, "scan_frac": round(frac, 4),
+    }
+    records = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else []
+    records = [r for r in records if r["name"] != record["name"]]
+    records.append(record)
+    BENCH_JSON.write_text(json.dumps(records, indent=2) + "\n")
+    print(f"[bench] appended retrieval_inverted_index to {BENCH_JSON}")
+
+    # ---- N-sweep: single-stage vs two-stage crossover (full size only;
+    # docs/BENCHMARKS.md snapshots this table).  One model serves every
+    # N — corpora are re-encoded, the SAE is not re-trained per size.
+    if not smoke:
+        print("sweep_n,single_us,two_stage_us")
+        for n_sweep in (2048, 8192, 16384, 32768):
+            corpus_s = clustered_embeddings(jax.random.PRNGKey(4), n_sweep,
+                                            d=D)
+            codes_s = encode(params, corpus_s, cfg.k)
+            index_s = build_index(codes_s)
+            inv_s = build_inverted_index(codes_s, cap=serving_cap)
+            single_fn = jax.jit(
+                lambda qc, idx=index_s: retrieve(idx, qc, topn,
+                                                 use_kernel=False))
+            cache = {}
+            two_fn = lambda qc, idx=index_s, iv=inv_s: two_stage_retrieve(  # noqa: E731
+                idx, iv, qc, topn, use_fused=False,
+                candidate_fraction=0.25, cache=cache)
+            us_1 = _timeit(single_fn, q_codes)
+            us_2 = _timeit(two_fn, q_codes)
+            print(f"sweep_{n_sweep},{us_1:.0f},{us_2:.0f}")
     return 0
 
 

@@ -27,9 +27,11 @@ MODULES = ["size_table", "convergence", "tradeoff", "retrieval_modes",
            "fault_matrix"]
 # --smoke: tiny-size perf record (writes BENCH_retrieval.json) — wired into
 # the tier-1 flow as a non-gating step (tests/test_benchmarks_smoke.py).
-# fault_matrix must run AFTER retrieval_modes: retrieval_modes rewrites
-# BENCH_retrieval.json wholesale, fault_matrix appends its row to it
-SMOKE_MODULES = ["retrieval_modes", "kernels_bench", "fault_matrix"]
+# fault_matrix and inverted_index_bench must run AFTER retrieval_modes:
+# retrieval_modes rewrites BENCH_retrieval.json wholesale, the other two
+# append their rows to it
+SMOKE_MODULES = ["retrieval_modes", "kernels_bench", "fault_matrix",
+                 "inverted_index_bench"]
 
 
 def main() -> None:

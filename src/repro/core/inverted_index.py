@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.retrieval import top_n
 from repro.core.types import SparseCodes
+from repro.errors import IndexIntegrityError, InvalidCodesError
 
 
 class InvertedIndex(NamedTuple):
@@ -52,6 +53,17 @@ def build_inverted_index(codes: SparseCodes, cap: int = 2048) -> InvertedIndex:
     idx = np.asarray(codes.indices)
     n, k = vals.shape
     h = codes.dim
+    # out-of-range latents would index bincount/postings wrongly (negative
+    # indices silently wrap; >= h crashes with an opaque numpy error) —
+    # reject them up front, naming the offending entry
+    bad = (idx < 0) | (idx >= h)
+    if bad.any():
+        r, s = (int(v) for v in np.argwhere(bad)[0])
+        raise InvalidCodesError(
+            f"codes.indices[{r}, {s}] = {int(idx[r, s])} is outside the "
+            f"latent range [0, {h}) — cannot bucket this entry into a "
+            "posting list (corrupted codes or a dim mismatch)"
+        )
     flat_lat = idx.reshape(-1)
     flat_abs = np.abs(vals.reshape(-1))
     flat_row = np.repeat(np.arange(n, dtype=np.int32), k)
@@ -136,7 +148,10 @@ def search_inverted(
             keep &= ~jnp.any(cb[:, None] == best_i[None, :], axis=-1)
             scores = jnp.where(keep, scores, -jnp.inf)
             cand_v = jnp.concatenate([best_v, scores])
-            cand_i = jnp.concatenate([best_i, cb])
+            # padding contract (pinned, matches core.retrieve at n>matches):
+            # masked entries surface as (score −inf, id −1) and sort after
+            # every real match — never a real id with a −inf score
+            cand_i = jnp.concatenate([best_i, jnp.where(keep, cb, -1)])
             v, p = jax.lax.top_k(cand_v, n)
             return (v, cand_i[p]), None
 
@@ -177,6 +192,8 @@ def _search_inverted_fullsort(
         )
         keep = jnp.zeros_like(valid).at[order].set(first) & valid
         scores = jnp.where(keep, scores, -jnp.inf)
+        # same padding contract as the streaming path: (−inf, −1) pairs
+        cand = jnp.where(keep, cand, -1)
         v, pos = jax.lax.top_k(scores, n)
         return v, cand[pos]
 
@@ -185,10 +202,81 @@ def _search_inverted_fullsort(
 
 
 def expected_scan_fraction(codes: SparseCodes, cap: int) -> float:
-    """Fraction of the catalog touched per query (host-side estimate)."""
+    """Fraction of the catalog touched per query (host-side estimate).
+
+    Independence approximation: a uniformly chosen latent's capped posting
+    list covers p = E[min(len, cap)] / N of the catalog, so a query
+    hitting k latents misses a given item with probability ~ (1 − p)^k
+    and the expected union covers 1 − (1 − p)^k.  The former k·p estimate
+    ignored union overlap and could exceed 1.0 on dense-latent corpora
+    (e.g. all activity on a handful of latents); this form is always in
+    [0, 1], still monotone in ``cap``, and bounded above by k·p.  The
+    approximation assumes the query's k latents are drawn independently
+    of each other and of per-item co-activation — real corpora correlate
+    latents, so treat this as an estimate, not a guarantee (the measured
+    number lives in benchmarks/inverted_index_bench.py).
+    """
     idx = np.asarray(codes.indices).reshape(-1)
     counts = np.bincount(idx, minlength=codes.dim).astype(np.float64)
     counts = np.minimum(counts, cap)
     k = codes.k
-    # expected union size for a query hitting k latents ~ k·E[list len]
-    return float(k * counts.mean() / codes.n)
+    p = float(np.clip(counts.mean() / codes.n, 0.0, 1.0))
+    return float(np.clip(1.0 - (1.0 - p) ** k, 0.0, 1.0))
+
+
+def candidate_union(
+    index: InvertedIndex, q_indices: np.ndarray, budget: int
+) -> np.ndarray:
+    """Stage 1 of two-stage retrieval: per-query candidate row sets.
+
+    Host-side (numpy) — posting lists live as a static (h, cap) matrix,
+    but the union/dedup/truncate logic is data-dependent and cheap, so it
+    runs outside jit.  For each query row the k posting lists are
+    concatenated in impact order, deduplicated keeping first occurrence
+    (so higher-impact entries win the truncation race), truncated to
+    ``budget`` rows, then padded back up to ``budget`` with *real* filler
+    catalog rows not already present (padding with repeats or sentinels
+    would give stage 2's kernels out-of-range or duplicate rows; real
+    fillers merely add candidates that honestly compete and lose).
+    Each row is finally sorted ascending so that stage 2's sub-index
+    position order equals global-id order — ``lax.top_k`` ties then
+    resolve to the lowest global id, exactly matching the single-stage
+    path's tie semantics.
+
+    Raises ``IndexIntegrityError`` if the posting matrix holds ids
+    outside [−1, N) — the signature of postings corruption, and the
+    guard ladder's cue to fall back to single-stage retrieval.
+
+    Returns (Q, budget) int32, every entry a valid catalog row, each row
+    sorted ascending with no duplicates.  Requires budget ≤ N.
+    """
+    n_items = index.codes.n
+    if budget > n_items:
+        raise ValueError(
+            f"candidate budget {budget} exceeds catalog size {n_items}"
+        )
+    qi = np.asarray(q_indices)
+    if qi.ndim == 1:
+        qi = qi[None]
+    postings = np.asarray(index.postings)
+    out = np.empty((qi.shape[0], budget), dtype=np.int32)
+    for r in range(qi.shape[0]):
+        cand = postings[qi[r]].reshape(-1)                 # (k·cap,)
+        if ((cand < -1) | (cand >= n_items)).any():
+            bad = cand[(cand < -1) | (cand >= n_items)][0]
+            raise IndexIntegrityError(
+                f"inverted index posting id {int(bad)} outside [-1, "
+                f"{n_items}) — postings corrupted since build"
+            )
+        valid = cand[cand >= 0]
+        # first-occurrence dedup preserving impact/concatenation order
+        _, first = np.unique(valid, return_index=True)
+        uniq = valid[np.sort(first)][:budget]
+        need = budget - uniq.shape[0]
+        if need:
+            fillers = np.setdiff1d(
+                np.arange(budget, dtype=np.int32), uniq
+            )[:need]
+            uniq = np.concatenate([uniq, fillers])
+        out[r] = np.sort(uniq)
+    return out

@@ -56,6 +56,7 @@ from __future__ import annotations
 import zlib
 from typing import NamedTuple, Optional, Union
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -313,6 +314,151 @@ def index_codes_f32(index: Index) -> SparseCodes:
     if isinstance(index.codes, QuantizedCodes):
         return dequantize_codes(index.codes)
     return index.codes
+
+
+def take_index_rows(index: Index, rows: jax.Array) -> Index:
+    """Sub-index over the given catalog rows (gathered, ids re-based).
+
+    Gathers every per-candidate array of the index — codes (quantized or
+    fp32), norms, reciprocal norms — at ``rows``, producing an index whose
+    candidate ``i`` is the original index's candidate ``rows[i]``.  The
+    serving formats gather AS-IS: a ``QuantizedIndex`` stays int8/int16 +
+    scales, so downstream kernels run their usual generation unchanged.
+    The sub-index carries no checksum (its byte content is a per-call
+    gather; integrity is the full index's concern).  Callers map returned
+    ids back with ``rows[ids]``.  jit-safe: ``rows`` may be traced.
+
+    Shared by degraded partial retrieval over surviving shards
+    (``distributed.retrieve.partial_retrieve_prepped``) and stage 2 of
+    two-stage retrieval (``two_stage_retrieve``).
+    """
+    take = lambda a: None if a is None else jnp.take(a, rows, axis=0)
+    codes = index.codes
+    if isinstance(codes, QuantizedCodes):
+        sub_codes = QuantizedCodes(
+            q_values=take(codes.q_values), indices=take(codes.indices),
+            scales=take(codes.scales), dim=codes.dim,
+        )
+    else:
+        sub_codes = SparseCodes(
+            values=take(codes.values), indices=take(codes.indices),
+            dim=codes.dim,
+        )
+    return index._replace(
+        codes=sub_codes,
+        sparse_norms=take(index.sparse_norms),
+        recon_norms=take(index.recon_norms),
+        inv_sparse_norms=take(index.inv_sparse_norms),
+        inv_recon_norms=take(index.inv_recon_norms),
+        checksum=None,
+    )
+
+
+def two_stage_budget(n_items: int, n: int, candidate_fraction: float) -> int:
+    """Static stage-2 candidate count: ``candidate_fraction`` of the
+    catalog, at least ``n``, rounded up to a BLOCK_N multiple (the fused
+    kernels' candidate tile) and capped at the catalog size.  Static so
+    the stage-2 jit compiles once per (n, budget) shape."""
+    from repro.kernels.sparse_dot.kernel import BLOCK_N
+
+    if not 0.0 < candidate_fraction <= 1.0:
+        raise ValueError(
+            f"candidate_fraction must be in (0, 1]: {candidate_fraction}"
+        )
+    if n > n_items:
+        raise ValueError(f"top-n {n} exceeds candidate count {n_items}")
+    budget = max(n, int(np.ceil(candidate_fraction * n_items)))
+    budget = -(-budget // BLOCK_N) * BLOCK_N
+    return min(n_items, max(budget, n))
+
+
+def two_stage_retrieve(
+    index: Index,
+    inv,
+    q: SparseCodes,
+    n: int,
+    *,
+    use_fused: bool,
+    precision: str = "exact",
+    candidate_fraction: float = 0.25,
+    cache: Optional[dict] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Two-stage sparse retrieval: inverted-index candidate generation,
+    then the fused re-rank over only the gathered candidate rows.
+
+    Stage 1 (host): union the query's k posting lists from ``inv`` (an
+    ``InvertedIndex`` built over this index's codes), dedup in impact
+    order, truncate/pad to a static budget of
+    ``two_stage_budget(N, n, candidate_fraction)`` real catalog rows,
+    sorted ascending per query (``core.inverted_index.candidate_union``).
+
+    Stage 2 (jit, per query): gather the sub-index at those rows
+    (``take_index_rows`` — quantized stays quantized), run the ordinary
+    streaming retrieve (``serving.engine.retrieve_prepped``, so the fused
+    sparse-q / quantized / int8-MXU generations are reused unchanged,
+    including the n>matches (−inf, −1) padding contract), and map ids
+    back through the gather.  Because candidate rows are sorted
+    ascending, sub-index position order equals global-id order and
+    ``lax.top_k`` ties resolve to the lowest global id — the single-stage
+    tie rule.
+
+    APPROXIMATE in general: an item outside every queried posting list
+    (posting-cap truncation, or budget < |union|) can't be returned.
+    With untruncated lists and budget ≥ |union| it is EXACT — any item
+    with positive sparse-cosine score shares ≥ 1 latent with the query,
+    so the true top-n is inside the union whenever ≥ n positive-score
+    items exist.  ``candidate_fraction=1.0`` is always bit-identical to
+    single-stage.  Quality is measured per-build by
+    ``benchmarks/retrieval_modes.py`` (recall_vs_exact gate).
+
+    O(budget·k) per query instead of O(N·k) — the catalog-scaling path.
+    Cost is ``budget/N`` of a full scan (= the reported scanned
+    fraction), plus the host-side stage 1.
+
+    ``cache`` (dict, caller-owned — the serving engine passes its own)
+    memoizes the stage-2 jit by (n, budget) so repeated calls at one
+    shape compile once.  Sparse mode only (q are (Q?, k) query codes).
+    """
+    from repro.core.inverted_index import candidate_union
+    from repro.serving.engine import (
+        PreppedQuery, check_precision, retrieve_prepped,
+    )
+
+    check_precision(index, precision)
+    n_items = index.codes.n
+    budget = two_stage_budget(n_items, n, candidate_fraction)
+
+    squeeze = q.values.ndim == 1
+    qv = q.values[None] if squeeze else q.values           # (Q, k)
+    qi = q.indices[None] if squeeze else q.indices
+    rows = candidate_union(inv, np.asarray(qi), budget)    # (Q, budget)
+
+    if cache is None:
+        cache = {}
+    key = (n, budget, use_fused, precision)
+    fn = cache.get(key)
+    if fn is None:
+        @jax.jit
+        def fn(rows_one, qv_one, qi_one):
+            sub = take_index_rows(index, rows_one)
+            pq = PreppedQuery(
+                values=qv_one[None], indices=qi_one[None], dense=None,
+                norm=jnp.linalg.norm(qv_one)[None],
+            )
+            s, ids = retrieve_prepped(
+                sub, pq, n, use_fused=use_fused, precision=precision,
+            )
+            # map sub-index positions back to global ids, preserving the
+            # padding contract: id −1 stays −1
+            gids = jnp.where(ids[0] >= 0, rows_one[ids[0]], -1)
+            return s[0], gids
+
+        cache[key] = fn
+
+    outs = [fn(jnp.asarray(rows[r]), qv[r], qi[r]) for r in range(qv.shape[0])]
+    scores = jnp.stack([s for s, _ in outs])
+    ids = jnp.stack([g for _, g in outs])
+    return (scores[0], ids[0]) if squeeze else (scores, ids)
 
 
 def retrieve(

@@ -244,6 +244,7 @@ def partial_retrieve_prepped(
     n-exceeds-slice convention.  All shards dead raises
     ``ShardFailureError`` — there is nothing left to serve from.
     """
+    from repro.core.retrieval import take_index_rows
     from repro.serving.engine import mode_inv_norms, retrieve_prepped
 
     N = index.codes.n
@@ -265,33 +266,15 @@ def partial_retrieve_prepped(
     ])
     n_live = int(rows.shape[0])
 
-    take = lambda a: None if a is None else jnp.take(a, rows, axis=0)
-    codes = index.codes
-    if isinstance(codes, QuantizedCodes):
-        live_codes = QuantizedCodes(
-            q_values=take(codes.q_values), indices=take(codes.indices),
-            scales=take(codes.scales), dim=codes.dim,
-        )
-    else:
-        live_codes = SparseCodes(
-            values=take(codes.values), indices=take(codes.indices),
-            dim=codes.dim,
-        )
-    # a fresh sub-index over the survivor rows; its checksum is unknowable
-    # here (and irrelevant — integrity was verified on the full index)
-    live_index = index._replace(
-        codes=live_codes,
-        sparse_norms=take(index.sparse_norms),
-        recon_norms=take(index.recon_norms),
-        inv_sparse_norms=take(index.inv_sparse_norms),
-        inv_recon_norms=take(index.inv_recon_norms),
-        checksum=None,
-    )
+    # sub-index over the survivor rows (checksum-less: integrity was
+    # verified on the full index) — same gather as two-stage's stage 2
+    live_index = take_index_rows(index, rows)
 
     n_local = min(n, n_live)
     scores, ids = retrieve_prepped(
         live_index, pq, n_local,
-        use_fused=use_fused, inv_norms=take(inv_norms), precision=precision,
+        use_fused=use_fused, inv_norms=jnp.take(inv_norms, rows, axis=0),
+        precision=precision,
     )
     gids = rows[ids]
     if n_local < n:

@@ -36,6 +36,13 @@ class InvalidQueryError(RetrievalError, ValueError):
     the expected vs actual value."""
 
 
+class InvalidCodesError(RetrievalError, ValueError):
+    """Sparse codes are structurally invalid for the operation — e.g. a
+    code index outside ``[0, h)`` handed to the inverted-index builder.
+    Messages name the offending row/slot and the out-of-range latent.
+    Also a ``ValueError`` for callers matching the stdlib taxonomy."""
+
+
 class IndexIntegrityError(RetrievalError):
     """Index content does not match its build-time checksum (corruption,
     out-of-band mutation, or a checksum-less index where one is

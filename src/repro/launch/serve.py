@@ -55,6 +55,18 @@ instead of dying; ``dead-shard``/``slow-shard`` need ``--shards > 1``):
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --self-check
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --self-check --inject-fault corrupt-index
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --shards 4 --inject-fault dead-shard
+
+Two-stage retrieval (ISSUE 7, ``--two-stage``): stage 1 unions the
+query's k posting lists from an inverted index over the latents into a
+bounded candidate set (``--candidate-fraction`` of the catalog), stage 2
+re-ranks only those rows through the ordinary fused retrieve — sub-linear
+in catalog size, approximate (recall vs dense truth reported as usual,
+and the guard ladder falls back to the exact single-stage scan on any
+stage-1 fault, e.g. ``--inject-fault corrupt-postings``):
+
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --candidate-fraction 0.1
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --inject-fault corrupt-postings
 """
 from __future__ import annotations
 
@@ -113,6 +125,7 @@ from repro.serving import (
     FaultInjector,
     GuardedEngine,
     RetrievalEngine,
+    corrupt_postings,
     flip_index_byte,
     poison_queries,
 )
@@ -147,6 +160,16 @@ def main(argv=None):
                          "to the fp32 path) or 'int8' (approximate int8-MXU "
                          "scoring, requires --quantized; quality vs exact "
                          "is reported per request)")
+    ap.add_argument("--two-stage", action="store_true",
+                    help="serve two-stage: inverted-index candidate "
+                         "generation (stage 1, host) feeding the fused "
+                         "re-rank over only the gathered rows (stage 2) — "
+                         "sub-linear in catalog size, approximate; "
+                         "sparse mode, unsharded only")
+    ap.add_argument("--candidate-fraction", type=float, default=0.25,
+                    help="two-stage candidate budget as a fraction of the "
+                         "catalog (stage 2 scans ~this fraction; 1.0 is "
+                         "bit-identical to single-stage)")
     ap.add_argument("--self-check", action="store_true",
                     help="verify the index content checksum and run a "
                          "canary batch against the reference contract "
@@ -165,6 +188,15 @@ def main(argv=None):
                  "path reads int8 candidate tiles)")
     if args.inject_fault in ("dead-shard", "slow-shard") and args.shards < 2:
         ap.error(f"--inject-fault {args.inject_fault} requires --shards > 1")
+    if args.two_stage and args.shards > 1:
+        ap.error("--two-stage does not compose with --shards > 1 "
+                 "(candidate generation is per-catalog, not per-shard)")
+    if args.two_stage and args.mode != "sparse":
+        ap.error("--two-stage requires --mode sparse (posting lists index "
+                 "the sparse code latents)")
+    if args.inject_fault == "corrupt-postings" and not args.two_stage:
+        ap.error("--inject-fault corrupt-postings requires --two-stage "
+                 "(the fault lives in stage 1's posting lists)")
 
     use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
     path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
@@ -205,6 +237,8 @@ def main(argv=None):
 
     if args.precision == "int8":
         path = f"{path}+int8"
+    if args.two_stage:
+        path = f"{path}+two-stage"
 
     # ------------------------------------------------ hardened serving setup
     fallback_index = None
@@ -226,7 +260,17 @@ def main(argv=None):
         state.params, index,
         mode=args.mode, use_kernel=use_kernel, mesh=mesh,
         precision=args.precision,
+        stage=("two_stage" if args.two_stage else "single"),
+        candidate_fraction=args.candidate_fraction,
     )
+    if args.inject_fault == "corrupt-postings":
+        # plant out-of-range ids in the posting lists AFTER the build:
+        # stage 1's integrity check must trip on every request, and the
+        # ladder must re-serve each one on the exact single-stage rung
+        engine.inverted = corrupt_postings(engine.inverted)
+        print("[faults] corrupt-postings: planted out-of-range ids in "
+              "every posting list; expecting per-request fallback to "
+              "single-stage")
     guard = GuardedEngine(
         engine,
         deadline_ms=args.deadline_ms,
@@ -278,7 +322,10 @@ def main(argv=None):
     c = guard.counters
     guard_stats = (f"degraded {c['degraded']}/{c['requests']} "
                    f"sanitized {c['sanitized']} rejected {c['rejected']} ")
+    two_stage_stats = (f"cand_frac {args.candidate_fraction:g} "
+                       if args.two_stage else "")
     prefix = (f"[serve] mode={args.mode} path={path} shards={args.shards} "
+              f"{two_stage_stats}"
               f"recall@{args.topn} {np.mean(recalls):.3f} {quality}"
               f"{guard_stats}| ")
     if lat_ms.size:

@@ -47,7 +47,9 @@ import numpy as np
 
 from repro.core import sae
 from repro.core.quantized_codes import QuantizedCodes
-from repro.core.retrieval import NORM_EPS, kernel_path
+from repro.core.retrieval import (
+    NORM_EPS, index_codes_f32, kernel_path, two_stage_retrieve,
+)
 from repro.core.types import SparseCodes
 from repro.errors import EngineConfigError, InvalidQueryError
 from repro.kernels.fused_encode import fused_encode
@@ -341,10 +343,21 @@ class RetrievalEngine:
     ``precision``: ``"exact"`` (default; bit-identical to the fp32 path)
     or ``"int8"`` (generation 5's approximate int8-scoring fast path —
     QuantizedIndex only, quality gated on recall via ``repro.core.eval``).
+    ``stage``: ``"single"`` (default; every request scores the full
+    catalog) or ``"two_stage"`` — stage 1 unions the query's posting
+    lists from an inverted index built at engine construction into a
+    bounded candidate set (``candidate_fraction`` of the catalog,
+    posting lists capped at ``inverted_cap``), stage 2 runs the ordinary
+    fused/ref retrieve over only the gathered rows
+    (``core.retrieval.two_stage_retrieve``).  Sub-linear in catalog
+    size and APPROXIMATE (recall-gated in benchmarks); sparse mode,
+    unsharded only — sharding composes with single-stage instead.
 
     ``retrieve_dense`` jit-compiles the whole request (encode → score →
     select) once per distinct ``n`` and caches the executable, so steady
-    -state serving is a single dispatch.
+    -state serving is a single dispatch.  (Two-stage requests compile
+    two cached jits — encode and the per-query stage-2 re-rank — with
+    the host-side candidate union between them.)
     """
 
     def __init__(
@@ -358,9 +371,34 @@ class RetrievalEngine:
         shard_axis: str = "cand",
         k: Optional[int] = None,
         precision: str = "exact",
+        stage: str = "single",
+        candidate_fraction: float = 0.25,
+        inverted_cap: int = 2048,
     ):
         if mode not in ("sparse", "reconstructed"):
             raise EngineConfigError(f"unknown retrieval mode: {mode!r}")
+        if stage not in ("single", "two_stage"):
+            raise EngineConfigError(
+                f"unknown stage {stage!r} (expected 'single' or 'two_stage')"
+            )
+        if stage == "two_stage":
+            if mesh is not None:
+                raise EngineConfigError(
+                    "stage='two_stage' does not compose with a mesh — "
+                    "candidate generation is per-catalog, not per-shard; "
+                    "use single-stage sharded serving instead"
+                )
+            if mode != "sparse":
+                raise EngineConfigError(
+                    "stage='two_stage' requires mode='sparse': posting "
+                    "lists index the sparse code latents, and the "
+                    "reconstructed-space query is dense by construction"
+                )
+            if not 0.0 < candidate_fraction <= 1.0:
+                raise EngineConfigError(
+                    "candidate_fraction must be in (0, 1]: "
+                    f"{candidate_fraction}"
+                )
         if mode == "reconstructed":
             if params is None:
                 raise EngineConfigError(
@@ -385,8 +423,19 @@ class RetrievalEngine:
         self.shard_axis = shard_axis
         self.k = index.codes.k if k is None else k
         self.precision = check_precision(index, precision)
+        self.stage = stage
+        self.candidate_fraction = candidate_fraction
+        self.inverted_cap = inverted_cap
         self._inv_norms = mode_inv_norms(index, mode)
         self._serve_cache: dict[int, callable] = {}
+        self.inverted = None
+        if stage == "two_stage":
+            from repro.core.inverted_index import build_inverted_index
+
+            self.inverted = build_inverted_index(
+                index_codes_f32(index), cap=inverted_cap
+            )
+            self._two_stage_cache: dict = {}
 
     # ---------------------------------------------------------- request flow
     def encode_queries(self, x: jax.Array) -> SparseCodes:
@@ -410,6 +459,13 @@ class RetrievalEngine:
         """Serve a request whose queries are already compressed codes."""
         n = validate_topn(n, self.index.codes.n)
         validate_query_codes(q, h=self.index.codes.dim)
+        if self.stage == "two_stage":
+            return two_stage_retrieve(
+                self.index, self.inverted, q, n,
+                use_fused=self.use_fused, precision=self.precision,
+                candidate_fraction=self.candidate_fraction,
+                cache=self._two_stage_cache,
+            )
         pq = self.prep_query(q)
         if self.mesh is not None:
             from repro.distributed.retrieve import distributed_retrieve_prepped
@@ -434,6 +490,17 @@ class RetrievalEngine:
         validate_dense_query(x, d=d)
         validate_topn(n, self.index.codes.n)
         squeeze = x.ndim == 1
+        if self.stage == "two_stage":
+            # stage 1 runs on host — the request can't be one jit.  The
+            # encode is its own cached jit; retrieve_codes then does the
+            # host union + cached per-query stage-2 jit.
+            fn = self._serve_cache.get("encode")
+            if fn is None:
+                fn = jax.jit(lambda xb: self.encode_queries(xb))
+                self._serve_cache["encode"] = fn
+            codes = fn(x[None] if squeeze else x)
+            scores, ids = self.retrieve_codes(codes, n)
+            return (scores[0], ids[0]) if squeeze else (scores, ids)
         fn = self._serve_cache.get(n)
         if fn is None:
             def _serve(xb):

@@ -14,6 +14,10 @@ measured quality bound, never crash, never silently serve wrong results:
     slow-shard         one shard answers after a delay (deadline budget)
     kernel-exception   the kernel serving path raises mid-request (ladder
                        steps down a generation)
+    corrupt-postings   out-of-range candidate ids planted in the two-stage
+                       engine's inverted-index posting lists (stage 1's
+                       integrity check must trip, and the ladder must fall
+                       back to the exact single-stage scan)
 
 Everything here is host-side and deterministic: the same ``FaultInjector``
 configuration produces the same failure at the same step every run — no
@@ -38,6 +42,7 @@ FAULTS = (
     "dead-shard",
     "slow-shard",
     "kernel-exception",
+    "corrupt-postings",
 )
 
 
@@ -130,6 +135,24 @@ def flip_index_byte(index: Index, *, byte: int = 0, bit: int = 0) -> Index:
     return index._replace(
         codes=codes._replace(**{primary: jnp.asarray(arr)})
     )
+
+
+def corrupt_postings(inv, *, bad_id: Optional[int] = None):
+    """A copy of an ``InvertedIndex`` with out-of-range candidate ids
+    planted in its posting lists — what silent in-place postings
+    corruption looks like to stage 1 of two-stage retrieval.
+
+    Every posting list's first slot is overwritten (deterministic, and
+    guarantees ANY query's candidate union sees a corrupted entry, so the
+    fault fires on the first request regardless of its latents).
+    ``bad_id`` defaults to N + 7, safely outside the valid ``[-1, N)``
+    id range; ``candidate_union`` must raise ``IndexIntegrityError``.
+    """
+    post = np.asarray(inv.postings).copy()
+    if bad_id is None:
+        bad_id = inv.codes.n + 7
+    post[:, 0] = np.int32(bad_id)
+    return inv._replace(postings=jnp.asarray(post))
 
 
 def poison_queries(

@@ -211,7 +211,13 @@ def self_check(
 
     kernel_vs_ref = None
     max_diff = 0.0
-    if engine.use_fused or engine.mesh is not None:
+    # two-stage engines skip the kernel-vs-ref comparison: the path is
+    # structurally approximate (candidate generation, not scoring, is
+    # what differs from the reference), so bit/allclose contracts don't
+    # apply — its quality bound is recall-gated in benchmarks instead.
+    # The sanity checks above (finite, in-range, sorted) still ran.
+    if (engine.use_fused or engine.mesh is not None) \
+            and engine.stage == "single":
         ref = RetrievalEngine(
             engine.params, engine.index, mode=engine.mode,
             use_kernel=False, mesh=None, precision=engine.precision,
@@ -254,7 +260,8 @@ def _path_name(engine: RetrievalEngine) -> str:
            else "quantized" if quantized else "fp32")
     backend = "kernel" if engine.use_fused else "ref"
     sharded = "-sharded" if engine.mesh is not None else ""
-    return f"{fmt}-{backend}{sharded}"
+    prefix = "two-stage-" if engine.stage == "two_stage" else ""
+    return f"{prefix}{fmt}-{backend}{sharded}"
 
 
 class GuardedEngine:
@@ -348,24 +355,35 @@ class GuardedEngine:
         so the ladder only contains genuinely distinct paths."""
         e = self.engine
         quantized = isinstance(e.index.codes, QuantizedCodes)
-        cfgs = [
+        cfgs = []
+        if e.stage == "two_stage":
+            # two-stage is the TOP rung: fastest, but approximate and
+            # dependent on posting-list integrity — any fault (e.g. a
+            # corrupted inverted index) drops straight to the exact
+            # single-stage scan of the same precision/backend
+            cfgs.append(dict(mesh=None, precision=e.precision,
+                             use_fused=e.use_fused, dequant=False,
+                             stage="two_stage"))
+        cfgs += [
             dict(mesh=e.mesh, precision=e.precision,
-                 use_fused=e.use_fused, dequant=False),
+                 use_fused=e.use_fused, dequant=False, stage="single"),
             # shed the mesh first: a healthy single device beats retrying
             # a broken collective
             dict(mesh=None, precision=e.precision,
-                 use_fused=e.use_fused, dequant=False),
+                 use_fused=e.use_fused, dequant=False, stage="single"),
         ]
         if e.precision == "int8":
             cfgs.append(dict(mesh=None, precision="exact",
-                             use_fused=e.use_fused, dequant=False))
+                             use_fused=e.use_fused, dequant=False,
+                             stage="single"))
         # the pre-floor rung: fp32 index, jnp reference path
         cfgs.append(dict(mesh=None, precision="exact",
-                         use_fused=False, dequant=quantized))
+                         use_fused=False, dequant=quantized,
+                         stage="single"))
         ladder, seen = [], set()
         for cfg in cfgs:
             key = (cfg["mesh"] is None, cfg["precision"],
-                   cfg["use_fused"], cfg["dequant"])
+                   cfg["use_fused"], cfg["dequant"], cfg["stage"])
             if key in seen:
                 continue
             seen.add(key)
@@ -380,7 +398,8 @@ class GuardedEngine:
                else "quantized" if quantized else "fp32")
         backend = "kernel" if cfg["use_fused"] else "ref"
         sharded = "-sharded" if cfg["mesh"] is not None else ""
-        return f"{fmt}-{backend}{sharded}"
+        prefix = "two-stage-" if cfg.get("stage") == "two_stage" else ""
+        return f"{prefix}{fmt}-{backend}{sharded}"
 
     @property
     def ladder(self) -> tuple[str, ...]:
@@ -398,10 +417,14 @@ class GuardedEngine:
         else:
             e = self.engine
             index = dequantize_index(e.index) if cfg["dequant"] else e.index
+            two = cfg.get("stage") == "two_stage"
             eng = RetrievalEngine(
                 e.params, index, mode=e.mode,
                 use_kernel=cfg["use_fused"], mesh=cfg["mesh"],
                 shard_axis=e.shard_axis, precision=cfg["precision"],
+                stage=cfg.get("stage", "single"),
+                **(dict(candidate_fraction=e.candidate_fraction,
+                        inverted_cap=e.inverted_cap) if two else {}),
             )
         self._rung_engines[step] = eng
         return eng

@@ -77,6 +77,18 @@ def test_benchmarks_smoke_writes_perf_record(forced_device_count):
     # every injected fault — all entries are either bit-identical
     # recoveries or visibly degraded answers, and the worst full-coverage
     # recall vs exact clears the smoke floor
+    # ISSUE 7: the two-stage serving row carries its quality-vs-exact and
+    # scanned-work metrics (the 0.95 floor at full size is gated by
+    # tools/check_bench.py; the smoke record has to be present and sane)
+    ts = by_name["retrieval_two_stage"]
+    assert 0.0 <= ts["recall_vs_exact"] <= 1.0, ts
+    assert 0.0 < ts["scanned_fraction"] <= 0.5, ts
+    assert 0.0 < ts["candidate_fraction"] <= 1.0, ts
+    assert ts["quality_n"] == 32, ts
+    # ISSUE 7: the candidate-generator row (inverted-index bench) appends
+    # after retrieval_modes' wholesale rewrite — presence proves ordering
+    inv = by_name["retrieval_inverted_index"]
+    assert inv["cap"] >= 1 and 0.0 < inv["scan_frac"] <= 1.0, inv
     fm = by_name["retrieval_fault_matrix"]
     assert set(fm["faults"]) >= {"corrupt-index", "nonfinite-query",
                                  "kernel-exception"}, fm

@@ -91,6 +91,49 @@ def test_fault_matrix_row_schema_and_recall_gate():
     assert any("us_per_call" in w for w in warnings)
 
 
+def test_two_stage_row_schema_and_absolute_floor():
+    """ISSUE 7: the two-stage row's quality fields are required, and its
+    recall_vs_exact carries an ABSOLUTE 0.95 floor at full benchmark
+    size — baseline-independent, so a quality collapse gates even when
+    the baseline already collapsed."""
+    ts = dict(recall_vs_exact=0.97, scanned_fraction=0.3125,
+              candidate_fraction=0.3, quality_n=32)
+    # missing quality fields fail the schema gate
+    f = by_name(rec("retrieval_two_stage"))
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("schema" in x and "scanned_fraction" in x for x in failures)
+    # complete full-size row above the floor passes
+    f = by_name(rec("retrieval_two_stage", smoke=False, **ts))
+    failures, _ = compare(dict(f), f, recall_tol=0.02)
+    assert failures == []
+    # below the floor fails EVEN against an identical (bad) baseline
+    bad = by_name(rec("retrieval_two_stage", smoke=False,
+                      **{**ts, "recall_vs_exact": 0.90}))
+    failures, _ = compare(dict(bad), bad, recall_tol=0.02)
+    assert any("quality floor" in x for x in failures)
+    # smoke records are exempt from the absolute floor (tiny corpora make
+    # absolute recall noise) but still get the relative recall* gate
+    smoke = by_name(rec("retrieval_two_stage", smoke=True,
+                        **{**ts, "recall_vs_exact": 0.90}))
+    failures, _ = compare(dict(smoke), smoke, recall_tol=0.02)
+    assert failures == []
+    dropped = by_name(rec("retrieval_two_stage", smoke=True,
+                          **{**ts, "recall_vs_exact": 0.70}))
+    failures, _ = compare(smoke, dropped, recall_tol=0.02)
+    assert any("recall_vs_exact" in x for x in failures)
+
+
+def test_inverted_index_row_schema():
+    """ISSUE 7: the candidate-generator row must carry its cap and scan
+    fraction so the work-reduction claim stays auditable."""
+    f = by_name(rec("retrieval_inverted_index"))
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("schema" in x and "scan_frac" in x for x in failures)
+    f = by_name(rec("retrieval_inverted_index", cap=4096, scan_frac=0.209))
+    failures, _ = compare(dict(f), f, recall_tol=0.02)
+    assert failures == []
+
+
 def test_us_per_call_is_warn_only():
     b = by_name(rec("retrieval_sparse", us_per_call=1000.0))
     f = by_name(rec("retrieval_sparse", us_per_call=3000.0))

@@ -27,8 +27,8 @@ from repro.distributed.retrieve import (
 from repro.errors import IndexIntegrityError, ShardFailureError
 from repro.launch.mesh import make_candidate_mesh
 from repro.serving import (
-    FAULTS, FaultInjector, GuardedEngine, RetrievalEngine, flip_index_byte,
-    poison_queries,
+    FAULTS, FaultInjector, GuardedEngine, RetrievalEngine, corrupt_postings,
+    flip_index_byte, poison_queries,
 )
 
 CFG = SAEConfig(d=32, h=128, k=8)
@@ -204,6 +204,15 @@ def test_fault_matrix_never_crashes(setup, forced_device_count):
         return RetrievalEngine(params, qindex, use_kernel=False,
                                precision="int8")
 
+    def corrupted_two_stage():
+        # planted out-of-range posting id: stage 1's integrity check
+        # fires, the ladder sheds candidate generation and serves the
+        # exact single-stage scan
+        eng = RetrievalEngine(params, qindex, use_kernel=False,
+                              stage="two_stage", candidate_fraction=0.5)
+        eng.inverted = corrupt_postings(eng.inverted)
+        return eng
+
     matrix = {
         "corrupt-index": lambda: GuardedEngine(
             RetrievalEngine(params, flip_index_byte(qindex, byte=11, bit=5),
@@ -226,6 +235,7 @@ def test_fault_matrix_never_crashes(setup, forced_device_count):
         "kernel-exception": lambda: GuardedEngine(
             int8_engine(), injector=FaultInjector("kernel-exception")
         ),
+        "corrupt-postings": lambda: GuardedEngine(corrupted_two_stage()),
     }
     assert set(matrix) == set(FAULTS)
 

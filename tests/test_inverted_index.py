@@ -2,12 +2,17 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
-from repro.core import SAEConfig, build_index, encode, init_params, score_sparse, top_n
-from repro.core.inverted_index import (
-    _search_inverted_fullsort, build_inverted_index, expected_scan_fraction,
-    search_inverted,
+from repro.core import (
+    SAEConfig, SparseCodes, build_index, encode, init_params, retrieve,
+    score_sparse, top_n,
 )
+from repro.core.inverted_index import (
+    _search_inverted_fullsort, build_inverted_index, candidate_union,
+    expected_scan_fraction, search_inverted,
+)
+from repro.errors import IndexIntegrityError, InvalidCodesError
 
 CFG = SAEConfig(d=32, h=128, k=4)
 
@@ -77,3 +82,105 @@ def test_scan_fraction_decreases_with_cap():
     f_small = expected_scan_fraction(codes, cap=8)
     f_big = expected_scan_fraction(codes, cap=1024)
     assert 0 < f_small <= f_big <= codes.k * codes.k / codes.dim * 4 + 1
+
+
+def test_scan_fraction_is_a_probability_on_dense_latent_corpus():
+    """ISSUE 7 bugfix: every item lighting the same few latents used to
+    drive the k·p union-bound estimate above 1.0 (a fraction of 2.0 for
+    this corpus).  The inclusion–exclusion form stays in [0, 1]."""
+    n = 100
+    codes = SparseCodes(
+        values=jnp.ones((n, 4), dtype=jnp.float32),
+        indices=jnp.tile(jnp.arange(4, dtype=jnp.int32), (n, 1)),
+        dim=8,
+    )
+    frac = expected_scan_fraction(codes, cap=n)
+    assert 0.0 <= frac <= 1.0
+    # 4 of 8 latents hold all n items: p = 0.5, union = 1 - (1-p)^k
+    assert frac == pytest.approx(1.0 - 0.5 ** 4)
+
+
+def test_padding_contract_when_n_exceeds_the_union():
+    """ISSUE 7 bugfix: with n > |valid union| the padded tail must follow
+    the fused path's n>matches contract — score −inf, id −1, padded
+    entries last — and the real prefix must match the exact scan
+    (``core.retrieve``) bitwise.  Ids are compared EVERYWHERE, including
+    the padded tail, for the streaming and fullsort paths alike."""
+    h, k = 8, 2
+    # items 0-2 share latents {0,1} with the query (positive scores);
+    # items 3-5 live on disjoint latents {6,7} (score exactly 0, outside
+    # every queried posting list)
+    idx = np.array([[0, 1], [0, 1], [1, 0], [6, 7], [6, 7], [7, 6]],
+                   dtype=np.int32)
+    val = np.array([[1.0, .5], [.9, .4], [.8, .3], [1., 1.], [.5, .5],
+                    [.2, .1]], dtype=np.float32)
+    codes = SparseCodes(values=jnp.asarray(val), indices=jnp.asarray(idx),
+                        dim=h)
+    q = SparseCodes(values=jnp.asarray([[1.0, 1.0]], dtype=jnp.float32),
+                    indices=jnp.asarray([[0, 1]], dtype=jnp.int32), dim=h)
+    inv = build_inverted_index(codes, cap=6)
+    n = 5                                      # union is only 3 items
+    want_v, want_i = _search_inverted_fullsort(inv, q, n)
+    for block in (2, 3, 4096):
+        got_v, got_i = search_inverted(inv, q, n, block=block)
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    v, ids = np.asarray(want_v)[0], np.asarray(want_i)[0]
+    # padded tail: (-inf, -1) pairs, strictly after every real entry
+    assert np.isneginf(v[3:]).all() and (ids[3:] == -1).all()
+    assert np.isfinite(v[:3]).all() and (ids[:3] >= 0).all()
+    # real prefix matches the exact scan: same ids in the same order (all
+    # union scores are positive, all non-union scores are exactly 0), and
+    # scores to float tolerance (the two paths order the reductions
+    # differently, so last-ulp differences are expected)
+    ref_v, ref_i = retrieve(build_index(codes), q, n, use_kernel=False)
+    np.testing.assert_array_equal(ids[:3], np.asarray(ref_i)[0, :3])
+    np.testing.assert_allclose(v[:3], np.asarray(ref_v)[0, :3], rtol=1e-5)
+
+
+def test_build_rejects_out_of_range_latents():
+    """ISSUE 7 bugfix: an out-of-range latent index used to be silently
+    bucketed modulo-ish by one-hot masking; now the build raises a typed
+    error naming the offending row/slot/value."""
+    codes, _ = _setup(n=16)
+    for bad_val in (CFG.h + 5, -2):
+        idx = np.asarray(codes.indices).copy()
+        idx[3, 2] = bad_val
+        bad = SparseCodes(values=codes.values, indices=jnp.asarray(idx),
+                          dim=codes.dim)
+        with pytest.raises(InvalidCodesError, match=r"codes\.indices\[3, 2\]"):
+            build_inverted_index(bad, cap=16)
+        with pytest.raises(ValueError):        # typed error IS a ValueError
+            build_inverted_index(bad, cap=16)
+
+
+def test_candidate_union_covers_dedups_sorts_and_pads():
+    codes, q = _setup(n=400)
+    inv = build_inverted_index(codes, cap=64)
+    qi = np.asarray(q.indices)
+    rows = candidate_union(inv, qi, budget=128)
+    post = np.asarray(inv.postings)
+    assert rows.shape == (qi.shape[0], 128) and rows.dtype == np.int32
+    for r in range(qi.shape[0]):
+        row = rows[r]
+        assert (np.diff(row) > 0).all()          # sorted, duplicate-free
+        assert row.min() >= 0 and row.max() < 400  # real catalog rows only
+        union = {int(x) for x in post[qi[r]].ravel() if x >= 0}
+        if len(union) <= 128:                    # exactness precondition
+            assert union <= set(row.tolist())
+
+
+def test_candidate_union_rejects_corrupt_postings():
+    from repro.serving import corrupt_postings
+
+    codes, q = _setup(n=64)
+    inv = corrupt_postings(build_inverted_index(codes, cap=64))
+    with pytest.raises(IndexIntegrityError, match="postings corrupted"):
+        candidate_union(inv, np.asarray(q.indices), budget=32)
+
+
+def test_candidate_union_budget_cannot_exceed_catalog():
+    codes, q = _setup(n=64)
+    inv = build_inverted_index(codes, cap=64)
+    with pytest.raises(ValueError):
+        candidate_union(inv, np.asarray(q.indices), budget=65)

@@ -1,0 +1,163 @@
+"""Two-stage retrieval (ISSUE 7 tentpole): inverted-index candidate
+generation + fused re-rank over the gathered rows.
+
+Covers the acceptance points that belong in tier-1 rather than the
+benchmark harness: recall@32 vs the brute-force scan on a
+trained-briefly corpus, tie/duplicate-id handling across the gather
+boundary, bit-identity at candidate_fraction=1.0 (fp32 and int8), the
+engine-config guard rails, and the degradation-ladder fallback under an
+injected posting-corruption fault.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    SAEConfig, SparseCodes, build_index, encode, init_train_state, retrieve,
+    train_step,
+)
+from repro.core.eval import recall_at_n
+from repro.core.inverted_index import build_inverted_index
+from repro.core.retrieval import two_stage_budget, two_stage_retrieve
+from repro.data import clustered_embeddings
+from repro.errors import EngineConfigError
+from repro.optim import AdamConfig
+from repro.serving import GuardedEngine, RetrievalEngine, corrupt_postings
+
+CFG = SAEConfig(d=32, h=128, k=4)
+N, NQ = 512, 8
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A briefly trained SAE + encoded corpus/queries (module-scoped:
+    training dominates this file's runtime)."""
+    corpus = clustered_embeddings(jax.random.PRNGKey(0), N, d=CFG.d)
+    queries = clustered_embeddings(jax.random.PRNGKey(1), NQ, d=CFG.d)
+    state = init_train_state(CFG, jax.random.PRNGKey(2))
+    step = jax.jit(lambda s, b: train_step(s, b, CFG, AdamConfig(lr=3e-3)))
+    for i in range(60):
+        idx = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(3), i), (256,), 0, N)
+        state, _ = step(state, corpus[idx])
+    params = state.params
+    codes = encode(params, corpus, CFG.k)
+    q = encode(params, queries, CFG.k)
+    return params, build_index(codes, params), q, queries
+
+
+def test_recall_at_32_vs_brute_force(trained):
+    """Scanning half the catalog must keep recall@32 vs the exact
+    brute-force scan above the serving floor (the full-size bench gates
+    the same bound at candidate_fraction=0.3 via check_bench)."""
+    _, index, q, _ = trained
+    inv = build_inverted_index(index.codes, cap=N)
+    _, ids = two_stage_retrieve(index, inv, q, 32, use_fused=False,
+                                candidate_fraction=0.5)
+    _, ref = retrieve(index, q, 32, use_kernel=False)
+    assert recall_at_n(ids, ref) >= 0.95
+
+
+def test_fraction_one_is_bit_identical_to_single_stage(trained):
+    _, index, q, _ = trained
+    inv = build_inverted_index(index.codes, cap=N)
+    v2, i2 = two_stage_retrieve(index, inv, q, 10, use_fused=False,
+                                candidate_fraction=1.0)
+    v1, i1 = retrieve(index, q, 10, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+
+
+def test_quantized_int8_two_stage_matches_single_stage(trained):
+    """The gathered sub-index stays quantized: at candidate_fraction=1.0
+    the int8-scored two-stage answer is bit-identical to the int8-scored
+    single-stage engine."""
+    params, index, q, _ = trained
+    qindex = build_index(index.codes, params, quantize=True)
+    two = RetrievalEngine(params, qindex, precision="int8",
+                          stage="two_stage", candidate_fraction=1.0)
+    one = RetrievalEngine(params, qindex, precision="int8")
+    v2, i2 = two.retrieve_codes(q, 10)
+    v1, i1 = one.retrieve_codes(q, 10)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+
+
+def test_duplicate_rows_tie_break_across_gather_boundary():
+    """Exact-duplicate catalog rows score identically; ``lax.top_k``
+    breaks the tie toward the lowest id.  Because candidate rows are
+    sorted ascending before the gather, the two-stage sub-index position
+    order equals global-id order, so the tie resolves to the same ids as
+    the single-stage scan even when the budget < N re-rank only sees a
+    subset of the catalog."""
+    n, h, k = 300, 8, 2
+    idx = np.zeros((n, k), dtype=np.int32)
+    val = np.zeros((n, k), dtype=np.float32)
+    idx[:20] = [0, 1]            # 20 exact duplicates, all tied at the top
+    val[:20] = [1.0, 1.0]
+    idx[20:] = [6, 7]            # disjoint latents: score exactly 0
+    val[20:] = [0.3, 0.2]
+    codes = SparseCodes(values=jnp.asarray(val), indices=jnp.asarray(idx),
+                        dim=h)
+    index = build_index(codes)
+    q = SparseCodes(values=jnp.asarray([[1.0, 1.0]], dtype=jnp.float32),
+                    indices=jnp.asarray([[0, 1]], dtype=jnp.int32), dim=h)
+    inv = build_inverted_index(codes, cap=n)
+    # BLOCK_N rounding makes the budget 256 < N=300: a genuine sub-scan
+    assert two_stage_budget(n, 10, 0.1) < n
+    v2, i2 = two_stage_retrieve(index, inv, q, 10, use_fused=False,
+                                candidate_fraction=0.1)
+    v1, i1 = retrieve(index, q, 10, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+    assert np.asarray(i2)[0, :10].tolist() == list(range(10))
+
+
+def test_engine_config_guard_rails(trained):
+    params, index, _, _ = trained
+    with pytest.raises(EngineConfigError, match="stage"):
+        RetrievalEngine(params, index, stage="three_stage")
+    with pytest.raises(EngineConfigError, match="mode='sparse'"):
+        RetrievalEngine(params, index, mode="reconstructed",
+                        stage="two_stage")
+    with pytest.raises(EngineConfigError, match="candidate_fraction"):
+        RetrievalEngine(params, index, stage="two_stage",
+                        candidate_fraction=0.0)
+
+
+def test_engine_two_stage_matches_core_function(trained):
+    params, index, q, queries = trained
+    eng = RetrievalEngine(params, index, stage="two_stage",
+                          candidate_fraction=0.5)
+    v_e, i_e = eng.retrieve_codes(q, 10)
+    v_c, i_c = two_stage_retrieve(index, eng.inverted, q, 10,
+                                  use_fused=eng.use_fused,
+                                  candidate_fraction=0.5)
+    np.testing.assert_array_equal(np.asarray(v_e), np.asarray(v_c))
+    np.testing.assert_array_equal(np.asarray(i_e), np.asarray(i_c))
+    # dense entry point: encode folded in front of the same path
+    v_d, i_d = eng.retrieve_dense(queries, 10)
+    assert v_d.shape == (NQ, 10) and i_d.shape == (NQ, 10)
+
+
+def test_guard_falls_back_on_corrupt_postings(trained):
+    """Posting corruption trips the stage-1 integrity check; the ladder
+    steps down to the single-stage rung and the answer is bit-identical
+    to a healthy single-stage engine."""
+    params, index, _, queries = trained
+    eng = RetrievalEngine(params, index, stage="two_stage",
+                          candidate_fraction=0.5, use_kernel=False)
+    guard = GuardedEngine(eng)
+    assert guard.ladder[0].startswith("two-stage-")
+    # healthy: served by the primary two-stage rung
+    _, _, status = guard.retrieve_dense(queries, 8)
+    assert status.step == 0 and not status.degraded
+    eng.inverted = corrupt_postings(eng.inverted)
+    v, ids, status = guard.retrieve_dense(queries, 8)
+    assert status.step >= 1 and status.degraded
+    assert "postings corrupted" in status.fault
+    single = RetrievalEngine(params, index, use_kernel=False)
+    v1, i1 = single.retrieve_dense(queries, 8)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(i1))

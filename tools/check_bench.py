@@ -14,7 +14,10 @@ GATES (exit 1):
     path, shards, n, q, topn — records of different configurations are
     not comparable), any ``recall*`` field may not drop by more than
     ``--recall-tol`` (default 0.02; CPU runs are seeded and
-    deterministic, so a real drop means a serving-path change).
+    deterministic, so a real drop means a serving-path change);
+  * two-stage quality floor — the ``retrieval_two_stage`` row's
+    ``recall_vs_exact`` must be >= 0.95 ABSOLUTE at full benchmark size
+    (baseline-independent; smoke records are exempt).
 
 WARN-ONLY (exit 0):
   * ``us_per_call`` movement in either direction — CPU-runner timing is
@@ -48,7 +51,20 @@ EXTRA_REQUIRED = {
         "faults", "recovered_exact", "degraded", "recall_vs_exact_min",
         "coverage_min",
     },
+    # two-stage serving (ISSUE 7): recall_vs_exact additionally carries an
+    # ABSOLUTE floor at full size (see compare()), on top of the usual
+    # baseline-drop gate every recall* field gets
+    "retrieval_two_stage": {
+        "recall_vs_exact", "scanned_fraction", "candidate_fraction",
+        "quality_n",
+    },
+    "retrieval_inverted_index": {"cap", "scan_frac"},
 }
+
+# absolute quality floor for the two-stage row at full benchmark size
+# (smoke-size records skip it — tiny corpora + a briefly trained SAE make
+# absolute recall noise; the relative baseline gate still applies)
+TWO_STAGE_RECALL_FLOOR = 0.95
 # records are only comparable within an identical configuration
 CONFIG_FIELDS = ("path", "shards", "n", "q", "topn")
 
@@ -72,6 +88,16 @@ def compare(baseline: dict, fresh: dict, recall_tol: float
         missing = (REQUIRED | EXTRA_REQUIRED.get(name, set())) - set(rec)
         if missing:
             failures.append(f"schema: row `{name}` missing {sorted(missing)}")
+
+    ts = fresh.get("retrieval_two_stage")
+    if ts is not None and not ts.get("smoke") \
+            and "recall_vs_exact" in ts \
+            and ts["recall_vs_exact"] < TWO_STAGE_RECALL_FLOOR:
+        failures.append(
+            "two-stage quality floor: `retrieval_two_stage`."
+            f"recall_vs_exact {ts['recall_vs_exact']:.4f} < "
+            f"{TWO_STAGE_RECALL_FLOOR} at full benchmark size"
+        )
 
     gone = sorted(set(baseline) - set(fresh))
     if gone:
