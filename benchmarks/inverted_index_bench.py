@@ -2,8 +2,10 @@
 
 Measures the work reduction (fraction of catalog scanned per query) and
 the recall cost of posting-list capping, vs the paper's exact O(N·k)
-scan — and, at full size, the single-stage vs two-stage N-sweep whose
-crossover docs/BENCHMARKS.md snapshots.
+scan — and the single-stage vs two-stage N-sweep whose crossover
+docs/BENCHMARKS.md snapshots, up to N >= 1M with the ISSUE 8 device
+stage-1 + batched stage-2 path (smoke runs keep a single tiny sweep row
+so CI still exercises the code path).
 
 Since ISSUE 7 this bench is part of the schema-gated BENCH flow: it
 APPENDS one ``retrieval_inverted_index`` row to ``BENCH_retrieval.json``
@@ -27,9 +29,12 @@ from repro.core import (
     top_n, train_step,
 )
 from repro.core.inverted_index import (
-    build_inverted_index, expected_scan_fraction, search_inverted,
+    build_inverted_index, candidate_union, device_candidate_union,
+    expected_scan_fraction, search_inverted,
 )
-from repro.core.retrieval import kernel_path, retrieve, two_stage_retrieve
+from repro.core.retrieval import (
+    kernel_path, retrieve, two_stage_budget, two_stage_retrieve,
+)
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
 
@@ -113,27 +118,61 @@ def main(smoke: bool = False):
     BENCH_JSON.write_text(json.dumps(records, indent=2) + "\n")
     print(f"[bench] appended retrieval_inverted_index to {BENCH_JSON}")
 
-    # ---- N-sweep: single-stage vs two-stage crossover (full size only;
-    # docs/BENCHMARKS.md snapshots this table).  One model serves every
-    # N — corpora are re-encoded, the SAE is not re-trained per size.
-    if not smoke:
-        print("sweep_n,single_us,two_stage_us")
-        for n_sweep in (2048, 8192, 16384, 32768):
-            corpus_s = clustered_embeddings(jax.random.PRNGKey(4), n_sweep,
-                                            d=D)
-            codes_s = encode(params, corpus_s, cfg.k)
-            index_s = build_index(codes_s)
-            inv_s = build_inverted_index(codes_s, cap=serving_cap)
-            single_fn = jax.jit(
-                lambda qc, idx=index_s: retrieve(idx, qc, topn,
-                                                 use_kernel=False))
-            cache = {}
-            two_fn = lambda qc, idx=index_s, iv=inv_s: two_stage_retrieve(  # noqa: E731
-                idx, iv, qc, topn, use_fused=False,
-                candidate_fraction=0.25, cache=cache)
-            us_1 = _timeit(single_fn, q_codes)
-            us_2 = _timeit(two_fn, q_codes)
-            print(f"sweep_{n_sweep},{us_1:.0f},{us_2:.0f}")
+    # ---- N-sweep: single-stage vs two-stage crossover up to N >= 1M
+    # (docs/BENCHMARKS.md snapshots this table).  One model serves every
+    # N — corpora are re-encoded (chunked: the 1M corpus would otherwise
+    # materialize a (N, H) activation transient), the SAE is not
+    # re-trained per size.  Per row:
+    #   single_us   — the exact one-stage scan (chunked jnp)
+    #   two_dev_us  — ISSUE 8 path: device stage-1 union + ONE batched
+    #                 gathered re-rank (no per-query host work at all)
+    #   two_pr7_us  — ISSUE 7 path: host stage-1 + per-query stage-2
+    #                 loop (kept as the parity oracle)
+    #   s1_dev_us / s1_host_us — stage 1 alone, device vs host: the
+    #                 device column must stop scaling with per-query
+    #                 Python work (that is the tentpole's point)
+    # Larger N rows shrink Q and the candidate fraction to keep the
+    # gathered (Q, budget, k) panels ~100 MB, not gigabytes.
+    sweep = ([(2048, 0.4, 8)] if smoke else
+             [(2048, 0.25, 64), (8192, 0.25, 64), (32768, 0.25, 64),
+              (131072, 0.10, 32), (1048576, 0.05, 16)])
+    print("sweep_n,single_us,two_dev_us,two_pr7_us,s1_dev_us,s1_host_us,"
+          "cand_frac,q")
+    for n_sweep, frac_s, q_s in sweep:
+        corpus_s = clustered_embeddings(jax.random.PRNGKey(4), n_sweep, d=D)
+        chunks = [encode(params, corpus_s[i:i + 65536], cfg.k)
+                  for i in range(0, n_sweep, 65536)]
+        codes_s = (chunks[0] if len(chunks) == 1 else type(chunks[0])(
+            values=jnp.concatenate([c.values for c in chunks]),
+            indices=jnp.concatenate([c.indices for c in chunks]),
+            dim=chunks[0].dim))
+        del corpus_s
+        index_s = build_index(codes_s)
+        inv_s = build_inverted_index(codes_s, cap=serving_cap)
+        qc_s = type(q_codes)(values=q_codes.values[:q_s],
+                             indices=q_codes.indices[:q_s], dim=q_codes.dim)
+        budget = two_stage_budget(n_sweep, topn, frac_s)
+        single_fn = jax.jit(
+            lambda qc, idx=index_s: retrieve(idx, qc, topn,
+                                             use_kernel=False))
+        cache_dev, cache_pr7 = {}, {}
+        two_dev = lambda qc, idx=index_s, iv=inv_s: two_stage_retrieve(  # noqa: E731
+            idx, iv, qc, topn, use_fused=False, candidate_fraction=frac_s,
+            cache=cache_dev, stage1="device", stage2="batched")
+        two_pr7 = lambda qc, idx=index_s, iv=inv_s: two_stage_retrieve(  # noqa: E731
+            idx, iv, qc, topn, use_fused=False, candidate_fraction=frac_s,
+            cache=cache_pr7, stage1="host", stage2="per_query")
+        s1_dev = lambda qi, iv=inv_s: device_candidate_union(  # noqa: E731
+            iv, qi, budget)
+        s1_host = lambda qi, iv=inv_s: candidate_union(  # noqa: E731
+            iv, np.asarray(qi), budget)
+        us_1 = _timeit(single_fn, qc_s)
+        us_2d = _timeit(two_dev, qc_s)
+        us_2h = _timeit(two_pr7, qc_s)
+        us_s1d = _timeit(s1_dev, qc_s.indices)
+        us_s1h = _timeit(s1_host, qc_s.indices)
+        print(f"sweep_{n_sweep},{us_1:.0f},{us_2d:.0f},{us_2h:.0f},"
+              f"{us_s1d:.0f},{us_s1h:.0f},{frac_s:g},{q_s}")
     return 0
 
 

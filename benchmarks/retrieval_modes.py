@@ -52,9 +52,11 @@ Rows:
                                   tests/test_benchmarks_smoke.py)
   retrieval_two_stage           — ISSUE 7: the same request served
                                   two-stage (stage 1: inverted-index
-                                  candidate union on host; stage 2: the
-                                  fused re-rank over only the gathered
-                                  candidate rows).  APPROXIMATE by
+                                  candidate union, pinned to the HOST
+                                  NumPy oracle here so the row keeps its
+                                  PR-7 semantics; stage 2: one batched
+                                  fused re-rank over the gathered
+                                  candidate panels).  APPROXIMATE by
                                   design: the record carries
                                   recall_vs_exact (recall@32 vs the
                                   single-stage engine over the same
@@ -63,6 +65,16 @@ Rows:
                                   scanned_fraction (stage 2's candidate
                                   budget / N, < 0.5 at full size) and
                                   candidate_fraction (the knob)
+  retrieval_two_stage_device    — ISSUE 8: the SAME two-stage request
+                                  with stage 1 on device (one jitted
+                                  batched union — no per-query host
+                                  loop).  Asserted BIT-identical to the
+                                  host-stage-1 row end to end, and its
+                                  record carries the same quality
+                                  fields under the same >= 0.95 floor;
+                                  tools/check_bench.py additionally
+                                  FAILS if its recall_vs_exact diverges
+                                  from the host row's
 
 Every BENCH_retrieval.json record carries the backend path
 ("fused-kernel" | "jnp-chunked") and the shard count, so the perf
@@ -177,8 +189,16 @@ def main(smoke: bool = False):
     cand_frac = 0.4 if smoke else 0.3
     ts_engine = RetrievalEngine(params, index, mode="sparse",
                                 stage="two_stage",
-                                candidate_fraction=cand_frac)
+                                candidate_fraction=cand_frac,
+                                stage1="host")
     ts_fn = lambda q: ts_engine.retrieve_dense(q, topn)  # noqa: E731
+    # device stage 1 (ISSUE 8): the same request with the candidate union
+    # as one jitted batched pass — bit-identical output, no host loop
+    ts_dev_engine = RetrievalEngine(params, index, mode="sparse",
+                                    stage="two_stage",
+                                    candidate_fraction=cand_frac,
+                                    stage1="device")
+    ts_dev_fn = lambda q: ts_dev_engine.retrieve_dense(q, topn)  # noqa: E731
 
     records = []
     reps = 5 if smoke else 20  # shared-box timing noise: more reps at full size
@@ -192,7 +212,8 @@ def main(smoke: bool = False):
                              ("retrieval_e2e_dense", e2e_fn, 1),
                              ("retrieval_sparse_quantized", quant_fn, 1),
                              ("retrieval_sparse_quantized_mxu", mxu_fn, 1),
-                             ("retrieval_two_stage", ts_fn, 1)]:
+                             ("retrieval_two_stage", ts_fn, 1),
+                             ("retrieval_two_stage_device", ts_dev_fn, 1)]:
         us = _timeit(fn, queries, reps=reps)
         r = rec(fn(queries)[1])
         print(f"{name},{us:.0f},recall@{topn}={r:.4f}")
@@ -297,6 +318,33 @@ def main(smoke: bool = False):
         assert scanned < 0.5, (
             f"two-stage scanned fraction {scanned:.3f} >= 0.5 at N={n} — "
             "the candidate budget defeats the sub-linear point")
+
+    # device stage 1 must be BIT-identical to the host-stage-1 request
+    # end to end (the device union is a drop-in, not an approximation of
+    # an approximation) — so its record inherits the host row's quality
+    # verbatim, and check_bench fails any host/device recall divergence
+    v_th, i_th = ts_fn(queries)
+    v_td, i_td = ts_dev_fn(queries)
+    assert (np.asarray(i_td) == np.asarray(i_th)).all(), \
+        "device-stage-1 ids differ from host stage 1"
+    assert (np.asarray(v_td) == np.asarray(v_th)).all(), \
+        "device-stage-1 scores differ from host stage 1"
+    print("two_stage_device_vs_host_bit_identical,0,1")
+    ts_dev32 = ts_dev_engine.retrieve_dense(queries, 32)
+    ts_dev_quality = retrieval_quality(ts_dev32, exact32_fp)
+    by_name["retrieval_two_stage_device"].update(
+        recall_vs_exact=round(ts_dev_quality["recall"], 4),
+        scanned_fraction=round(scanned, 4),
+        candidate_fraction=cand_frac,
+        quality_n=ts_dev_quality["n"],
+    )
+    assert ts_dev_quality["recall"] == ts_quality["recall"], (
+        "device two-stage recall diverged from host two-stage: "
+        f"{ts_dev_quality['recall']:.4f} != {ts_quality['recall']:.4f}")
+    if not smoke:
+        assert ts_dev_quality["recall"] >= 0.95, (
+            f"device two-stage recall@32 {ts_dev_quality['recall']:.4f} "
+            f"< 0.95 at N={n}, Q={q_count}, cand_frac={cand_frac}")
 
     # kernel-trick exactness at benchmark scale
     q_codes = encode(params, queries, K)

@@ -18,12 +18,15 @@ scan is measured in benchmarks/inverted_index_bench.py.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import zlib
+from functools import partial
+from typing import NamedTuple, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantized_codes import codes_checksum, content_checksum
 from repro.core.retrieval import top_n
 from repro.core.types import SparseCodes
 from repro.errors import IndexIntegrityError, InvalidCodesError
@@ -33,10 +36,64 @@ class InvertedIndex(NamedTuple):
     postings: jax.Array      # (h, cap) int32 candidate ids, -1 padded
     codes: SparseCodes       # the full codes (for scoring gathered ids)
     norms: jax.Array         # (N,) ‖s_c‖
+    # build-time content CRC over postings + codes + norms (same scheme as
+    # ``core.retrieval.index_checksum``); ``verify_inverted_index``
+    # recomputes and compares it so corrupted postings are a typed STARTUP
+    # error, not a first-request one.  None for hand-built instances.
+    checksum: Optional[int] = None
 
     @property
     def cap(self) -> int:
         return self.postings.shape[1]
+
+
+def inverted_index_checksum(inv: InvertedIndex) -> Optional[int]:
+    """Recompute the content CRC of an inverted index (postings + codes +
+    norms).  Pure function of array content — independent of the stored
+    ``checksum`` field — so ``verify_inverted_index`` can diff stored vs
+    actual.  ``None`` when the arrays are abstract tracers (integrity is a
+    host-side build/startup concern, never part of a traced computation)."""
+    base = codes_checksum(inv.codes)
+    if base is None:
+        return None
+    extra = content_checksum([
+        ("postings", inv.postings),
+        ("norms", inv.norms),
+    ])
+    if extra is None:
+        return None
+    return zlib.crc32(f"{base:08x}:{extra:08x}".encode())
+
+
+def verify_inverted_index(inv: InvertedIndex, *, require: bool = True) -> bool:
+    """Check the inverted index's content against its build-time checksum.
+
+    Mirrors ``core.retrieval.verify_index``: returns True on a match,
+    raises ``IndexIntegrityError`` on a mismatch, and treats a missing
+    checksum as an error when ``require=True`` (the startup self-check's
+    default) or as False when ``require=False``."""
+    if inv.checksum is None:
+        if require:
+            raise IndexIntegrityError(
+                "InvertedIndex has no stored checksum — hand-constructed "
+                "or built under tracing; rebuild with "
+                "build_inverted_index(...) to make integrity verifiable"
+            )
+        return False
+    got = inverted_index_checksum(inv)
+    if got is None:
+        raise IndexIntegrityError(
+            "InvertedIndex content is not concrete (traced arrays); "
+            "integrity can only be verified on host-resident bytes"
+        )
+    if got != inv.checksum:
+        raise IndexIntegrityError(
+            f"InvertedIndex content checksum mismatch: stored "
+            f"0x{inv.checksum:08x}, recomputed 0x{got:08x} "
+            f"(h={inv.postings.shape[0]}, cap={inv.cap}) — postings "
+            "corrupted since build; refusing to serve stage 1 from them"
+        )
+    return True
 
 
 def build_inverted_index(codes: SparseCodes, cap: int = 2048) -> InvertedIndex:
@@ -78,8 +135,9 @@ def build_inverted_index(codes: SparseCodes, cap: int = 2048) -> InvertedIndex:
     postings = np.full((h, cap), -1, dtype=np.int32)
     postings[sorted_lat[keep], within[keep]] = sorted_row[keep]
     norms = jnp.linalg.norm(codes.values, axis=-1)
-    return InvertedIndex(postings=jnp.asarray(postings), codes=codes,
-                         norms=norms)
+    inv = InvertedIndex(postings=jnp.asarray(postings), codes=codes,
+                        norms=norms)
+    return inv._replace(checksum=inverted_index_checksum(inv))
 
 
 def search_inverted(
@@ -243,9 +301,22 @@ def candidate_union(
     resolve to the lowest global id, exactly matching the single-stage
     path's tie semantics.
 
+    Filler rule (pinned — the device path must agree bit-for-bit): the
+    ``need`` fillers are the first ``need`` NON-MEMBER catalog ids in
+    ascending order over the full ``[0, N)`` range.  Implementation note:
+    the candidate pool only materializes ``arange(budget)`` because the
+    rule provably never reaches past it — the kept set holds
+    ``budget − need`` ids, so ``[0, budget)`` always contains at least
+    ``need`` non-members, and the ``need``-th smallest non-member of the
+    whole catalog is therefore < ``budget``.  The regression test
+    ``tests/test_two_stage_device.py::test_filler_rule_is_first_non_members_over_full_catalog``
+    pins the equivalence against a brute-force setdiff over ``[0, N)``.
+
     Raises ``IndexIntegrityError`` if the posting matrix holds ids
     outside [−1, N) — the signature of postings corruption, and the
-    guard ladder's cue to fall back to single-stage retrieval.
+    guard ladder's cue to fall back to single-stage retrieval.  The
+    integrity check runs ONCE over the whole gathered (Q, k, cap) matrix,
+    not per query row.
 
     Returns (Q, budget) int32, every entry a valid catalog row, each row
     sorted ascending with no duplicates.  Requires budget ≤ N.
@@ -259,24 +330,141 @@ def candidate_union(
     if qi.ndim == 1:
         qi = qi[None]
     postings = np.asarray(index.postings)
+    qp = postings[qi]                                      # (Q, k, cap)
+    _check_posting_ids(qp, n_items)
     out = np.empty((qi.shape[0], budget), dtype=np.int32)
     for r in range(qi.shape[0]):
-        cand = postings[qi[r]].reshape(-1)                 # (k·cap,)
-        if ((cand < -1) | (cand >= n_items)).any():
-            bad = cand[(cand < -1) | (cand >= n_items)][0]
-            raise IndexIntegrityError(
-                f"inverted index posting id {int(bad)} outside [-1, "
-                f"{n_items}) — postings corrupted since build"
-            )
+        cand = qp[r].reshape(-1)                           # (k·cap,)
         valid = cand[cand >= 0]
         # first-occurrence dedup preserving impact/concatenation order
         _, first = np.unique(valid, return_index=True)
         uniq = valid[np.sort(first)][:budget]
         need = budget - uniq.shape[0]
         if need:
+            # first `need` non-members ascending (bounded pool, see above)
             fillers = np.setdiff1d(
                 np.arange(budget, dtype=np.int32), uniq
             )[:need]
             uniq = np.concatenate([uniq, fillers])
         out[r] = np.sort(uniq)
     return out
+
+
+def _check_posting_ids(gathered: np.ndarray, n_items: int) -> None:
+    """One vectorized integrity check over a whole gathered posting
+    matrix (any shape).  Raises ``IndexIntegrityError`` naming the first
+    out-of-range id in row-major order — the same id the former
+    per-query rescan reported."""
+    flat = gathered.reshape(-1)
+    bad_mask = (flat < -1) | (flat >= n_items)
+    if bad_mask.any():
+        bad = flat[int(np.argmax(bad_mask))]
+        raise IndexIntegrityError(
+            f"inverted index posting id {int(bad)} outside [-1, "
+            f"{n_items}) — postings corrupted since build"
+        )
+
+
+@partial(jax.jit, static_argnames=("budget", "n_items"))
+def _device_union(postings, qi, *, budget: int, n_items: int):
+    """Jitted core of ``device_candidate_union``: one batched pass over
+    the gathered (Q, k, cap) posting rows.  Returns (rows, any_bad,
+    bad_val); the host wrapper turns the corruption flag into the typed
+    error (control flow can't live inside jit)."""
+    qp = postings[qi]                                      # (Q, k, cap)
+    flat = qp.reshape(-1)
+    bad_mask = (flat < -1) | (flat >= n_items)
+    any_bad = jnp.any(bad_mask)
+    bad_val = flat[jnp.argmax(bad_mask)]                   # first, row-major
+
+    def one(cand):                                         # (u,) = (k·cap,)
+        u = cand.shape[0]
+        # ids keyed with padding pushed past every real id; the stable
+        # argsort groups duplicates while remembering original positions
+        key = jnp.where(cand >= 0, cand, n_items)
+        order = jnp.argsort(key)                           # stable
+        sk = key[order]
+        # group leaders: the first slot of each distinct real id.  With a
+        # stable sort the leader's `order` entry is the id's SMALLEST
+        # original position — i.e. its first occurrence in the impact-
+        # ordered concatenation, exactly the host oracle's dedup rule.
+        first = jnp.concatenate([
+            sk[:1] < n_items,
+            (sk[1:] != sk[:-1]) & (sk[1:] < n_items),
+        ])
+        lead_pos = jnp.where(first, order, u)
+        # budget smallest first-occurrence positions win the truncation
+        # race (higher-impact entries appear earlier in the concat); pad
+        # so budget > u still yields a (budget,) selection
+        lead_pad = jnp.concatenate(
+            [lead_pos, jnp.full((budget,), u, lead_pos.dtype)]
+        )
+        sel = jnp.sort(lead_pad)[:budget]
+        kept = jnp.where(
+            sel < u, cand[jnp.minimum(sel, u - 1)], n_items
+        ).astype(jnp.int32)
+        kept_sorted = jnp.sort(kept)          # real ids asc, sentinels last
+        n_real = jnp.sum(sel < u)
+        need = budget - n_real
+        # fillers: first non-members ascending.  The pool is
+        # arange(budget) — provably sufficient, see candidate_union's
+        # filler-rule note (the host oracle uses the identical pool).
+        pool = jnp.arange(budget, dtype=jnp.int32)
+        pos = jnp.searchsorted(kept_sorted, pool)
+        member = (pos < budget) & (
+            kept_sorted[jnp.minimum(pos, budget - 1)] == pool
+        )
+        rank = jnp.cumsum(~member) - 1                     # among non-members
+        filler = jnp.where(
+            ~member & (rank < need), pool, jnp.int32(n_items)
+        )
+        # budget real ids total; sentinels sort past them and fall off
+        return jnp.sort(jnp.concatenate([kept_sorted, filler]))[:budget]
+
+    rows = jax.vmap(one)(qp.reshape(qp.shape[0], -1))
+    return rows, any_bad, bad_val
+
+
+def device_candidate_union(
+    index: InvertedIndex, q_indices, budget: int
+) -> jax.Array:
+    """Stage 1 on device: the batched, jitted twin of ``candidate_union``.
+
+    One vmapped pass gathers the (Q, k, cap) posting rows, stable-sorts
+    each query's concatenated lists, marks first occurrences (so
+    higher-impact entries win the truncation race exactly as the host
+    oracle's ``np.unique``-based dedup does), selects the ``budget``
+    earliest-first-occurrence unique ids, fills shortfalls with the first
+    non-member catalog ids ascending, and emits the same ascending-sorted
+    (Q, budget) int32 contract — BIT-IDENTICAL to ``candidate_union``
+    (rows, order, fillers; pinned by tests/test_two_stage_device.py).
+    The host version stays as the parity oracle and the guard ladder's
+    fallback rung.
+
+    No per-query Python work: stage-1 cost is one device sort over k·cap
+    entries per query, batched across Q — the host loop's O(Q) ·
+    (unique + setdiff) serialization is gone, which is what lets the
+    N-sweep reach 1M+ catalogs (benchmarks/inverted_index_bench.py).
+
+    Raises the same typed errors as the host path: ``ValueError`` when
+    ``budget`` exceeds the catalog and ``IndexIntegrityError`` (same
+    message, naming the first bad id in row-major order) when the
+    gathered postings hold ids outside [−1, N).
+    """
+    n_items = index.codes.n
+    if budget > n_items:
+        raise ValueError(
+            f"candidate budget {budget} exceeds catalog size {n_items}"
+        )
+    qi = jnp.asarray(q_indices)
+    if qi.ndim == 1:
+        qi = qi[None]
+    rows, any_bad, bad_val = _device_union(
+        index.postings, qi, budget=budget, n_items=n_items
+    )
+    if bool(any_bad):
+        raise IndexIntegrityError(
+            f"inverted index posting id {int(bad_val)} outside [-1, "
+            f"{n_items}) — postings corrupted since build"
+        )
+    return rows

@@ -372,6 +372,24 @@ def two_stage_budget(n_items: int, n: int, candidate_fraction: float) -> int:
     return min(n_items, max(budget, n))
 
 
+STAGE1_CHOICES = ("auto", "device", "host")
+
+
+def _gather_candidate_panels(index: Index, rows_b: jax.Array, inv_norms):
+    """Batched stage-2 gather: per-query (budget,) row tables -> per-query
+    candidate panels with a leading Q axis, in the index's SERVING dtypes
+    (a ``QuantizedIndex`` stays int8/int16 + scales — the gathered kernels
+    dequantize per brick in VMEM, the f32 copy never exists).  Returns
+    (cand_tuple, (Q, budget) gathered inv norms).  jit-safe."""
+    take = lambda a: jnp.take(a, rows_b, axis=0)
+    codes = index.codes
+    if isinstance(codes, QuantizedCodes):
+        cand = (take(codes.q_values), take(codes.indices), take(codes.scales))
+    else:
+        cand = (take(codes.values), take(codes.indices))
+    return cand, take(inv_norms)
+
+
 def two_stage_retrieve(
     index: Index,
     inv,
@@ -382,25 +400,39 @@ def two_stage_retrieve(
     precision: str = "exact",
     candidate_fraction: float = 0.25,
     cache: Optional[dict] = None,
+    stage1: str = "auto",
+    stage2: str = "batched",
 ) -> tuple[jax.Array, jax.Array]:
     """Two-stage sparse retrieval: inverted-index candidate generation,
     then the fused re-rank over only the gathered candidate rows.
 
-    Stage 1 (host): union the query's k posting lists from ``inv`` (an
+    Stage 1: union the query's k posting lists from ``inv`` (an
     ``InvertedIndex`` built over this index's codes), dedup in impact
     order, truncate/pad to a static budget of
     ``two_stage_budget(N, n, candidate_fraction)`` real catalog rows,
-    sorted ascending per query (``core.inverted_index.candidate_union``).
+    sorted ascending per query.  ``stage1`` picks the implementation:
+    ``"device"`` (and ``"auto"``, its alias) runs the batched jitted
+    union (``core.inverted_index.device_candidate_union`` — one vmapped
+    sort per call, no per-query Python); ``"host"`` runs the numpy
+    oracle (``candidate_union``).  The two are BIT-IDENTICAL (rows,
+    order, fillers) — the host path survives as the parity oracle and
+    the guard ladder's fallback rung.
 
-    Stage 2 (jit, per query): gather the sub-index at those rows
-    (``take_index_rows`` — quantized stays quantized), run the ordinary
-    streaming retrieve (``serving.engine.retrieve_prepped``, so the fused
-    sparse-q / quantized / int8-MXU generations are reused unchanged,
-    including the n>matches (−inf, −1) padding contract), and map ids
-    back through the gather.  Because candidate rows are sorted
-    ascending, sub-index position order equals global-id order and
-    ``lax.top_k`` ties resolve to the lowest global id — the single-stage
-    tie rule.
+    Stage 2 (``stage2="batched"``, the default): gather every query's
+    candidate panel in one batched device gather — (Q, budget, k) values/
+    indices (+ scales) and (Q, budget) reciprocal norms, quantized codes
+    staying quantized — and run ONE gather-aware fused re-rank
+    (generation 6: ``fused_retrieve_gathered_*`` /
+    ``retrieve_gathered_*_ref``, dispatched by
+    ``serving.engine.select_gathered_retrieve_fn``) over the whole panel.
+    ``stage2="per_query"`` keeps the PR 7 path — a Python loop of
+    per-query ``take_index_rows`` + ``retrieve_prepped`` jits — as the
+    parity oracle; the batched panel is BIT-IDENTICAL to it (scores,
+    ids, ties, the (−inf, −1) padding contract) across every mode ×
+    precision.  Both map local candidate positions back through the
+    row table.  Because candidate rows are sorted ascending, panel
+    position order equals global-id order and ``lax.top_k`` ties
+    resolve to the lowest global id — the single-stage tie rule.
 
     APPROXIMATE in general: an item outside every queried posting list
     (posting-cap truncation, or budget < |union|) can't be returned.
@@ -413,17 +445,31 @@ def two_stage_retrieve(
 
     O(budget·k) per query instead of O(N·k) — the catalog-scaling path.
     Cost is ``budget/N`` of a full scan (= the reported scanned
-    fraction), plus the host-side stage 1.
+    fraction); with device stage 1 + batched stage 2 the whole request
+    is two device dispatches, no per-query host work — what lets the
+    N-sweep reach 1M+ catalogs (benchmarks/inverted_index_bench.py).
 
     ``cache`` (dict, caller-owned — the serving engine passes its own)
-    memoizes the stage-2 jit by (n, budget) so repeated calls at one
-    shape compile once.  Sparse mode only (q are (Q?, k) query codes).
+    memoizes the stage-2 jit by (stage2, n, budget, ...) so repeated
+    calls at one shape compile once.  Sparse mode only (q are (Q?, k)
+    query codes).
     """
-    from repro.core.inverted_index import candidate_union
+    from repro.core.inverted_index import (
+        candidate_union, device_candidate_union,
+    )
     from repro.serving.engine import (
         PreppedQuery, check_precision, retrieve_prepped,
+        select_gathered_retrieve_fn,
     )
 
+    if stage1 not in STAGE1_CHOICES:
+        raise ValueError(
+            f"unknown stage1 {stage1!r} (expected one of {STAGE1_CHOICES})"
+        )
+    if stage2 not in ("batched", "per_query"):
+        raise ValueError(
+            f"unknown stage2 {stage2!r} (expected 'batched' or 'per_query')"
+        )
     check_precision(index, precision)
     n_items = index.codes.n
     budget = two_stage_budget(n_items, n, candidate_fraction)
@@ -431,10 +477,54 @@ def two_stage_retrieve(
     squeeze = q.values.ndim == 1
     qv = q.values[None] if squeeze else q.values           # (Q, k)
     qi = q.indices[None] if squeeze else q.indices
-    rows = candidate_union(inv, np.asarray(qi), budget)    # (Q, budget)
+    if stage1 == "host":
+        rows_b = jnp.asarray(candidate_union(inv, np.asarray(qi), budget))
+    else:
+        rows_b = device_candidate_union(inv, qi, budget)   # (Q, budget)
 
     if cache is None:
         cache = {}
+
+    if stage2 == "batched":
+        key = ("batched", n, budget, use_fused, precision)
+        fn = cache.get(key)
+        if fn is None:
+            quantized = isinstance(index.codes, QuantizedCodes)
+            g_fn = select_gathered_retrieve_fn(
+                quantized=quantized,
+                int8_scoring=precision == "int8",
+                use_fused=use_fused,
+            )
+            inv_norms = index.inv_sparse_norms
+            if inv_norms is None:
+                inv_norms = 1.0 / jnp.maximum(index.sparse_norms, NORM_EPS)
+
+            @jax.jit
+            def fn(rows_all, qv_all, qi_all):
+                cand, inv_g = _gather_candidate_panels(
+                    index, rows_all, inv_norms
+                )
+                vals, ids = g_fn(
+                    *cand, inv_g, qv_all, qi_all, index.codes.dim, n=n
+                )
+                norm = jnp.linalg.norm(qv_all, axis=-1)
+                scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
+                # map panel positions back to global ids, preserving the
+                # padding contract: id −1 stays −1
+                gids = jnp.where(
+                    ids >= 0,
+                    jnp.take_along_axis(
+                        rows_all, jnp.maximum(ids, 0), axis=1
+                    ),
+                    -1,
+                )
+                return scores, gids
+
+            cache[key] = fn
+
+        scores, ids = fn(rows_b, qv, qi)
+        return (scores[0], ids[0]) if squeeze else (scores, ids)
+
     key = (n, budget, use_fused, precision)
     fn = cache.get(key)
     if fn is None:
@@ -455,6 +545,7 @@ def two_stage_retrieve(
 
         cache[key] = fn
 
+    rows = np.asarray(rows_b)
     outs = [fn(jnp.asarray(rows[r]), qv[r], qi[r]) for r in range(qv.shape[0])]
     scores = jnp.stack([s for s, _ in outs])
     ids = jnp.stack([g for _, g in outs])

@@ -107,6 +107,31 @@ VMEM budget per grid step (f32):
   query-panel *input* block for a same-size (BLOCK_Q, h) scratch plus two
   (BLOCK_Q, kq) code tiles — net VMEM unchanged to first order.
 
+Generation 6 — ``fused_retrieve_gathered_*_pallas`` (gather-aware re-rank):
+  * The batched two-stage stage 2.  Candidate arrays carry a leading query
+    axis — values/indices (Q, B, k) tiles, inv_norms/scales (Q, B) — i.e.
+    each query streams ITS OWN pre-gathered candidate panel (the rows its
+    stage-1 union selected), and the returned ids are candidate POSITIONS
+    in [0, B), local to each query's panel.  Block specs tile both axes:
+    (BLOCK_Q, BLOCK_N, k) candidate bricks, (BLOCK_Q, BLOCK_N) norm/scale
+    tiles, grid (Q/BLOCK_Q, B/BLOCK_N) with the candidate axis innermost
+    as ever.
+  * Scoring swaps the shared-column gather for a per-row one
+    (``_score_tile_gathered``): sparse column j's index slab (BLOCK_Q,
+    BLOCK_N) addresses each query row's own panel lanes — still one
+    tpu.dynamic_gather per k round, same FMA count.  The epilogue
+    (``_mask_fold_merge_gathered``) folds a per-(query, candidate) norm
+    tile instead of a broadcast norm column; merge sweep, padding masks,
+    whole-tile skip and tie semantics are generation 2's unchanged.
+  * Each query row's arithmetic is op-for-op the per-query generation on
+    its gathered sub-arrays, so batched stage 2 is bit-identical — scores,
+    ids, ties — to Q independent per-query fused calls (the PR 7 path),
+    and to the gathered chunked-jnp refs under the usual generation rules
+    (mxu exactly, f32 to rounding).
+  * Three variants mirror the two-stage-eligible modes: fp32 sparse-q,
+    quantized sparse-q, quantized-mxu sparse-q (two-stage is sparse-mode
+    only — the query side always arrives as codes).
+
 Lowering note: the per-column gather lowers to Mosaic's dynamic-gather on
 the lane dimension.  The select-max-and-mask sweep uses only max / min /
 where / broadcasted_iota — no in-kernel sort or top_k primitive needed.
@@ -716,6 +741,332 @@ def fused_retrieve_quantized_mxu_sparse_q_pallas(
             pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
             pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
             pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, h), jnp.int8),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_values, indices, scales, inv_norms,
+      query_values.astype(jnp.float32), query_indices)
+    return out_v, out_i
+
+
+# --------------------------------------------------------------------------
+# Generation 6: gather-aware re-rank (batched two-stage stage 2)
+# --------------------------------------------------------------------------
+
+def _score_tile_gathered(vals, idx, q_panel):
+    """(BLOCK_Q, BLOCK_N) scores from per-query candidate bricks.
+
+    vals/idx: (BLOCK_Q, BLOCK_N, k); q_panel: (BLOCK_Q, h).  Sparse column
+    j's (BLOCK_Q, BLOCK_N) index slab gathers each query row's OWN panel
+    lanes — the gathered twin of ``_score_tile``, same k-round FMA order,
+    so each query row is bit-identical to the per-query kernel on its
+    gathered sub-tile.
+    """
+    bq, bn, k = vals.shape
+
+    def body(j, acc):
+        col = jax.lax.dynamic_slice_in_dim(idx, j, 1, axis=2)      # (BQ, BN, 1)
+        vcol = jax.lax.dynamic_slice_in_dim(vals, j, 1, axis=2)    # (BQ, BN, 1)
+        gathered = jnp.take_along_axis(q_panel, col[..., 0], axis=1)
+        return acc + gathered * vcol[..., 0]                       # (BQ, BN)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((bq, bn), jnp.float32))
+
+
+def _mask_fold_merge_gathered(scores, inv, nb, out_v_ref, out_i_ref, *,
+                              n, n_valid, block_n):
+    """Generation-2 epilogue with a per-(query, candidate) rescale tile.
+
+    ``inv`` is (BLOCK_Q, BLOCK_N) — each query row folds its own
+    candidates' reciprocal norms (× dequant scales for the int8 path)
+    instead of a shared broadcast column.  Padding masks against the
+    LOCAL candidate position (ids are positions in [0, B), not catalog
+    rows); merge sweep and whole-tile skip unchanged.
+    """
+    scores = scores * inv                                          # fold 1/‖c‖
+    bq, bn = scores.shape
+    ids = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    scores = jnp.where(ids < n_valid, scores, _NEG_INF)            # mask padding
+
+    cur_min = out_v_ref[:, pl.ds(n - 1, 1)]                        # n-th best
+
+    @pl.when(jnp.any(scores > cur_min))
+    def _merge():
+        _merge_top_n(
+            out_v_ref[...], out_i_ref[...], scores, ids,
+            out_v_ref, out_i_ref, n,
+        )
+
+
+def _make_retrieve_gathered_sparse_q_kernel(
+    n: int, n_valid: int, block_n: int, h: int
+):
+    def kernel(vals_ref, idx_ref, inv_ref, qv_ref, qi_ref,
+               out_v_ref, out_i_ref, panel_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            panel_ref[...] = _densify_panel(qv_ref[...], qi_ref[...], h)
+
+        scores = _score_tile_gathered(
+            vals_ref[...], idx_ref[...], panel_ref[...]
+        )
+        _mask_fold_merge_gathered(scores, inv_ref[...], nb,
+                                  out_v_ref, out_i_ref,
+                                  n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "n", "n_valid", "interpret", "block_n", "block_q"),
+)
+def fused_retrieve_gathered_sparse_q_pallas(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q_values: jax.Array,
+    q_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered sparse-query fused score+select (generation 6, fp32).
+
+    values (Q, B, k) f32 per-query candidate panels, indices (Q, B, k)
+    i32, inv_norms (Q, B) f32, q_values/q_indices (Q, kq) sparse query
+    codes over [0, h).  B % block_n == 0, Q % block_q == 0 (ops.py pads);
+    ``n_valid`` is the true per-query candidate count before padding.
+    Returns (Q, n) best (norm-folded scores, LOCAL candidate positions in
+    [0, B)).  Bit-identical per query to ``fused_retrieve_sparse_q_pallas``
+    over the gathered sub-arrays.
+    """
+    nq, B, k = values.shape
+    grid = (nq // block_q, B // block_n)  # candidate axis innermost
+    kq = q_values.shape[1]
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_gathered_sparse_q_kernel(n, n_valid, block_n, h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n, k), lambda qi, i: (qi, i, 0)),
+            pl.BlockSpec((block_q, block_n, k), lambda qi, i: (qi, i, 0)),
+            pl.BlockSpec((block_q, block_n), lambda qi, i: (qi, i)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
+        interpret=interpret,
+    )(values, indices, inv_norms,
+      q_values.astype(jnp.float32), q_indices)
+    return out_v, out_i
+
+
+def _dequant_tile_gathered(q_vals, idx, scales):
+    """Quantized (BLOCK_Q, BLOCK_N, k) brick -> (f32 values, i32 indices).
+
+    Same two dequant ops per element as ``_dequant_tile`` with the scale
+    column now a per-(query, candidate) (BLOCK_Q, BLOCK_N) tile.
+    """
+    return q_vals.astype(jnp.float32) * scales[..., None], _widen_idx(idx)
+
+
+def _make_retrieve_gathered_quantized_sparse_q_kernel(
+    n: int, n_valid: int, block_n: int, h: int
+):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, qv_ref, qi_ref,
+               out_v_ref, out_i_ref, panel_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            panel_ref[...] = _densify_panel(qv_ref[...], qi_ref[...], h)
+
+        vals, idx = _dequant_tile_gathered(
+            qvals_ref[...], idx_ref[...], scale_ref[...]
+        )
+        scores = _score_tile_gathered(vals, idx, panel_ref[...])
+        _mask_fold_merge_gathered(scores, inv_ref[...], nb,
+                                  out_v_ref, out_i_ref,
+                                  n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "n", "n_valid", "interpret", "block_n", "block_q"),
+)
+def fused_retrieve_gathered_quantized_sparse_q_pallas(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered quantized × sparse-query fused score+select (generation 6).
+
+    q_values (Q, B, k) int8, indices (Q, B, k) int16/int32, scales and
+    inv_norms (Q, B) f32, query codes (Q, kq).  The per-query candidate
+    panels stream in their quantized storage dtypes and dequantize per
+    brick in VMEM.  Bit-identical per query to
+    ``fused_retrieve_quantized_sparse_q_pallas`` over the gathered
+    sub-arrays.
+    """
+    nq, B, k = q_values.shape
+    grid = (nq // block_q, B // block_n)  # candidate axis innermost
+    kq = query_values.shape[1]
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_gathered_quantized_sparse_q_kernel(
+            n, n_valid, block_n, h
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n, k), lambda qi, i: (qi, i, 0)),
+            pl.BlockSpec((block_q, block_n, k), lambda qi, i: (qi, i, 0)),
+            pl.BlockSpec((block_q, block_n), lambda qi, i: (qi, i)),
+            pl.BlockSpec((block_q, block_n), lambda qi, i: (qi, i)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, n), jnp.float32),
+            jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
+        interpret=interpret,
+    )(q_values, indices, scales, inv_norms,
+      query_values.astype(jnp.float32), query_indices)
+    return out_v, out_i
+
+
+def _score_tile_int8_gathered(vals_i8, idx, q_panel_i8):
+    """(BLOCK_Q, BLOCK_N) int32 scores from per-query int8 bricks.
+
+    vals_i8 (BLOCK_Q, BLOCK_N, k) int8, idx already widened to i32,
+    q_panel_i8 (BLOCK_Q, h) int8.  Exact int32 accumulation — same
+    overflow headroom and associativity argument as ``_score_tile_int8``,
+    so the kernel stays bit-identical to its chunked jnp ref.
+    """
+    bq, bn, k = vals_i8.shape
+
+    def body(j, acc):
+        col = jax.lax.dynamic_slice_in_dim(idx, j, 1, axis=2)      # (BQ, BN, 1)
+        vcol = jax.lax.dynamic_slice_in_dim(vals_i8, j, 1, axis=2)
+        gathered = jnp.take_along_axis(q_panel_i8, col[..., 0], axis=1)
+        return acc + gathered.astype(jnp.int32) * vcol[..., 0].astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((bq, bn), jnp.int32))
+
+
+def _make_retrieve_gathered_quantized_mxu_sparse_q_kernel(
+    n: int, n_valid: int, block_n: int, h: int
+):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, qv_ref, qi_ref,
+               out_v_ref, out_i_ref, qi8_ref, qs_ref):
+        nb = pl.program_id(1)
+
+        @pl.when(nb == 0)
+        def _init():
+            _init_best(out_v_ref, out_i_ref)
+            qi8, qs = _quantize_panel(
+                _densify_panel(qv_ref[...], qi_ref[...], h)
+            )
+            qi8_ref[...] = qi8
+            qs_ref[...] = qs
+
+        acc = _score_tile_int8_gathered(
+            qvals_ref[...], _widen_idx(idx_ref[...]), qi8_ref[...]
+        )
+        scores = acc.astype(jnp.float32) * qs_ref[...]             # fold q scale
+        _mask_fold_merge_gathered(scores, scale_ref[...] * inv_ref[...], nb,
+                                  out_v_ref, out_i_ref,
+                                  n=n, n_valid=n_valid, block_n=block_n)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("h", "n", "n_valid", "interpret", "block_n", "block_q"),
+)
+def fused_retrieve_gathered_quantized_mxu_sparse_q_pallas(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    n_valid: int,
+    interpret: bool = False,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered int8-scoring × sparse-query fused score+select
+    (generation 6 × 5, APPROXIMATE vs exact).  Per-query int8 candidate
+    bricks score against the once-per-panel quantized query scratch with
+    exact int32 accumulation; one f32 rescale — (acc·q_scale) ·
+    (row_scale·inv_norm), the scale/norm factors now per-(query,
+    candidate) tiles — folds into the merge.  Bit-identical per query to
+    ``fused_retrieve_quantized_mxu_sparse_q_pallas`` over the gathered
+    sub-arrays, and to ``retrieve_gathered_quantized_mxu_sparse_q_ref``.
+    """
+    nq, B, k = q_values.shape
+    grid = (nq // block_q, B // block_n)  # candidate axis innermost
+    kq = query_values.shape[1]
+    out_v, out_i = pl.pallas_call(
+        _make_retrieve_gathered_quantized_mxu_sparse_q_kernel(
+            n, n_valid, block_n, h
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n, k), lambda qi, i: (qi, i, 0)),
+            pl.BlockSpec((block_q, block_n, k), lambda qi, i: (qi, i, 0)),
+            pl.BlockSpec((block_q, block_n), lambda qi, i: (qi, i)),
+            pl.BlockSpec((block_q, block_n), lambda qi, i: (qi, i)),
             pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
             pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
         ],

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 from repro.kernels.sparse_dot.kernel import (
     BLOCK_N,
     BLOCK_Q,
+    fused_retrieve_gathered_quantized_mxu_sparse_q_pallas,
+    fused_retrieve_gathered_quantized_sparse_q_pallas,
+    fused_retrieve_gathered_sparse_q_pallas,
     fused_retrieve_pallas,
     fused_retrieve_quantized_mxu_pallas,
     fused_retrieve_quantized_mxu_sparse_q_pallas,
@@ -398,3 +401,196 @@ def fused_retrieve_quantized_mxu_sparse_q(
     )
     out_v, out_i = out_v[:nq], out_i[:nq]
     return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
+
+
+def _pad_gathered(block_n, block_q, nq, *arrays):
+    """Pad per-query candidate panels for the gathered kernels: the
+    candidate axis (axis 1) up to a ``block_n`` multiple on every array,
+    then the query axis (axis 0) up to a ``block_q`` multiple — query
+    padding covers the candidate panels too, since every input now carries
+    the leading Q axis.  Returns (padded arrays..., n_valid)."""
+    n_valid = arrays[0].shape[1]
+    pad = (-n_valid) % block_n
+    qpad = (-nq) % block_q
+
+    def p(a):
+        widths = [(0, qpad), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+        return jnp.pad(a, widths) if (pad or qpad) else a
+
+    return tuple(p(a) for a in arrays) + (n_valid,)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_gathered_sparse_q(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q_values: jax.Array,
+    q_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered sparse-query fused score+select (generation 6, fp32).
+
+    values (Q, B, k) f32 per-query candidate panels, indices (Q, B, k)
+    i32, inv_norms (Q, B) f32, q_values/q_indices (Q, kq) query codes over
+    [0, h).  Returns ((Q, n) scores, (Q, n) LOCAL candidate positions in
+    [0, B)) — the caller maps positions back to catalog rows through its
+    stage-1 row table.  Bit-identical per query to
+    ``fused_retrieve_sparse_q`` over the gathered sub-arrays.
+    """
+    if values.ndim != 3:
+        raise ValueError(
+            f"gathered retrieve expects (Q, B, k) candidate panels, "
+            f"got ndim={values.ndim}"
+        )
+    if n > values.shape[1]:
+        raise ValueError(f"top-n {n} exceeds candidate count {values.shape[1]}")
+    nq = q_values.shape[0]
+    qpad = (-nq) % block_q
+    if qpad:
+        q_values = jnp.pad(q_values, ((0, qpad), (0, 0)))
+        q_indices = jnp.pad(q_indices, ((0, qpad), (0, 0)))
+    values, indices, inv_norms, n_valid = _pad_gathered(
+        block_n, block_q, nq,
+        values, indices, inv_norms.astype(jnp.float32),
+    )
+    out_v, out_i = fused_retrieve_gathered_sparse_q_pallas(
+        values,
+        indices,
+        inv_norms,
+        q_values,
+        q_indices,
+        h,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    return out_v[:nq], out_i[:nq]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_gathered_quantized_sparse_q(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered quantized × sparse query codes (generation 6): per-query
+    candidate panels stream in their quantized storage dtypes — q_values
+    (Q, B, k) int8, indices (Q, B, k) int16/int32, scales/inv_norms (Q, B)
+    f32 — and dequantize per brick in VMEM.  Bit-identical per query to
+    ``fused_retrieve_quantized_sparse_q`` over the gathered sub-arrays.
+    """
+    if q_values.ndim != 3:
+        raise ValueError(
+            f"gathered retrieve expects (Q, B, k) candidate panels, "
+            f"got ndim={q_values.ndim}"
+        )
+    if n > q_values.shape[1]:
+        raise ValueError(
+            f"top-n {n} exceeds candidate count {q_values.shape[1]}"
+        )
+    nq = query_values.shape[0]
+    qpad = (-nq) % block_q
+    if qpad:
+        query_values = jnp.pad(query_values, ((0, qpad), (0, 0)))
+        query_indices = jnp.pad(query_indices, ((0, qpad), (0, 0)))
+    q_values, indices, scales, inv_norms, n_valid = _pad_gathered(
+        block_n, block_q, nq,
+        q_values, indices,
+        scales.astype(jnp.float32), inv_norms.astype(jnp.float32),
+    )
+    out_v, out_i = fused_retrieve_gathered_quantized_sparse_q_pallas(
+        q_values,
+        indices,
+        scales,
+        inv_norms,
+        query_values,
+        query_indices,
+        h,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    return out_v[:nq], out_i[:nq]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "block_q", "interpret")
+)
+def fused_retrieve_gathered_quantized_mxu_sparse_q(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = BLOCK_N,
+    block_q: int = BLOCK_Q,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered int8-scoring × sparse query codes (generation 6 × 5,
+    APPROXIMATE vs exact): per-query int8 candidate panels score with
+    exact int32 accumulation against the once-per-panel quantized query
+    scratch.  Bit-identical per query to
+    ``fused_retrieve_quantized_mxu_sparse_q`` over the gathered
+    sub-arrays, and to ``retrieve_gathered_quantized_mxu_sparse_q_ref``.
+    """
+    if q_values.ndim != 3:
+        raise ValueError(
+            f"gathered retrieve expects (Q, B, k) candidate panels, "
+            f"got ndim={q_values.ndim}"
+        )
+    if n > q_values.shape[1]:
+        raise ValueError(
+            f"top-n {n} exceeds candidate count {q_values.shape[1]}"
+        )
+    nq = query_values.shape[0]
+    qpad = (-nq) % block_q
+    if qpad:
+        query_values = jnp.pad(query_values, ((0, qpad), (0, 0)))
+        query_indices = jnp.pad(query_indices, ((0, qpad), (0, 0)))
+    q_values, indices, scales, inv_norms, n_valid = _pad_gathered(
+        block_n, block_q, nq,
+        q_values, indices,
+        scales.astype(jnp.float32), inv_norms.astype(jnp.float32),
+    )
+    out_v, out_i = fused_retrieve_gathered_quantized_mxu_sparse_q_pallas(
+        q_values,
+        indices,
+        scales,
+        inv_norms,
+        query_values,
+        query_indices,
+        h,
+        n=n,
+        n_valid=n_valid,
+        interpret=not _on_tpu() if interpret is None else interpret,
+        block_n=block_n,
+        block_q=block_q,
+    )
+    return out_v[:nq], out_i[:nq]

@@ -42,10 +42,25 @@
                       kernel↔exact-f32 relationship, by contrast, is a
                       measured quality bound (``repro.core.eval``), not an
                       equality.
+``retrieve_gathered_*_sparse_q_ref`` — generation 6, the GATHER-AWARE
+                      re-rank for batched two-stage retrieval: every query
+                      brings its own (B,) candidate row set, so candidate
+                      arrays carry a leading query axis — values/indices
+                      (Q, B, k), inv_norms/scales (Q, B) — and the per-
+                      block gather indexes each query's own dense panel.
+                      Returned ids are positions WITHIN each query's
+                      candidate set (the caller maps them back through its
+                      row table).  Per query, the arithmetic is op-for-op
+                      the matching per-query generation (``retrieve_
+                      sparse_q_ref`` and friends over the pre-gathered
+                      sub-arrays), which is what makes batched stage 2
+                      bit-identical to PR 7's per-query re-rank loop.
 
 The exact streaming variants share one chunked impl (``_retrieve_chunked``)
 and the int8-scoring pair shares ``_retrieve_chunked_mxu``; all differ
-only in the per-block dequant / int8-scoring step.
+only in the per-block dequant / int8-scoring step.  The gathered
+generation mirrors the pair as ``_retrieve_gathered_chunked`` /
+``_retrieve_gathered_chunked_mxu``.
 """
 from __future__ import annotations
 
@@ -473,5 +488,279 @@ def retrieve_quantized_sparse_q_ref(
     q_dense = _densify_rows(query_values, query_indices, h)
     return _retrieve_chunked(
         q_values, indices, inv_norms, q_dense, scales,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )
+
+
+# --------------------------------------------------------------------------
+# Generation 6: gather-aware re-rank (batched two-stage stage 2)
+# --------------------------------------------------------------------------
+
+def _gather_rows(q_dense: jax.Array, bi: jax.Array) -> jax.Array:
+    """Per-query panel gather: q_dense (Q, h), bi (Q, block_n, k) →
+    (Q, block_n, k).  Each query row gathers from ITS OWN dense panel —
+    the gathered twin of ``_retrieve_chunked``'s shared ``q[:, bi]``."""
+    return jax.vmap(lambda qd, b: qd[b])(q_dense, bi)
+
+
+def _retrieve_gathered_chunked(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q: jax.Array,
+    scales,  # None (fp32 values) or (Q, B) f32 per-row dequant scales
+    *,
+    n: int,
+    block_n: int,
+    q_chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered chunked streaming top-n: per-query candidate panels.
+
+    values (Q, B, k), indices (Q, B, k), inv_norms (Q, B), q (Q, h) dense
+    queries.  Returns ((Q, n) norm-folded scores, (Q, n) ids) where ids
+    are candidate POSITIONS in [0, B) — local to each query's panel.
+    Per query, block sizing, padding, dequant, masking and the top-k merge
+    are op-for-op ``_retrieve_chunked`` over that query's pre-gathered
+    sub-arrays, so the result is bit-identical to Q independent per-query
+    calls.
+    """
+    nq, B, k = values.shape
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+
+        def padq(a, axes=2):
+            if not qpad or a is None:
+                return a
+            return jnp.pad(a, ((0, qpad),) + ((0, 0),) * (a.ndim - 1))
+
+        ch = lambda a: (None if a is None
+                        else padq(a).reshape(-1, q_chunk, *a.shape[1:]))
+        sc = ch(scales)
+        leaves = (ch(values), ch(indices), ch(inv_norms), ch(q)) + (
+            () if scales is None else (sc,))
+
+        def body(c):
+            csc = c[4] if scales is not None else None
+            return _retrieve_gathered_chunked(
+                c[0], c[1], c[2], c[3], csc,
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            )
+
+        bv, bi = jax.lax.map(body, leaves)
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    block_n = min(block_n, max(B, 1))
+    pad = (-B) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, 0), (0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, 0), (0, pad), (0, 0)))
+        inv_norms = jnp.pad(inv_norms, ((0, 0), (0, pad)))
+        if scales is not None:
+            scales = jnp.pad(scales, ((0, 0), (0, pad)))
+    nb = (B + pad) // block_n
+    # block the candidate axis, scan-major: (nb, Q, block_n, ·)
+    vals_b = values.reshape(nq, nb, block_n, k).swapaxes(0, 1)
+    idx_b = indices.reshape(nq, nb, block_n, k).swapaxes(0, 1)
+    inv_b = inv_norms.reshape(nq, nb, block_n).swapaxes(0, 1)
+    ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+    scales_b = (jnp.zeros((nb, nq, 0)) if scales is None
+                else scales.reshape(nq, nb, block_n).swapaxes(0, 1))
+
+    init = (
+        jnp.full((nq, n), -jnp.inf, jnp.float32),
+        jnp.zeros((nq, n), jnp.int32),
+    )
+
+    def step(carry, blk):
+        best_v, best_i = carry
+        bv, bi, binv, bids, bsc = blk
+        if scales is not None:  # per-block dequant, per-query scales
+            bv = bv.astype(jnp.float32) * bsc[..., None]
+            bi = _widen_idx(bi)
+        gathered = _gather_rows(q, bi)                       # (Q, block_n, k)
+        s = jnp.sum(gathered * bv.astype(q.dtype), axis=-1)
+        s = (s * binv).astype(jnp.float32)                   # (Q, block_n)
+        s = jnp.where(bids[None] < B, s, -jnp.inf)           # mask padding
+        cand_v = jnp.concatenate([best_v, s], axis=1)
+        cand_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
+        )
+        v, p = jax.lax.top_k(cand_v, n)
+        return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
+
+    (best_v, best_i), _ = jax.lax.scan(
+        step, init, (vals_b, idx_b, inv_b, ids_b, scales_b)
+    )
+    return best_v, best_i
+
+
+def _retrieve_gathered_chunked_mxu(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    qp_i8: jax.Array,
+    q_scales: jax.Array,
+    *,
+    n: int,
+    block_n: int,
+    q_chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered int8-scoring chunked streaming top-n (generation 6 × 5).
+
+    q_values (Q, B, k) int8 per-query candidate panels, indices (Q, B, k)
+    int16/int32, scales/inv_norms (Q, B) f32, qp_i8 (Q, h) int8 quantized
+    query panel + q_scales (Q, 1).  Per query, op-for-op
+    ``_retrieve_chunked_mxu`` over the pre-gathered sub-arrays (exact
+    int32 accumulation, same f32 rescale order).
+    """
+    nq, B, k = q_values.shape
+    if nq > q_chunk:
+        qpad = (-nq) % q_chunk
+
+        def padq(a):
+            if not qpad:
+                return a
+            return jnp.pad(a, ((0, qpad),) + ((0, 0),) * (a.ndim - 1))
+
+        ch = lambda a: padq(a).reshape(-1, q_chunk, *a.shape[1:])
+        bv, bi = jax.lax.map(
+            lambda c: _retrieve_gathered_chunked_mxu(
+                c[0], c[1], c[2], c[3], c[4], c[5],
+                n=n, block_n=block_n, q_chunk=q_chunk,
+            ),
+            (ch(q_values), ch(indices), ch(scales), ch(inv_norms),
+             ch(qp_i8), ch(q_scales)),
+        )
+        return bv.reshape(-1, n)[:nq], bi.reshape(-1, n)[:nq]
+    block_n = min(block_n, max(B, 1))
+    pad = (-B) % block_n
+    if pad:
+        q_values = jnp.pad(q_values, ((0, 0), (0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, 0), (0, pad), (0, 0)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad)))
+        inv_norms = jnp.pad(inv_norms, ((0, 0), (0, pad)))
+    nb = (B + pad) // block_n
+    vals_b = q_values.reshape(nq, nb, block_n, k).swapaxes(0, 1)
+    idx_b = indices.reshape(nq, nb, block_n, k).swapaxes(0, 1)
+    sc_b = scales.reshape(nq, nb, block_n).swapaxes(0, 1)
+    inv_b = inv_norms.reshape(nq, nb, block_n).swapaxes(0, 1)
+    ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+
+    init = (
+        jnp.full((nq, n), -jnp.inf, jnp.float32),
+        jnp.zeros((nq, n), jnp.int32),
+    )
+
+    def step(carry, blk):
+        best_v, best_i = carry
+        bv, bi, bsc, binv, bids = blk
+        bi = _widen_idx(bi)
+        gathered = _gather_rows(qp_i8, bi)                   # (Q, block_n, k) i8
+        acc = jnp.sum(
+            gathered.astype(jnp.int32) * bv.astype(jnp.int32), axis=-1
+        )                                                    # (Q, block_n) i32
+        s = acc.astype(jnp.float32) * q_scales               # fold q scale
+        s = s * (bsc * binv)                                 # fold cand rescale
+        s = jnp.where(bids[None] < B, s, -jnp.inf)           # mask padding
+        cand_v = jnp.concatenate([best_v, s], axis=1)
+        cand_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
+        )
+        v, p = jax.lax.top_k(cand_v, n)
+        return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
+
+    (best_v, best_i), _ = jax.lax.scan(
+        step, init, (vals_b, idx_b, sc_b, inv_b, ids_b)
+    )
+    return best_v, best_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "q_chunk")
+)
+def retrieve_gathered_sparse_q_ref(
+    values: jax.Array,
+    indices: jax.Array,
+    inv_norms: jax.Array,
+    q_values: jax.Array,
+    q_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered sparse-query streaming top-n (generation 6, fp32).
+
+    values (Q, B, k) per-query candidate panels, indices (Q, B, k) i32,
+    inv_norms (Q, B), q_values/q_indices (Q, kq) query codes over [0, h).
+    Returns ((Q, n) scores, (Q, n) LOCAL candidate positions in [0, B)).
+    Bit-identical to Q per-query ``retrieve_sparse_q_ref`` calls over the
+    pre-gathered sub-arrays — the batched stage-2 contract.
+    """
+    q_dense = _densify_rows(q_values.astype(jnp.float32), q_indices, h)
+    return _retrieve_gathered_chunked(
+        values, indices, inv_norms, q_dense, None,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "q_chunk")
+)
+def retrieve_gathered_quantized_sparse_q_ref(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered quantized × sparse-query streaming top-n (generation 6).
+
+    q_values (Q, B, k) int8, indices (Q, B, k) int16/int32, scales and
+    inv_norms (Q, B) — the candidate panels stay in their quantized
+    storage dtypes through the gather; dequant happens per block exactly
+    as in ``retrieve_quantized_sparse_q_ref``.
+    """
+    q_dense = _densify_rows(
+        query_values.astype(jnp.float32), query_indices, h
+    )
+    return _retrieve_gathered_chunked(
+        q_values, indices, inv_norms, q_dense, scales,
+        n=n, block_n=block_n, q_chunk=q_chunk,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("h", "n", "block_n", "q_chunk")
+)
+def retrieve_gathered_quantized_mxu_sparse_q_ref(
+    q_values: jax.Array,
+    indices: jax.Array,
+    scales: jax.Array,
+    inv_norms: jax.Array,
+    query_values: jax.Array,
+    query_indices: jax.Array,
+    h: int,
+    *,
+    n: int,
+    block_n: int = 8192,
+    q_chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Gathered int8-scoring × sparse-query top-n (generation 6 × 5,
+    APPROXIMATE vs exact — but bit-identical to Q per-query
+    ``retrieve_quantized_mxu_sparse_q_ref`` calls, and to its own Pallas
+    kernel, by exact int32 accumulation)."""
+    qp_i8, q_scales = _quantize_panel(
+        _densify_rows(query_values.astype(jnp.float32), query_indices, h)
+    )
+    return _retrieve_gathered_chunked_mxu(
+        q_values, indices, scales, inv_norms, qp_i8, q_scales,
         n=n, block_n=block_n, q_chunk=q_chunk,
     )

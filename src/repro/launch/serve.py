@@ -56,16 +56,23 @@ instead of dying; ``dead-shard``/``slow-shard`` need ``--shards > 1``):
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --self-check --inject-fault corrupt-index
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --shards 4 --inject-fault dead-shard
 
-Two-stage retrieval (ISSUE 7, ``--two-stage``): stage 1 unions the
+Two-stage retrieval (ISSUE 7 + 8, ``--two-stage``): stage 1 unions the
 query's k posting lists from an inverted index over the latents into a
 bounded candidate set (``--candidate-fraction`` of the catalog), stage 2
-re-ranks only those rows through the ordinary fused retrieve — sub-linear
-in catalog size, approximate (recall vs dense truth reported as usual,
-and the guard ladder falls back to the exact single-stage scan on any
-stage-1 fault, e.g. ``--inject-fault corrupt-postings``):
+gathers those rows into (Q, budget) candidate panels in ONE batched
+gather and re-ranks the whole panel through a single gather-aware fused
+retrieve — sub-linear in catalog size, approximate (recall vs dense
+truth reported as usual).  Stage 1 runs on device by default (one jitted
+batched union, no per-query host loop); ``--stage1 host`` pins the
+bit-identical NumPy oracle instead.  The guard ladder sheds a device
+stage-1 fault to host stage 1, then to the exact single-stage scan
+(postings corruption fails both stage-1 rungs, e.g. ``--inject-fault
+corrupt-postings``; with ``--self-check`` it is already a typed startup
+failure via the inverted-index checksum):
 
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --candidate-fraction 0.1
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --stage1 host
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --inject-fault corrupt-postings
 """
 from __future__ import annotations
@@ -162,14 +169,20 @@ def main(argv=None):
                          "is reported per request)")
     ap.add_argument("--two-stage", action="store_true",
                     help="serve two-stage: inverted-index candidate "
-                         "generation (stage 1, host) feeding the fused "
-                         "re-rank over only the gathered rows (stage 2) — "
-                         "sub-linear in catalog size, approximate; "
-                         "sparse mode, unsharded only")
+                         "generation (stage 1) feeding one batched fused "
+                         "re-rank over the gathered candidate panels "
+                         "(stage 2) — sub-linear in catalog size, "
+                         "approximate; sparse mode, unsharded only")
     ap.add_argument("--candidate-fraction", type=float, default=0.25,
                     help="two-stage candidate budget as a fraction of the "
                          "catalog (stage 2 scans ~this fraction; 1.0 is "
                          "bit-identical to single-stage)")
+    ap.add_argument("--stage1", choices=["auto", "device", "host"],
+                    default="auto",
+                    help="stage-1 candidate-union implementation: the "
+                         "jitted device union ('device'; 'auto' resolves "
+                         "to it) or the bit-identical NumPy oracle "
+                         "('host'); requires --two-stage")
     ap.add_argument("--self-check", action="store_true",
                     help="verify the index content checksum and run a "
                          "canary batch against the reference contract "
@@ -197,6 +210,9 @@ def main(argv=None):
     if args.inject_fault == "corrupt-postings" and not args.two_stage:
         ap.error("--inject-fault corrupt-postings requires --two-stage "
                  "(the fault lives in stage 1's posting lists)")
+    if args.stage1 != "auto" and not args.two_stage:
+        ap.error("--stage1 requires --two-stage (stage 1 is the "
+                 "candidate-union step)")
 
     use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
     path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
@@ -238,7 +254,8 @@ def main(argv=None):
     if args.precision == "int8":
         path = f"{path}+int8"
     if args.two_stage:
-        path = f"{path}+two-stage"
+        stage1_impl = "device" if args.stage1 == "auto" else args.stage1
+        path = f"{path}+two-stage-{stage1_impl}"
 
     # ------------------------------------------------ hardened serving setup
     fallback_index = None
@@ -262,6 +279,7 @@ def main(argv=None):
         precision=args.precision,
         stage=("two_stage" if args.two_stage else "single"),
         candidate_fraction=args.candidate_fraction,
+        stage1=args.stage1,
     )
     if args.inject_fault == "corrupt-postings":
         # plant out-of-range ids in the posting lists AFTER the build:

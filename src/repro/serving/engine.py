@@ -55,11 +55,17 @@ from repro.errors import EngineConfigError, InvalidQueryError
 from repro.kernels.fused_encode import fused_encode
 from repro.kernels.sparse_dot import (
     fused_retrieve,
+    fused_retrieve_gathered_quantized_mxu_sparse_q,
+    fused_retrieve_gathered_quantized_sparse_q,
+    fused_retrieve_gathered_sparse_q,
     fused_retrieve_quantized,
     fused_retrieve_quantized_mxu,
     fused_retrieve_quantized_mxu_sparse_q,
     fused_retrieve_quantized_sparse_q,
     fused_retrieve_sparse_q,
+    retrieve_gathered_quantized_mxu_sparse_q_ref,
+    retrieve_gathered_quantized_sparse_q_ref,
+    retrieve_gathered_sparse_q_ref,
     retrieve_quantized_mxu_ref,
     retrieve_quantized_mxu_sparse_q_ref,
     retrieve_quantized_ref,
@@ -266,6 +272,26 @@ def select_retrieve_fn(
     return fused_retrieve if use_fused else retrieve_ref
 
 
+def select_gathered_retrieve_fn(
+    *, quantized: bool, int8_scoring: bool, use_fused: bool,
+):
+    """Generation-6 dispatch: the gather-aware re-rank for batched
+    two-stage stage 2.  Candidate arrays carry a leading query axis
+    ((Q, B, k) panels, (Q, B) norms/scales) and ids come back as LOCAL
+    panel positions.  Always sparse-query — two-stage retrieval is
+    sparse-mode only — so the table is the sparse-q column of
+    ``select_retrieve_fn`` with the gathered twins substituted.  Kept
+    beside it so the two tables cannot drift."""
+    if int8_scoring:
+        return (fused_retrieve_gathered_quantized_mxu_sparse_q if use_fused
+                else retrieve_gathered_quantized_mxu_sparse_q_ref)
+    if quantized:
+        return (fused_retrieve_gathered_quantized_sparse_q if use_fused
+                else retrieve_gathered_quantized_sparse_q_ref)
+    return (fused_retrieve_gathered_sparse_q if use_fused
+            else retrieve_gathered_sparse_q_ref)
+
+
 def retrieve_prepped(
     index,
     pq: PreppedQuery,
@@ -347,17 +373,24 @@ class RetrievalEngine:
     catalog) or ``"two_stage"`` — stage 1 unions the query's posting
     lists from an inverted index built at engine construction into a
     bounded candidate set (``candidate_fraction`` of the catalog,
-    posting lists capped at ``inverted_cap``), stage 2 runs the ordinary
-    fused/ref retrieve over only the gathered rows
-    (``core.retrieval.two_stage_retrieve``).  Sub-linear in catalog
-    size and APPROXIMATE (recall-gated in benchmarks); sparse mode,
-    unsharded only — sharding composes with single-stage instead.
+    posting lists capped at ``inverted_cap``), stage 2 gathers every
+    query's candidate panel in one batched device gather and runs ONE
+    gather-aware fused re-rank over the whole (Q, budget) panel
+    (``core.retrieval.two_stage_retrieve``, generation-6 kernels).
+    Sub-linear in catalog size and APPROXIMATE (recall-gated in
+    benchmarks); sparse mode, unsharded only — sharding composes with
+    single-stage instead.
+    ``stage1``: ``"auto"``/``"device"`` (default; the batched jitted
+    ``device_candidate_union`` — no per-query host work) or ``"host"``
+    (the numpy ``candidate_union`` parity oracle — bit-identical rows,
+    and the guard ladder's fallback between device two-stage and
+    single-stage).
 
     ``retrieve_dense`` jit-compiles the whole request (encode → score →
     select) once per distinct ``n`` and caches the executable, so steady
     -state serving is a single dispatch.  (Two-stage requests compile
-    two cached jits — encode and the per-query stage-2 re-rank — with
-    the host-side candidate union between them.)
+    two cached jits — encode and the batched stage-2 re-rank — with
+    the candidate union between them.)
     """
 
     def __init__(
@@ -372,6 +405,7 @@ class RetrievalEngine:
         k: Optional[int] = None,
         precision: str = "exact",
         stage: str = "single",
+        stage1: str = "auto",
         candidate_fraction: float = 0.25,
         inverted_cap: int = 2048,
     ):
@@ -380,6 +414,11 @@ class RetrievalEngine:
         if stage not in ("single", "two_stage"):
             raise EngineConfigError(
                 f"unknown stage {stage!r} (expected 'single' or 'two_stage')"
+            )
+        if stage1 not in ("auto", "device", "host"):
+            raise EngineConfigError(
+                f"unknown stage1 {stage1!r} "
+                "(expected 'auto', 'device' or 'host')"
             )
         if stage == "two_stage":
             if mesh is not None:
@@ -424,6 +463,7 @@ class RetrievalEngine:
         self.k = index.codes.k if k is None else k
         self.precision = check_precision(index, precision)
         self.stage = stage
+        self.stage1 = stage1
         self.candidate_fraction = candidate_fraction
         self.inverted_cap = inverted_cap
         self._inv_norms = mode_inv_norms(index, mode)
@@ -464,7 +504,7 @@ class RetrievalEngine:
                 self.index, self.inverted, q, n,
                 use_fused=self.use_fused, precision=self.precision,
                 candidate_fraction=self.candidate_fraction,
-                cache=self._two_stage_cache,
+                cache=self._two_stage_cache, stage1=self.stage1,
             )
         pq = self.prep_query(q)
         if self.mesh is not None:

@@ -14,15 +14,19 @@ engine deliberately does not do:
   remaining ladder rungs still serve, and the response is tagged
   ``deadline_exceeded`` instead of timing out empty-handed;
 * **the degradation ladder** — on a fault, serving steps down
-  ``sharded → unsharded → int8 → exact-quantized → fp32 ref → full-score
-  floor`` (whichever rungs the engine's configuration actually has),
+  ``two-stage-device → two-stage-host → sharded → unsharded → int8 →
+  exact-quantized → fp32 ref → full-score floor`` (whichever rungs the
+  engine's configuration actually has),
   re-serving the SAME request on the next-safest path.  Every response
   carries a ``ServingStatus`` naming the path taken, whether it is
   degraded, and why — a fault is an annotated answer, never a crash and
   never a silently wrong result;
 * **startup self-check** — ``self_check`` verifies the index checksum
   (``core.retrieval.verify_index``: a single flipped byte is a typed
-  ``IndexIntegrityError``) and runs a deterministic canary batch through
+  ``IndexIntegrityError``), the inverted-index checksum when the engine
+  serves two-stage (``core.inverted_index.verify_inverted_index`` — so
+  ``corrupt-postings`` is a startup failure, not a first-request
+  surprise), and runs a deterministic canary batch through
   the configured path, asserting it against the reference contract
   (int8: kernel↔ref bit-equality; exact: f32-rounding agreement) before
   the engine accepts traffic;
@@ -47,6 +51,7 @@ import numpy as np
 
 from repro.core import sae
 from repro.core.quantized_codes import QuantizedCodes
+from repro.core.inverted_index import verify_inverted_index
 from repro.core.retrieval import (
     dequantize_index,
     index_codes_f32,
@@ -188,6 +193,11 @@ def self_check(
     ``SelfCheckReport`` when the engine is fit to accept traffic.
     """
     verify_index(engine.index, require=require_checksum)
+    if engine.inverted is not None:
+        # two-stage engines also serve from posting lists: hold them to
+        # the same build-time checksum contract so corrupt-postings is a
+        # startup failure, not a first-request surprise
+        verify_inverted_index(engine.inverted, require=require_checksum)
     canary_n = min(canary_n, engine.index.codes.n)
 
     xq, qcodes = _canary_queries(engine, canary_q)
@@ -254,13 +264,29 @@ def self_check(
     )
 
 
+def _resolve_stage1(stage1: str) -> str:
+    """The stage-1 implementation a ``stage1`` knob actually runs
+    ("auto" resolves to the device union)."""
+    return "device" if stage1 == "auto" else stage1
+
+
+def _stage1_impl(cfg) -> Optional[str]:
+    """The resolved stage-1 implementation of a ladder config (None for
+    single-stage rungs) — part of the rung identity, so a device and a
+    host two-stage rung never dedup into one."""
+    if cfg.get("stage") != "two_stage":
+        return None
+    return _resolve_stage1(cfg.get("stage1", "auto"))
+
+
 def _path_name(engine: RetrievalEngine) -> str:
     quantized = isinstance(engine.index.codes, QuantizedCodes)
     fmt = ("int8" if engine.precision == "int8"
            else "quantized" if quantized else "fp32")
     backend = "kernel" if engine.use_fused else "ref"
     sharded = "-sharded" if engine.mesh is not None else ""
-    prefix = "two-stage-" if engine.stage == "two_stage" else ""
+    prefix = (f"two-stage-{_resolve_stage1(engine.stage1)}-"
+              if engine.stage == "two_stage" else "")
     return f"{prefix}{fmt}-{backend}{sharded}"
 
 
@@ -357,13 +383,20 @@ class GuardedEngine:
         quantized = isinstance(e.index.codes, QuantizedCodes)
         cfgs = []
         if e.stage == "two_stage":
-            # two-stage is the TOP rung: fastest, but approximate and
-            # dependent on posting-list integrity — any fault (e.g. a
-            # corrupted inverted index) drops straight to the exact
-            # single-stage scan of the same precision/backend
+            # two-stage occupies the TOP rungs: fastest, but approximate
+            # and dependent on posting-list integrity.  A device stage-1
+            # failure (jit/runtime fault) sheds to the host stage-1
+            # oracle first — bit-identical candidates, no device union —
+            # and only then to the exact single-stage scan of the same
+            # precision/backend (actual postings corruption fails BOTH
+            # stage-1 implementations, since they share the one inverted
+            # index, and lands there)
             cfgs.append(dict(mesh=None, precision=e.precision,
                              use_fused=e.use_fused, dequant=False,
-                             stage="two_stage"))
+                             stage="two_stage", stage1=e.stage1))
+            cfgs.append(dict(mesh=None, precision=e.precision,
+                             use_fused=e.use_fused, dequant=False,
+                             stage="two_stage", stage1="host"))
         cfgs += [
             dict(mesh=e.mesh, precision=e.precision,
                  use_fused=e.use_fused, dequant=False, stage="single"),
@@ -383,7 +416,8 @@ class GuardedEngine:
         ladder, seen = [], set()
         for cfg in cfgs:
             key = (cfg["mesh"] is None, cfg["precision"],
-                   cfg["use_fused"], cfg["dequant"], cfg["stage"])
+                   cfg["use_fused"], cfg["dequant"], cfg["stage"],
+                   _stage1_impl(cfg))
             if key in seen:
                 continue
             seen.add(key)
@@ -398,7 +432,8 @@ class GuardedEngine:
                else "quantized" if quantized else "fp32")
         backend = "kernel" if cfg["use_fused"] else "ref"
         sharded = "-sharded" if cfg["mesh"] is not None else ""
-        prefix = "two-stage-" if cfg.get("stage") == "two_stage" else ""
+        impl = _stage1_impl(cfg)
+        prefix = f"two-stage-{impl}-" if impl is not None else ""
         return f"{prefix}{fmt}-{backend}{sharded}"
 
     @property
@@ -424,8 +459,15 @@ class GuardedEngine:
                 shard_axis=e.shard_axis, precision=cfg["precision"],
                 stage=cfg.get("stage", "single"),
                 **(dict(candidate_fraction=e.candidate_fraction,
-                        inverted_cap=e.inverted_cap) if two else {}),
+                        inverted_cap=e.inverted_cap,
+                        stage1=cfg.get("stage1", "auto")) if two else {}),
             )
+            if two and e.inverted is not None:
+                # every two-stage rung serves from the SAME inverted
+                # index as the primary engine (not a private rebuild):
+                # the device→host shed covers device-side faults only,
+                # and genuine postings corruption must fail both rungs
+                eng.inverted = e.inverted
         self._rung_engines[step] = eng
         return eng
 

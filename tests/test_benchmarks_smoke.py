@@ -85,6 +85,14 @@ def test_benchmarks_smoke_writes_perf_record(forced_device_count):
     assert 0.0 < ts["scanned_fraction"] <= 0.5, ts
     assert 0.0 < ts["candidate_fraction"] <= 1.0, ts
     assert ts["quality_n"] == 32, ts
+    # ISSUE 8: the device-stage-1 two-stage row mirrors the host row's
+    # quality fields and must agree with it EXACTLY — the device union
+    # is bit-identical to the host oracle, so the whole request is
+    tsd = by_name["retrieval_two_stage_device"]
+    assert tsd["recall_vs_exact"] == ts["recall_vs_exact"], (tsd, ts)
+    assert tsd["scanned_fraction"] == ts["scanned_fraction"], (tsd, ts)
+    assert tsd["candidate_fraction"] == ts["candidate_fraction"], (tsd, ts)
+    assert tsd["quality_n"] == 32, tsd
     # ISSUE 7: the candidate-generator row (inverted-index bench) appends
     # after retrieval_modes' wholesale rewrite — presence proves ordering
     inv = by_name["retrieval_inverted_index"]

@@ -123,6 +123,37 @@ def test_two_stage_row_schema_and_absolute_floor():
     assert any("recall_vs_exact" in x for x in failures)
 
 
+def test_two_stage_device_row_schema_floor_and_parity():
+    """ISSUE 8: the device two-stage row shares the host row's schema and
+    absolute floor, and additionally must MATCH the host row's
+    recall_vs_exact exactly — the device union is bit-identical to the
+    host oracle by contract, so ANY divergence gates (no tolerance, no
+    smoke exemption, and a device value ABOVE the host's gates too)."""
+    ts = dict(recall_vs_exact=0.97, scanned_fraction=0.3125,
+              candidate_fraction=0.3, quality_n=32)
+    # missing quality fields fail the schema gate
+    f = by_name(rec("retrieval_two_stage_device"))
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("schema" in x and "scanned_fraction" in x for x in failures)
+    # complete full-size host+device pair above the floor passes
+    f = by_name(rec("retrieval_two_stage", smoke=False, **ts),
+                rec("retrieval_two_stage_device", smoke=False, **ts))
+    failures, _ = compare(dict(f), f, recall_tol=0.02)
+    assert failures == []
+    # the absolute floor applies to the device row too
+    bad = by_name(rec("retrieval_two_stage_device", smoke=False,
+                      **{**ts, "recall_vs_exact": 0.90}))
+    failures, _ = compare(dict(bad), bad, recall_tol=0.02)
+    assert any("quality floor" in x and "device" in x for x in failures)
+    # host/device divergence gates even at smoke size and even when the
+    # device row reads HIGHER — bit-equality has no better-or-worse
+    div = by_name(rec("retrieval_two_stage", smoke=True, **ts),
+                  rec("retrieval_two_stage_device", smoke=True,
+                      **{**ts, "recall_vs_exact": 0.99}))
+    failures, _ = compare(dict(div), div, recall_tol=0.02)
+    assert any("divergence" in x for x in failures)
+
+
 def test_inverted_index_row_schema():
     """ISSUE 7: the candidate-generator row must carry its cap and scan
     fraction so the work-reduction claim stays auditable."""

@@ -1,0 +1,308 @@
+"""Device-side two-stage candidate generation (ISSUE 8 tentpole).
+
+Pins the two bit-equality contracts the tentpole rests on:
+
+* ``device_candidate_union`` is BIT-IDENTICAL to the host
+  ``candidate_union`` oracle — rows, ascending order, and the filler
+  tail — across duplicate latents, overflowing caps, budget < |union|
+  truncation, the budget > |union| filler path, and tie-heavy corpora
+  (a property suite when Hypothesis is installed, plus seeded
+  deterministic twins of the same properties that always run);
+* the batched stage 2 (one gathered re-rank over the whole (Q, budget)
+  panel, generation-6 kernels) is BIT-IDENTICAL to the PR-7 per-query
+  loop — scores, ids, ties, and the (−inf, −1) padding — across
+  {fp32, quantized} × {exact, int8} × {fused, ref}.
+
+Also covers the inverted-index content checksum (build-time stamp,
+``verify_inverted_index``, and the startup ``self_check`` catching
+``corrupt-postings`` before the first request) and the filler-rule
+regression test referenced from ``candidate_union``'s docstring.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    SAEConfig, SparseCodes, build_index, encode, init_params, retrieve,
+)
+from repro.core.inverted_index import (
+    build_inverted_index,
+    candidate_union,
+    device_candidate_union,
+    inverted_index_checksum,
+    verify_inverted_index,
+)
+from repro.core.retrieval import two_stage_retrieve
+from repro.errors import IndexIntegrityError
+from repro.serving import GuardedEngine, RetrievalEngine, corrupt_postings
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # the container has no hypothesis wheel:
+    HAVE_HYPOTHESIS = False  # the seeded twins below cover the properties
+
+CFG = SAEConfig(d=32, h=128, k=4)
+
+
+def _random_codes(n, h, k, seed, duplicate_latents=False):
+    """Random sparse codes straight from NumPy (no SAE training): values
+    positive so posting impact-ordering is exercised, indices optionally
+    WITH duplicate latents inside a row (the union must dedup them)."""
+    rng = np.random.default_rng(seed)
+    if duplicate_latents:
+        idx = rng.integers(0, h, size=(n, k), dtype=np.int32)
+    else:
+        idx = np.stack([
+            rng.choice(h, size=k, replace=False) for _ in range(n)
+        ]).astype(np.int32)
+    val = rng.uniform(0.1, 1.0, size=(n, k)).astype(np.float32)
+    return SparseCodes(values=jnp.asarray(val), indices=jnp.asarray(idx),
+                       dim=h)
+
+
+def _q_indices(nq, h, k, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, h, size=(nq, k), dtype=np.int32)
+
+
+# --------------------------------------------------------- union parity
+@pytest.mark.parametrize("n,h,k,cap,budget,dup", [
+    (512, 128, 4, 64, 128, False),   # ordinary truncation race
+    (512, 128, 4, 8, 200, False),    # tiny cap -> filler path dominates
+    (64, 16, 4, 64, 64, True),       # budget == catalog, duplicate latents
+    (300, 8, 2, 16, 17, True),       # dense latents -> heavy ties/overlap
+    (512, 128, 4, 512, 512, False),  # uncapped postings, full budget
+    (96, 4, 3, 96, 40, True),        # h < k·q overlap: every list collides
+])
+def test_device_union_matches_host_oracle(n, h, k, cap, budget, dup):
+    """The seeded grid: every config class the property suite samples,
+    pinned deterministically so the contract gates without Hypothesis."""
+    codes = _random_codes(n, h, k, seed=n + cap, duplicate_latents=dup)
+    inv = build_inverted_index(codes, cap=cap)
+    qi = _q_indices(7, h, k, seed=budget)
+    host = candidate_union(inv, qi, budget)
+    dev = np.asarray(device_candidate_union(inv, jnp.asarray(qi), budget))
+    np.testing.assert_array_equal(dev, host)
+    assert dev.dtype == np.int32 and dev.shape == (7, budget)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=40, derandomize=True)
+    @given(
+        n=st.integers(8, 200),
+        h=st.integers(2, 48),
+        k=st.integers(1, 4),
+        cap_frac=st.floats(0.05, 1.0),
+        budget_frac=st.floats(0.05, 1.0),
+        dup=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_device_union_property(n, h, k, cap_frac, budget_frac, dup,
+                                   seed):
+        """Property form of the grid above: any (corpus, cap, budget)
+        the strategy can draw — duplicate latents, overflowing caps,
+        budget under/over the union size — device == host, bitwise."""
+        k = min(k, h)
+        cap = max(1, int(cap_frac * n))
+        budget = max(1, int(budget_frac * n))
+        codes = _random_codes(n, h, k, seed, duplicate_latents=dup)
+        inv = build_inverted_index(codes, cap=cap)
+        qi = _q_indices(3, h, k, seed + 1)
+        host = candidate_union(inv, qi, budget)
+        dev = np.asarray(
+            device_candidate_union(inv, jnp.asarray(qi), budget))
+        np.testing.assert_array_equal(dev, host)
+
+
+def test_filler_rule_is_first_non_members_over_full_catalog():
+    """Regression pin for the documented filler contract (referenced from
+    ``candidate_union``'s docstring): when budget > |union|, the filler
+    tail is the FIRST ``need`` non-member catalog ids ascending over the
+    full [0, N) range — NOT over a biased sub-range — and the device
+    union reproduces it bit for bit.  The corpus is built so the union
+    is a scattered high-id set, which a [0, budget)-only filler draw
+    would have answered differently before the rule was pinned."""
+    n, h, k = 200, 8, 2
+    # every item lights latents {6, 7}; the query hits latent 0, whose
+    # posting list holds only the 5 hand-planted high-id rows
+    idx = np.tile(np.array([6, 7], dtype=np.int32), (n, 1))
+    val = np.full((n, k), 0.5, dtype=np.float32)
+    planted = [150, 160, 170, 180, 190]
+    for r in planted:
+        idx[r] = [0, 7]
+    codes = SparseCodes(values=jnp.asarray(val), indices=jnp.asarray(idx),
+                        dim=h)
+    inv = build_inverted_index(codes, cap=n)
+    qi = np.array([[0, 0]], dtype=np.int32)
+    budget = 12
+    host = candidate_union(inv, qi, budget)
+    dev = np.asarray(
+        device_candidate_union(inv, jnp.asarray(qi), budget))
+    np.testing.assert_array_equal(dev, host)
+    # brute-force statement of the rule over the FULL catalog range
+    union = np.unique(np.asarray(inv.postings)[qi[0]].ravel())
+    union = union[union >= 0]
+    need = budget - union.size
+    expect = np.sort(np.concatenate(
+        [union, np.setdiff1d(np.arange(n), union)[:need]]))
+    np.testing.assert_array_equal(host[0], expect)
+    assert set(planted) <= set(host[0].tolist())
+
+
+def test_device_union_raises_the_host_oracle_errors():
+    """Same typed errors, same messages, from both implementations."""
+    codes = _random_codes(64, 16, 4, seed=0)
+    inv = build_inverted_index(codes, cap=64)
+    qi = _q_indices(4, 16, 4, seed=1)
+    with pytest.raises(ValueError) as host_err:
+        candidate_union(inv, qi, 65)
+    with pytest.raises(ValueError) as dev_err:
+        device_candidate_union(inv, jnp.asarray(qi), 65)
+    assert str(host_err.value) == str(dev_err.value)
+    bad = corrupt_postings(inv)
+    with pytest.raises(IndexIntegrityError) as host_bad:
+        candidate_union(bad, qi, 32)
+    with pytest.raises(IndexIntegrityError) as dev_bad:
+        device_candidate_union(bad, jnp.asarray(qi), 32)
+    assert str(host_bad.value) == str(dev_bad.value)
+    assert "postings corrupted" in str(dev_bad.value)
+
+
+# --------------------------------------------------- batched stage 2
+@pytest.fixture(scope="module")
+def corpus_setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (512, CFG.d))
+    queries = jax.random.normal(jax.random.PRNGKey(2), (9, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    q = encode(params, queries, CFG.k)
+    return params, codes, q
+
+
+@pytest.mark.parametrize("quantized,precision", [
+    (False, "exact"), (True, "exact"), (True, "int8"),
+])
+@pytest.mark.parametrize("use_fused", [False, True])
+def test_batched_stage2_bit_identical_to_per_query(corpus_setup,
+                                                   quantized, precision,
+                                                   use_fused):
+    """ONE gathered re-rank over the (Q, budget) panel == the PR-7
+    per-query loop, bit for bit — scores, ids, tie resolution — across
+    every mode × precision × backend the engine serves."""
+    params, codes, q = corpus_setup
+    index = build_index(codes, params, quantize=quantized)
+    inv = build_inverted_index(codes, cap=64)
+    kw = dict(candidate_fraction=0.3, precision=precision)
+    v_b, i_b = two_stage_retrieve(index, inv, q, 10, use_fused=use_fused,
+                                  stage1="host", stage2="batched", **kw)
+    v_p, i_p = two_stage_retrieve(index, inv, q, 10, use_fused=use_fused,
+                                  stage1="host", stage2="per_query", **kw)
+    np.testing.assert_array_equal(np.asarray(v_b), np.asarray(v_p))
+    np.testing.assert_array_equal(np.asarray(i_b), np.asarray(i_p))
+
+
+def test_device_stage1_end_to_end_bit_identical(corpus_setup):
+    """stage1='device' swaps only the union implementation: the whole
+    request (device union + batched gathered re-rank) must equal the
+    all-host PR-7 composition bitwise, through the engine too."""
+    params, codes, q = corpus_setup
+    index = build_index(codes, params)
+    inv = build_inverted_index(codes, cap=64)
+    v_d, i_d = two_stage_retrieve(index, inv, q, 10, use_fused=False,
+                                  candidate_fraction=0.3,
+                                  stage1="device", stage2="batched")
+    v_h, i_h = two_stage_retrieve(index, inv, q, 10, use_fused=False,
+                                  candidate_fraction=0.3,
+                                  stage1="host", stage2="per_query")
+    np.testing.assert_array_equal(np.asarray(v_d), np.asarray(v_h))
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_h))
+    dev = RetrievalEngine(params, index, stage="two_stage",
+                          candidate_fraction=0.3, stage1="device")
+    host = RetrievalEngine(params, index, stage="two_stage",
+                           candidate_fraction=0.3, stage1="host")
+    ve, ie = dev.retrieve_codes(q, 10)
+    vh, ih = host.retrieve_codes(q, 10)
+    np.testing.assert_array_equal(np.asarray(ve), np.asarray(vh))
+    np.testing.assert_array_equal(np.asarray(ie), np.asarray(ih))
+
+
+def test_batched_padding_contract_when_budget_exceeds_union():
+    """budget > |union| engages the filler path in stage 1 AND the
+    ascending-id tie contract in stage 2: batched == per-query down to
+    the padded tail."""
+    n, h, k = 300, 8, 2
+    idx = np.zeros((n, k), dtype=np.int32)
+    val = np.zeros((n, k), dtype=np.float32)
+    idx[:20] = [0, 1]
+    val[:20] = [1.0, 1.0]            # 20 exact duplicates tied on top
+    idx[20:] = [6, 7]
+    val[20:] = [0.3, 0.2]
+    codes = SparseCodes(values=jnp.asarray(val), indices=jnp.asarray(idx),
+                        dim=h)
+    index = build_index(codes)
+    inv = build_inverted_index(codes, cap=n)
+    q = SparseCodes(values=jnp.asarray([[1.0, 1.0]], dtype=jnp.float32),
+                    indices=jnp.asarray([[0, 1]], dtype=jnp.int32), dim=h)
+    for stage1 in ("device", "host"):
+        v_b, i_b = two_stage_retrieve(index, inv, q, 10, use_fused=False,
+                                      candidate_fraction=0.1,
+                                      stage1=stage1, stage2="batched")
+        v_1, i_1 = retrieve(index, q, 10, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(v_b), np.asarray(v_1))
+        np.testing.assert_array_equal(np.asarray(i_b), np.asarray(i_1))
+
+
+# ----------------------------------------------------------- checksums
+def test_inverted_index_checksum_stamped_and_verified():
+    codes = _random_codes(128, 16, 4, seed=7)
+    inv = build_inverted_index(codes, cap=32)
+    assert inv.checksum is not None
+    assert inv.checksum == inverted_index_checksum(inv)
+    verify_inverted_index(inv)                      # clean: no raise
+    bad = corrupt_postings(inv)                     # stale stored checksum
+    with pytest.raises(IndexIntegrityError, match="postings corrupted"):
+        verify_inverted_index(bad)
+
+
+def test_self_check_catches_corrupt_postings_at_startup():
+    """Satellite: the startup self-check must fail on a corrupted
+    inverted index BEFORE any request is served — the fault used to
+    surface only on the first stage-1 call."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (256, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    index = build_index(codes, params)
+    eng = RetrievalEngine(params, index, stage="two_stage",
+                          candidate_fraction=0.5, use_kernel=False)
+    GuardedEngine(eng, run_self_check=True)         # healthy: accepted
+    eng2 = RetrievalEngine(params, index, stage="two_stage",
+                           candidate_fraction=0.5, use_kernel=False)
+    eng2.inverted = corrupt_postings(eng2.inverted)
+    with pytest.raises(IndexIntegrityError, match="postings corrupted"):
+        GuardedEngine(eng2, run_self_check=True)
+
+
+def test_guard_ladder_sheds_device_then_host_then_single():
+    """The two-stage ladder has a device rung above a host rung; genuine
+    postings corruption fails both (they share the one inverted index)
+    and lands on the exact single-stage rung."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (256, CFG.d))
+    queries = jax.random.normal(jax.random.PRNGKey(2), (4, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    index = build_index(codes, params)
+    eng = RetrievalEngine(params, index, stage="two_stage",
+                          candidate_fraction=0.5, use_kernel=False)
+    guard = GuardedEngine(eng)
+    assert guard.ladder[0].startswith("two-stage-device-")
+    assert guard.ladder[1].startswith("two-stage-host-")
+    eng.inverted = corrupt_postings(eng.inverted)
+    v, ids, status = guard.retrieve_dense(queries, 8)
+    assert status.step == 2 and status.degraded
+    assert status.fault.count("postings corrupted") == 2  # both rungs tried
+    single = RetrievalEngine(params, index, use_kernel=False)
+    v1, i1 = single.retrieve_dense(queries, 8)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(i1))

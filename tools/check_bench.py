@@ -15,9 +15,14 @@ GATES (exit 1):
     not comparable), any ``recall*`` field may not drop by more than
     ``--recall-tol`` (default 0.02; CPU runs are seeded and
     deterministic, so a real drop means a serving-path change);
-  * two-stage quality floor — the ``retrieval_two_stage`` row's
-    ``recall_vs_exact`` must be >= 0.95 ABSOLUTE at full benchmark size
-    (baseline-independent; smoke records are exempt).
+  * two-stage quality floor — the ``retrieval_two_stage`` and
+    ``retrieval_two_stage_device`` rows' ``recall_vs_exact`` must be
+    >= 0.95 ABSOLUTE at full benchmark size (baseline-independent;
+    smoke records are exempt);
+  * two-stage host/device parity — ``retrieval_two_stage_device``'s
+    ``recall_vs_exact`` must EQUAL ``retrieval_two_stage``'s (the
+    device union is bit-identical to the host oracle by contract; no
+    tolerance, no smoke exemption).
 
 WARN-ONLY (exit 0):
   * ``us_per_call`` movement in either direction — CPU-runner timing is
@@ -58,6 +63,14 @@ EXTRA_REQUIRED = {
         "recall_vs_exact", "scanned_fraction", "candidate_fraction",
         "quality_n",
     },
+    # device stage 1 (ISSUE 8): same schema and same absolute floor as
+    # the host row — PLUS a hard host/device divergence gate (the device
+    # union is bit-identical by contract, so any recall difference means
+    # the contract broke)
+    "retrieval_two_stage_device": {
+        "recall_vs_exact", "scanned_fraction", "candidate_fraction",
+        "quality_n",
+    },
     "retrieval_inverted_index": {"cap", "scan_frac"},
 }
 
@@ -89,14 +102,31 @@ def compare(baseline: dict, fresh: dict, recall_tol: float
         if missing:
             failures.append(f"schema: row `{name}` missing {sorted(missing)}")
 
-    ts = fresh.get("retrieval_two_stage")
-    if ts is not None and not ts.get("smoke") \
-            and "recall_vs_exact" in ts \
-            and ts["recall_vs_exact"] < TWO_STAGE_RECALL_FLOOR:
+    for ts_name in ("retrieval_two_stage", "retrieval_two_stage_device"):
+        ts = fresh.get(ts_name)
+        if ts is not None and not ts.get("smoke") \
+                and "recall_vs_exact" in ts \
+                and ts["recall_vs_exact"] < TWO_STAGE_RECALL_FLOOR:
+            failures.append(
+                f"two-stage quality floor: `{ts_name}`."
+                f"recall_vs_exact {ts['recall_vs_exact']:.4f} < "
+                f"{TWO_STAGE_RECALL_FLOOR} at full benchmark size"
+            )
+
+    # host/device two-stage parity: the device union is bit-identical to
+    # the host oracle by contract, so the two rows' recall_vs_exact must
+    # MATCH exactly (at any size — bit-equality does not get a tolerance)
+    ts_host = fresh.get("retrieval_two_stage")
+    ts_dev = fresh.get("retrieval_two_stage_device")
+    if ts_host is not None and ts_dev is not None \
+            and "recall_vs_exact" in ts_host and "recall_vs_exact" in ts_dev \
+            and ts_dev["recall_vs_exact"] != ts_host["recall_vs_exact"]:
         failures.append(
-            "two-stage quality floor: `retrieval_two_stage`."
-            f"recall_vs_exact {ts['recall_vs_exact']:.4f} < "
-            f"{TWO_STAGE_RECALL_FLOOR} at full benchmark size"
+            "two-stage host/device divergence: "
+            f"`retrieval_two_stage_device`.recall_vs_exact "
+            f"{ts_dev['recall_vs_exact']:.4f} != `retrieval_two_stage`."
+            f"recall_vs_exact {ts_host['recall_vs_exact']:.4f} — the "
+            "device union must be bit-identical to the host oracle"
         )
 
     gone = sorted(set(baseline) - set(fresh))
