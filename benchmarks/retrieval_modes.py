@@ -75,6 +75,24 @@ Rows:
                                   tools/check_bench.py additionally
                                   FAILS if its recall_vs_exact diverges
                                   from the host row's
+  retrieval_segmented           — ISSUE 9: the same request served from a
+                                  mutable SegmentedIndex (base + delta +
+                                  deletion masks) after a deterministic
+                                  add/delete/compact trace replayed
+                                  through RetrievalEngine.apply_update.
+                                  Its ``recall`` is measured against the
+                                  SURVIVING catalog's dense truth
+                                  (deleted rows out, added rows in); its
+                                  record carries recall_vs_exact (recall
+                                  @32 vs a fresh build_index over the
+                                  surviving fp32 rows — 1.0 by the
+                                  bit-identity contract, >= 0.95 gated
+                                  at full size) and compaction_parity
+                                  (compact().base.checksum equals the
+                                  rebuilt index's — gated at EXACT
+                                  equality here and in
+                                  tools/check_bench.py, smoke included:
+                                  checksum equality is size-independent)
 
 Every BENCH_retrieval.json record carries the backend path
 ("fused-kernel" | "jnp-chunked") and the shard count, so the perf
@@ -94,11 +112,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    SAEConfig, build_index, decode, dequantize_index, encode,
+    SAEConfig, SparseCodes, build_index, decode, dequantize_index, encode,
     init_train_state, retrieve, score_dense, score_reconstructed,
     score_sparse, top_n, train_step,
 )
 from repro.core.retrieval import kernel_path
+from repro.core.segments import SegmentedIndex
 from repro.launch.mesh import make_candidate_mesh
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
@@ -135,9 +154,10 @@ def main(smoke: bool = False):
     index = build_index(codes, params)
     truth = top_n(score_dense(corpus, queries), topn)[1]
 
-    def rec(ids):
+    def rec(ids, t=None):
+        t = truth if t is None else t
         return sum(len(set(a.tolist()) & set(b.tolist()))
-                   for a, b in zip(np.asarray(ids), np.asarray(truth))) / truth.size
+                   for a, b in zip(np.asarray(ids), np.asarray(t))) / t.size
 
     dense_fn = jax.jit(lambda q: top_n(score_dense(corpus, q), topn))
     # seed path: materialize (Q, N) scores, then select
@@ -199,6 +219,43 @@ def main(smoke: bool = False):
                                     candidate_fraction=cand_frac,
                                     stage1="device")
     ts_dev_fn = lambda q: ts_dev_engine.retrieve_dense(q, topn)  # noqa: E731
+    # segmented mutable serving (ISSUE 9): wrap the same fp32 index as
+    # the base segment and replay a deterministic add/delete/compact
+    # trace through apply_update before timing, so the timed request
+    # spans base + delta + deletion masks (12 base deletes, 16 adds, 2
+    # delta deletes, compact, 8 more adds -> an 8-row live delta)
+    n_add, n_del = 24, 12
+    extra_emb = clustered_embeddings(jax.random.PRNGKey(5), n_add, d=D)
+    extra_codes = encode(params, extra_emb, cfg.k)
+
+    def _code_rows(c, rows):
+        rows = np.asarray(rows)
+        return SparseCodes(values=jnp.asarray(np.asarray(c.values)[rows]),
+                           indices=jnp.asarray(np.asarray(c.indices)[rows]),
+                           dim=c.dim)
+
+    seg_engine = RetrievalEngine(params, SegmentedIndex.from_index(index),
+                                 mode="sparse")
+    seg_engine.apply_update(
+        "delete", ids=sorted({int(v) for v in np.linspace(0, n - 1, n_del)}))
+    seg_engine.apply_update("add", codes=_code_rows(extra_codes, range(16)),
+                            ids=list(range(n, n + 16)))
+    seg_engine.apply_update("delete", ids=[n + 3, n + 11])
+    seg_engine.apply_update("compact")
+    seg_engine.apply_update(
+        "add", codes=_code_rows(extra_codes, range(16, n_add)),
+        ids=list(range(n + 16, n + n_add)))
+    seg = seg_engine.segments
+    seg_fn = lambda q: seg_engine.retrieve_dense(q, topn)  # noqa: E731
+    # the segmented row's truth is the SURVIVING catalog (deleted rows
+    # contribute nothing; added rows compete), positions translated back
+    # to item ids through alive_ids()
+    surv = np.asarray(seg.alive_ids())
+    all_emb = jnp.concatenate([corpus, extra_emb])
+    seg_truth = jnp.take(
+        jnp.asarray(surv),
+        top_n(score_dense(all_emb[jnp.asarray(surv)], queries), topn)[1],
+    )
 
     records = []
     reps = 5 if smoke else 20  # shared-box timing noise: more reps at full size
@@ -213,9 +270,11 @@ def main(smoke: bool = False):
                              ("retrieval_sparse_quantized", quant_fn, 1),
                              ("retrieval_sparse_quantized_mxu", mxu_fn, 1),
                              ("retrieval_two_stage", ts_fn, 1),
-                             ("retrieval_two_stage_device", ts_dev_fn, 1)]:
+                             ("retrieval_two_stage_device", ts_dev_fn, 1),
+                             ("retrieval_segmented", seg_fn, 1)]:
         us = _timeit(fn, queries, reps=reps)
-        r = rec(fn(queries)[1])
+        r = rec(fn(queries)[1],
+                seg_truth if name == "retrieval_segmented" else None)
         print(f"{name},{us:.0f},recall@{topn}={r:.4f}")
         record = {"name": name, "us_per_call": round(us, 1),
                   "recall": round(r, 4), "path": path, "shards": shards,
@@ -228,6 +287,10 @@ def main(smoke: bool = False):
                           index_bytes_fp32=q_index_bytes_fp)
         if name == "retrieval_sparse_quantized_mxu":
             record.update(k=K32, precision="int8")
+        if name == "retrieval_segmented":
+            record.update(n_alive=int(seg.n_alive), adds=n_add,
+                          deletes=n_del + 2,
+                          base_coverage=round(seg.base_coverage, 4))
         records.append(record)
 
     # fused path must agree with the full-score path (same ids away from ties)
@@ -345,6 +408,41 @@ def main(smoke: bool = False):
         assert ts_dev_quality["recall"] >= 0.95, (
             f"device two-stage recall@32 {ts_dev_quality['recall']:.4f} "
             f"< 0.95 at N={n}, Q={q_count}, cand_frac={cand_frac}")
+
+    # segmented serving contract (ISSUE 9, pinned bit-exactly by
+    # tests/test_segments.py): the mutated SegmentedIndex answers like a
+    # fresh build_index over the surviving fp32 rows.  The bench records
+    # both halves — recall_vs_exact@32 against the rebuilt-index engine
+    # (1.0 when the contract holds), and compaction_parity: compact()'s
+    # base checksum must EQUAL the rebuilt index's (row-local
+    # quantization/norms make gathering stored rows == re-encoding the
+    # survivors).  Checksum equality is deterministic at any size, so
+    # the parity assert has no smoke exemption.
+    all_codes = SparseCodes(
+        values=jnp.concatenate([codes.values, extra_codes.values]),
+        indices=jnp.concatenate([codes.indices, extra_codes.indices]),
+        dim=codes.dim)
+    rebuilt = build_index(_code_rows(all_codes, surv))
+    reb_engine = RetrievalEngine(params, rebuilt, mode="sparse")
+    seg32 = seg_engine.retrieve_dense(queries, 32)
+    v_rb, pos_rb = reb_engine.retrieve_dense(queries, 32)
+    seg_quality = retrieval_quality(
+        seg32, (v_rb, jnp.take(jnp.asarray(surv), pos_rb)))
+    parity = int(seg.compact().base.checksum == rebuilt.checksum)
+    by_name["retrieval_segmented"].update(
+        recall_vs_exact=round(seg_quality["recall"], 4),
+        compaction_parity=parity,
+        quality_n=seg_quality["n"],
+    )
+    print(f"segmented_vs_rebuilt,0,recall@32={seg_quality['recall']:.4f} "
+          f"compaction_parity={parity}")
+    assert parity == 1, (
+        "segmented compact() checksum diverged from build_index over the "
+        "surviving rows — the compaction bit-identity contract broke")
+    if not smoke:
+        assert seg_quality["recall"] >= 0.95, (
+            f"segmented recall@32 vs rebuilt index "
+            f"{seg_quality['recall']:.4f} < 0.95 at N={n}, Q={q_count}")
 
     # kernel-trick exactness at benchmark scale
     q_codes = encode(params, queries, K)

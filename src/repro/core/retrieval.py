@@ -668,7 +668,30 @@ def sharded_top_n(scores_local: jax.Array, ids_local: jax.Array, n: int, *, axis
     ``lax.top_k``: shards are concatenated in ascending shard order and
     each local list is score-desc / ties-id-asc, so equal scores resolve
     to the lowest global id.
+
+    Shards may be RAGGED: a local slice narrower than ``n`` (a tiny delta
+    segment next to a huge base, or an uneven final shard) is padded out
+    to ``n`` with the (-inf, -1) contract before the local top-k —
+    ``lax.top_k`` would otherwise reject k > width.  Padded slots can
+    never win the merge over any real candidate, and surface as
+    (-inf, -1) only when the merged result itself is underfull.
     """
+    width = scores_local.shape[-1]
+    if width < n:
+        grow = n - width
+        if ids_local.ndim == 1:
+            ids_local = jnp.pad(ids_local, (0, grow), constant_values=-1)
+        else:
+            ids_local = jnp.pad(
+                ids_local,
+                [(0, 0)] * (ids_local.ndim - 1) + [(0, grow)],
+                constant_values=-1,
+            )
+        scores_local = jnp.pad(
+            scores_local,
+            [(0, 0)] * (scores_local.ndim - 1) + [(0, grow)],
+            constant_values=-jnp.inf,
+        )
     lv, li = jax.lax.top_k(scores_local, n)
     if ids_local.shape == scores_local.shape:
         gid = jnp.take_along_axis(ids_local, li, axis=-1)

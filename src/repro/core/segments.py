@@ -1,0 +1,461 @@
+"""Segmented mutable index: base + delta segments, deletion masks,
+compaction (ISSUE 9 tentpole; ROADMAP "Streaming index mutation").
+
+A recommender catalog churns constantly, but every index format in
+``core.retrieval`` is immutable — any add/remove previously meant a full
+``build_index``.  ``SegmentedIndex`` makes the index mutable without
+giving up a single bit of the immutable contract:
+
+* **base segment** — an immutable ``SparseIndex`` or ``QuantizedIndex``
+  exactly as ``build_index`` produced it (quantized in the serving
+  format, content-checksummed).
+* **delta segment** — a small append-only segment holding rows added
+  since the last compaction.  The fp32 rows are retained as the
+  authoritative copy (``delta_codes``); the SERVING arrays are derived
+  per add via ``build_index`` in the base's format, so a quantized
+  segmented index serves its delta quantized too.  Per-row symmetric
+  quantization is row-local, which is what makes "quantize at add" and
+  "re-quantize at compaction" produce the same bytes.
+* **deletion masks** — one liveness bit per row in each segment.  The
+  mask is folded into the streaming kernels' masking epilogue
+  (``alive`` operand on the sparse-query generations): dead rows score
+  -inf exactly like tile padding, and a fully-deleted candidate tile
+  takes the kernels' existing whole-tile skip (nothing in an all--inf
+  tile can beat the current n-th best).
+* **retrieve = per-segment streaming top-n + merge.**  Each segment runs
+  the SAME kernel/ref generation the equivalent immutable index would
+  (``serving.engine.select_retrieve_fn``), producing RAW norm-folded
+  scores; the per-segment lists are concatenated base-then-delta and
+  merged by one ``lax.top_k`` (segments are shards — the ragged-aware
+  ``sharded_top_n`` contract, inlined here because segments live on one
+  device).  The query-norm division happens once, after the merge, on
+  the (Q, n) panel — dividing per segment could collapse distinct raw
+  scores into equal quotients and flip tie order vs the oracle.
+
+**The binding contract** (tier-1, ``tests/test_segments*.py``): after
+ANY interleaving of ``add_items`` / ``delete_items`` / ``compact``,
+``retrieve`` over (base + delta + mask) is bit-identical — scores, ids,
+ties — to a fresh ``build_index`` over the surviving fp32 rows (base
+survivors then delta survivors, in original order), across
+{exact, quantized, int8} × {ref, fused}; and ``compact()`` output is
+bit-identical (arrays AND checksum) to that rebuilt index.  The proof
+obligations, in code order:
+
+* per-row scores are row-local in every generation (a row's score
+  depends only on its own values/indices/inv-norm and the query panel),
+  so a surviving row scores identically wherever it lives;
+* within a segment the streaming merge resolves ties to the lowest
+  position, and dead rows never surface, so surviving-position order ==
+  compacted-position order;
+* across segments, base survivors precede delta survivors in both the
+  concat and the rebuilt index, and ``lax.top_k`` prefers the lowest
+  concat index on ties;
+* quantization and norms are row-local, so gathering STORED serving
+  arrays at compaction equals re-quantizing the surviving fp32 rows.
+
+Sparse-query single-stage serving only (the production fused path);
+reconstructed-mode norms are dropped at wrap time.  Item ids are stable
+across mutations — ``retrieve`` returns ITEM ids, not positions, with
+(-inf, -1) padding for unfilled slots (n > surviving rows included).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized_codes import QuantizedCodes
+from repro.core.retrieval import (
+    NORM_EPS,
+    Index,
+    SparseIndex,
+    build_index,
+    index_checksum,
+    take_index_rows,
+    verify_index,
+)
+from repro.core.types import SparseCodes
+from repro.errors import SegmentMutationError
+
+_NEG_INF = float("-inf")
+
+
+def _as_id_array(ids) -> np.ndarray:
+    arr = np.asarray(ids, dtype=np.int64)
+    if arr.ndim != 1:
+        raise SegmentMutationError(
+            f"ids: expected a 1-D sequence of item ids, got shape "
+            f"{arr.shape}"
+        )
+    return arr
+
+
+def _concat_field(a, b):
+    if a is None and b is None:
+        return None
+    if a is None or b is None:
+        raise SegmentMutationError(
+            "cannot concatenate segments: one carries a norm array the "
+            "other lacks (mixed build configurations)"
+        )
+    return jnp.concatenate([a, b], axis=0)
+
+
+def concat_indexes(a: Index, b: Index) -> Index:
+    """Row-concatenate two indexes of the same format (a's rows first).
+
+    Every per-candidate array concatenates; ``dim`` must agree.  The
+    result carries a freshly computed content checksum — by row-locality
+    of quantization and norms this equals ``build_index`` over the
+    concatenated fp32 rows (the compaction bit-identity contract).
+    """
+    if type(a) is not type(b):
+        raise SegmentMutationError(
+            f"cannot concatenate {type(a).__name__} with {type(b).__name__}"
+        )
+    if a.codes.dim != b.codes.dim:
+        raise SegmentMutationError(
+            f"latent dim mismatch: {a.codes.dim} vs {b.codes.dim}"
+        )
+    if isinstance(a.codes, QuantizedCodes):
+        codes = QuantizedCodes(
+            q_values=_concat_field(a.codes.q_values, b.codes.q_values),
+            indices=_concat_field(a.codes.indices, b.codes.indices),
+            scales=_concat_field(a.codes.scales, b.codes.scales),
+            dim=a.codes.dim,
+        )
+    else:
+        codes = SparseCodes(
+            values=_concat_field(a.codes.values, b.codes.values),
+            indices=_concat_field(a.codes.indices, b.codes.indices),
+            dim=a.codes.dim,
+        )
+    idx = a._replace(
+        codes=codes,
+        sparse_norms=_concat_field(a.sparse_norms, b.sparse_norms),
+        recon_norms=_concat_field(a.recon_norms, b.recon_norms),
+        inv_sparse_norms=_concat_field(
+            a.inv_sparse_norms, b.inv_sparse_norms
+        ),
+        inv_recon_norms=_concat_field(a.inv_recon_norms, b.inv_recon_norms),
+        checksum=None,
+    )
+    return idx._replace(checksum=index_checksum(idx))
+
+
+class SegmentedIndex:
+    """Base + delta segments with deletion masks (see module doc).
+
+    Lifecycle ops are FUNCTIONAL — each returns a new ``SegmentedIndex``
+    sharing unchanged arrays with its parent — so a serving engine can
+    swap atomically and a guard can hold the previous generation as a
+    fallback.  Construct via ``SegmentedIndex.from_index``.
+    """
+
+    def __init__(
+        self,
+        base: Index,
+        base_ids: np.ndarray,
+        base_alive: np.ndarray,
+        delta: Optional[Index] = None,
+        delta_codes: Optional[SparseCodes] = None,
+        delta_ids: Optional[np.ndarray] = None,
+        delta_alive: Optional[np.ndarray] = None,
+    ):
+        self.base = base
+        self.base_ids = np.asarray(base_ids, dtype=np.int64)
+        self.base_alive = np.asarray(base_alive, dtype=bool)
+        self.delta = delta
+        self.delta_codes = delta_codes
+        self.delta_ids = (np.zeros((0,), np.int64) if delta_ids is None
+                          else np.asarray(delta_ids, dtype=np.int64))
+        self.delta_alive = (np.zeros((0,), bool) if delta_alive is None
+                            else np.asarray(delta_alive, dtype=bool))
+        if self.base_ids.shape[0] != base.codes.n:
+            raise SegmentMutationError(
+                f"base_ids has {self.base_ids.shape[0]} entries for "
+                f"{base.codes.n} base rows"
+            )
+        if delta is not None and self.delta_ids.shape[0] != delta.codes.n:
+            raise SegmentMutationError(
+                f"delta_ids has {self.delta_ids.shape[0]} entries for "
+                f"{delta.codes.n} delta rows"
+            )
+        # alive item id -> (segment, position); latest add wins by
+        # construction (an id is never alive in two places)
+        self._loc: dict[int, tuple[str, int]] = {}
+        for pos in np.flatnonzero(self.base_alive):
+            self._loc[int(self.base_ids[pos])] = ("base", int(pos))
+        for pos in np.flatnonzero(self.delta_alive):
+            self._loc[int(self.delta_ids[pos])] = ("delta", int(pos))
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_index(
+        cls, index: Index, ids: Optional[Sequence[int]] = None
+    ) -> "SegmentedIndex":
+        """Wrap an immutable index as the base segment (all rows alive).
+
+        ``ids`` defaults to ``arange(N)``.  Reconstructed-mode norms are
+        dropped — segmented serving is sparse-query only — and the base
+        checksum is recomputed over the retained arrays.
+        """
+        if index.recon_norms is not None or index.inv_recon_norms is not None:
+            index = index._replace(
+                recon_norms=None, inv_recon_norms=None, checksum=None
+            )
+            index = index._replace(checksum=index_checksum(index))
+        n = index.codes.n
+        base_ids = (np.arange(n, dtype=np.int64) if ids is None
+                    else _as_id_array(ids))
+        if base_ids.shape[0] != n:
+            raise SegmentMutationError(
+                f"ids has {base_ids.shape[0]} entries for {n} index rows"
+            )
+        if np.unique(base_ids).shape[0] != base_ids.shape[0]:
+            raise SegmentMutationError("ids must be unique")
+        return cls(index, base_ids, np.ones(n, dtype=bool))
+
+    # ----------------------------------------------------------- inspection
+    @property
+    def quantized(self) -> bool:
+        return isinstance(self.base.codes, QuantizedCodes)
+
+    @property
+    def dim(self) -> int:
+        return self.base.codes.dim
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.base_alive.sum()) + int(self.delta_alive.sum())
+
+    @property
+    def n_rows(self) -> int:
+        """Physical rows across segments, dead included."""
+        return self.base.codes.n + self.delta_ids.shape[0]
+
+    @property
+    def shape_key(self) -> tuple[int, int]:
+        """(base rows, delta rows) — what the jit caches key on."""
+        return (self.base.codes.n, self.delta_ids.shape[0])
+
+    @property
+    def base_coverage(self) -> float:
+        """Fraction of alive items servable from the base segment alone —
+        the ``ServingStatus.coverage`` a base-only shed reports."""
+        alive = self.n_alive
+        return 1.0 if alive == 0 else float(self.base_alive.sum()) / alive
+
+    def alive_ids(self) -> np.ndarray:
+        """Surviving item ids in compaction order (base then delta)."""
+        return np.concatenate([
+            self.base_ids[self.base_alive], self.delta_ids[self.delta_alive]
+        ])
+
+    def verify(self, *, require: bool = True) -> bool:
+        """Per-segment content-checksum verification (CRC32 via
+        ``verify_index``): a flipped byte in EITHER segment is a typed
+        ``IndexIntegrityError`` naming the segment."""
+        ok = verify_index(self.base, require=require)
+        if self.delta is not None:
+            ok = verify_index(self.delta, require=require) and ok
+        return ok
+
+    def base_only(self) -> "SegmentedIndex":
+        """Drop the delta segment — the guard's shed when delta bytes
+        fail integrity.  Items only alive in delta become unservable
+        (``base_coverage < 1.0``); base rows and masks are untouched."""
+        return SegmentedIndex(self.base, self.base_ids, self.base_alive)
+
+    # ------------------------------------------------------------ lifecycle
+    def add_items(self, codes: SparseCodes, ids) -> "SegmentedIndex":
+        """Append rows to the delta segment.  ``codes``: fp32 (m, k)
+        SparseCodes with ``dim`` matching the index; ``ids``: m unique
+        item ids, none currently alive (re-adding a DELETED id is fine —
+        the dead row stays masked, the new row serves)."""
+        new_ids = _as_id_array(ids)
+        if codes.values.ndim != 2:
+            raise SegmentMutationError(
+                f"codes: expected (m, k) values, got shape "
+                f"{tuple(codes.values.shape)}"
+            )
+        if codes.values.shape[0] != new_ids.shape[0]:
+            raise SegmentMutationError(
+                f"codes has {codes.values.shape[0]} rows for "
+                f"{new_ids.shape[0]} ids"
+            )
+        if codes.dim != self.dim:
+            raise SegmentMutationError(
+                f"codes dim {codes.dim} != index dim {self.dim}"
+            )
+        if np.unique(new_ids).shape[0] != new_ids.shape[0]:
+            raise SegmentMutationError("ids must be unique within one add")
+        for i in new_ids:
+            if int(i) in self._loc:
+                seg, pos = self._loc[int(i)]
+                raise SegmentMutationError(
+                    f"item id {int(i)} is already alive "
+                    f"({seg} segment, row {pos}); delete it first"
+                )
+        vals = jnp.asarray(codes.values, dtype=jnp.float32)
+        idx = jnp.asarray(codes.indices, dtype=jnp.int32)
+        if self.delta_codes is None:
+            delta_codes = SparseCodes(values=vals, indices=idx, dim=self.dim)
+        else:
+            delta_codes = SparseCodes(
+                values=jnp.concatenate([self.delta_codes.values, vals]),
+                indices=jnp.concatenate([self.delta_codes.indices, idx]),
+                dim=self.dim,
+            )
+        # re-derive the serving-format delta from the retained fp32 rows:
+        # the delta is small, and build_index is row-local, so already
+        # present rows re-produce their exact previous bytes
+        delta = build_index(delta_codes, quantize=self.quantized)
+        return SegmentedIndex(
+            self.base, self.base_ids, self.base_alive,
+            delta=delta, delta_codes=delta_codes,
+            delta_ids=np.concatenate([self.delta_ids, new_ids]),
+            delta_alive=np.concatenate([
+                self.delta_alive, np.ones(new_ids.shape[0], bool)
+            ]),
+        )
+
+    def delete_items(self, ids) -> "SegmentedIndex":
+        """Mark items dead.  Unknown or already-deleted ids are typed
+        errors — a delete that silently no-ops would desynchronize the
+        caller's view of the catalog."""
+        dead = _as_id_array(ids)
+        base_alive = self.base_alive.copy()
+        delta_alive = self.delta_alive.copy()
+        seen = set()
+        for i in dead:
+            key = int(i)
+            if key in seen:
+                raise SegmentMutationError(
+                    f"item id {key} listed twice in one delete"
+                )
+            seen.add(key)
+            loc = self._loc.get(key)
+            if loc is None:
+                raise SegmentMutationError(
+                    f"item id {key} is not alive in this index "
+                    "(unknown or already deleted)"
+                )
+            seg, pos = loc
+            if seg == "base":
+                base_alive[pos] = False
+            else:
+                delta_alive[pos] = False
+        return SegmentedIndex(
+            self.base, self.base_ids, base_alive,
+            delta=self.delta, delta_codes=self.delta_codes,
+            delta_ids=self.delta_ids, delta_alive=delta_alive,
+        )
+
+    def compact(self) -> "SegmentedIndex":
+        """Fold survivors into a fresh all-alive base; empty delta.
+
+        Gathers the STORED serving arrays (base survivors then delta
+        survivors) — never a dequantize/re-quantize round trip — so by
+        row-locality the result is bit-identical, checksum included, to
+        ``build_index`` over the surviving fp32 rows in the same order.
+        """
+        rows_b = np.flatnonzero(self.base_alive)
+        new_base = take_index_rows(self.base, jnp.asarray(rows_b))
+        if self.delta is not None:
+            rows_d = np.flatnonzero(self.delta_alive)
+            new_base = concat_indexes(
+                new_base, take_index_rows(self.delta, jnp.asarray(rows_d))
+            )
+        else:
+            new_base = new_base._replace(
+                checksum=index_checksum(new_base)
+            )
+        return SegmentedIndex(
+            new_base, self.alive_ids(),
+            np.ones(new_base.codes.n, dtype=bool),
+        )
+
+    # -------------------------------------------------------------- serving
+    def _segment_list(
+        self, index: Index, alive: np.ndarray, item_ids: np.ndarray,
+        qv, qi, n: int, *, use_fused: bool, precision: str,
+    ):
+        """One segment's raw top-n list: ((Q, n) raw norm-folded scores,
+        (Q, n) ITEM ids), padded with the (-inf, -1) contract.  Lists are
+        score-desc with ties in ascending segment position — which, dead
+        rows never surfacing, equals ascending surviving position."""
+        from repro.serving.engine import select_retrieve_fn
+
+        fn = select_retrieve_fn(
+            sparse_query=True,
+            quantized=isinstance(index.codes, QuantizedCodes),
+            int8_scoring=precision == "int8",
+            use_fused=use_fused,
+        )
+        if isinstance(index.codes, QuantizedCodes):
+            cand = (index.codes.q_values, index.codes.indices,
+                    index.codes.scales)
+        else:
+            cand = (index.codes.values, index.codes.indices)
+        inv = index.inv_sparse_norms
+        if inv is None:
+            inv = 1.0 / jnp.maximum(index.sparse_norms, NORM_EPS)
+        n_seg = min(n, index.codes.n)
+        alive_arr = (None if alive.all()
+                     else jnp.asarray(alive.astype(np.float32)))
+        vals, ids = fn(
+            *cand, inv, qv, qi, index.codes.dim, n=n_seg, alive=alive_arr
+        )
+        # unfilled streaming slots are (-inf, id 0); normalize to the
+        # (-inf, -1) contract BEFORE translating positions to item ids
+        ids = jnp.where(vals == _NEG_INF, -1, ids)
+        table = jnp.asarray(item_ids)
+        ids = jnp.where(ids >= 0, table[jnp.maximum(ids, 0)], -1)
+        if n_seg < n:
+            pad = [(0, 0)] * (vals.ndim - 1) + [(0, n - n_seg)]
+            vals = jnp.pad(vals, pad, constant_values=_NEG_INF)
+            ids = jnp.pad(ids, pad, constant_values=-1)
+        return vals, ids
+
+    def retrieve(
+        self, q: SparseCodes, n: int, *,
+        use_fused: bool = False, precision: str = "exact",
+    ) -> tuple[jax.Array, jax.Array]:
+        """Top-n over all surviving rows: ((Q?, n) cosine scores, (Q?, n)
+        ITEM ids), bit-identical to retrieving from ``build_index`` over
+        the surviving fp32 rows with the same generation (module doc).
+
+        Per-segment streaming top-n on RAW norm-folded scores, one
+        merge, then one query-norm division.  ``n`` may exceed the
+        surviving row count — unfilled slots come back (-inf, -1).
+        """
+        squeeze = q.values.ndim == 1
+        qv = q.values[None] if squeeze else q.values
+        qi = q.indices[None] if squeeze else q.indices
+        lists = [self._segment_list(
+            self.base, self.base_alive, self.base_ids, qv, qi, n,
+            use_fused=use_fused, precision=precision,
+        )]
+        if self.delta is not None and self.delta_ids.shape[0] > 0:
+            lists.append(self._segment_list(
+                self.delta, self.delta_alive, self.delta_ids, qv, qi, n,
+                use_fused=use_fused, precision=precision,
+            ))
+        all_vals = jnp.concatenate([v for v, _ in lists], axis=-1)
+        all_ids = jnp.concatenate([i for _, i in lists], axis=-1)
+        if all_vals.shape[-1] < n:
+            pad = [(0, 0)] * (all_vals.ndim - 1)
+            pad += [(0, n - all_vals.shape[-1])]
+            all_vals = jnp.pad(all_vals, pad, constant_values=_NEG_INF)
+            all_ids = jnp.pad(all_ids, pad, constant_values=-1)
+        vals, pos = jax.lax.top_k(all_vals, n)
+        ids = jnp.take_along_axis(all_ids, pos, axis=-1)
+        norm = jnp.linalg.norm(qv, axis=-1)
+        scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
+        return (scores[0], ids[0]) if squeeze else (scores, ids)
+
+
+SegmentedOrIndex = Union[SegmentedIndex, Index]

@@ -49,6 +49,14 @@ class IndexIntegrityError(RetrievalError):
     required)."""
 
 
+class SegmentMutationError(RetrievalError, ValueError):
+    """A segmented-index lifecycle op is invalid: adding an item id that
+    is already alive, deleting an unknown or already-deleted id, or
+    handing ``add_items`` codes whose shape/dim disagree with the index.
+    Messages name the offending id/argument.  Also a ``ValueError`` for
+    callers matching the stdlib taxonomy."""
+
+
 class DeadlineExceededError(RetrievalError, TimeoutError):
     """The per-request deadline budget ran out at the recorded stage."""
 

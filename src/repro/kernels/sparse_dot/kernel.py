@@ -241,15 +241,22 @@ def _init_best(out_v_ref, out_i_ref):
 
 
 def _mask_fold_merge(scores, inv, nb, out_v_ref, out_i_ref, *,
-                     n, n_valid, block_n):
+                     n, n_valid, block_n, alive=None):
     """Shared streaming-top-n tile epilogue (generations 2 and 3): fold the
     reciprocal candidate norms, mask padded rows by global id, and merge the
     tile into the VMEM-resident running best buffers (whole-tile skip when
-    nothing beats the current n-th best)."""
+    nothing beats the current n-th best).  ``alive`` — a (BLOCK_N, 1) f32
+    1.0/0.0 liveness column from a segmented index's deletion mask — rides
+    the padding mask: deleted rows score -inf exactly like padding, and a
+    fully-deleted tile takes the same whole-tile skip (every score is -inf,
+    so nothing can beat the current n-th best)."""
     scores = scores * inv.T                                        # fold 1/‖c‖
     bq, bn = scores.shape
     ids = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
-    scores = jnp.where(ids < n_valid, scores, _NEG_INF)            # mask padding
+    keep = ids < n_valid                                           # mask padding
+    if alive is not None:
+        keep = keep & (alive.T > 0.0)                              # mask deletions
+    scores = jnp.where(keep, scores, _NEG_INF)
 
     cur_min = out_v_ref[:, pl.ds(n - 1, 1)]                        # n-th best
 
@@ -342,9 +349,14 @@ def _densify_panel(q_vals, q_idx, h: int):
     return jax.lax.fori_loop(0, kq, body, jnp.zeros((bq, h), jnp.float32))
 
 
-def _make_retrieve_sparse_q_kernel(n: int, n_valid: int, block_n: int, h: int):
-    def kernel(vals_ref, idx_ref, inv_ref, qv_ref, qi_ref,
-               out_v_ref, out_i_ref, panel_ref):
+def _make_retrieve_sparse_q_kernel(n: int, n_valid: int, block_n: int, h: int,
+                                   with_alive: bool = False):
+    def kernel(vals_ref, idx_ref, inv_ref, *rest):
+        if with_alive:
+            alive_ref, qv_ref, qi_ref, out_v_ref, out_i_ref, panel_ref = rest
+        else:
+            qv_ref, qi_ref, out_v_ref, out_i_ref, panel_ref = rest
+            alive_ref = None
         nb = pl.program_id(1)
 
         @pl.when(nb == 0)
@@ -354,7 +366,8 @@ def _make_retrieve_sparse_q_kernel(n: int, n_valid: int, block_n: int, h: int):
 
         scores = _score_tile(vals_ref[...], idx_ref[...], panel_ref[...])
         _mask_fold_merge(scores, inv_ref[...], nb, out_v_ref, out_i_ref,
-                         n=n, n_valid=n_valid, block_n=block_n)
+                         n=n, n_valid=n_valid, block_n=block_n,
+                         alive=None if alive_ref is None else alive_ref[...])
 
     return kernel
 
@@ -376,6 +389,7 @@ def fused_retrieve_sparse_q_pallas(
     interpret: bool = False,
     block_n: int = BLOCK_N,
     block_q: int = BLOCK_Q,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sparse-query fused score+select: (Q, n) best (scores, candidate ids).
 
@@ -383,22 +397,32 @@ def fused_retrieve_sparse_q_pallas(
     (Q, kq) f32 + q_indices (Q, kq) i32 sparse query codes over [0, h).
     N % block_n == 0, Q % block_q == 0 (ops.py pads).  The dense query
     panel lives only in a (block_q, h) VMEM scratch, rebuilt per panel;
-    query HBM traffic is the (Q, kq) codes — never (Q, h).
+    query HBM traffic is the (Q, kq) codes — never (Q, h).  ``alive``,
+    when given, is an (N, 1) f32 1.0/0.0 deletion mask: dead rows are
+    masked to -inf alongside padding, and fully-dead tiles take the
+    whole-tile skip.
     """
     N, k = values.shape
     nq = q_values.shape[0]
     grid = (nq // block_q, N // block_n)  # candidate axis innermost
     kq = q_values.shape[1]
+    in_specs = [
+        pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+    ]
+    operands = [values, indices, inv_norms,
+                q_values.astype(jnp.float32), q_indices]
+    if alive is not None:
+        in_specs.insert(3, pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)))
+        operands.insert(3, alive)
     out_v, out_i = pl.pallas_call(
-        _make_retrieve_sparse_q_kernel(n, n_valid, block_n, h),
+        _make_retrieve_sparse_q_kernel(n, n_valid, block_n, h,
+                                       with_alive=alive is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
-            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
             pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
@@ -409,7 +433,7 @@ def fused_retrieve_sparse_q_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
         interpret=interpret,
-    )(values, indices, inv_norms, q_values.astype(jnp.float32), q_indices)
+    )(*operands)
     return out_v, out_i
 
 
@@ -495,10 +519,14 @@ def fused_retrieve_quantized_pallas(
 
 
 def _make_retrieve_quantized_sparse_q_kernel(
-    n: int, n_valid: int, block_n: int, h: int
+    n: int, n_valid: int, block_n: int, h: int, with_alive: bool = False
 ):
-    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, qv_ref, qi_ref,
-               out_v_ref, out_i_ref, panel_ref):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, *rest):
+        if with_alive:
+            alive_ref, qv_ref, qi_ref, out_v_ref, out_i_ref, panel_ref = rest
+        else:
+            qv_ref, qi_ref, out_v_ref, out_i_ref, panel_ref = rest
+            alive_ref = None
         nb = pl.program_id(1)
 
         @pl.when(nb == 0)
@@ -509,7 +537,8 @@ def _make_retrieve_quantized_sparse_q_kernel(
         vals, idx = _dequant_tile(qvals_ref[...], idx_ref[...], scale_ref[...])
         scores = _score_tile(vals, idx, panel_ref[...])
         _mask_fold_merge(scores, inv_ref[...], nb, out_v_ref, out_i_ref,
-                         n=n, n_valid=n_valid, block_n=block_n)
+                         n=n, n_valid=n_valid, block_n=block_n,
+                         alive=None if alive_ref is None else alive_ref[...])
 
     return kernel
 
@@ -532,6 +561,7 @@ def fused_retrieve_quantized_sparse_q_pallas(
     interpret: bool = False,
     block_n: int = BLOCK_N,
     block_q: int = BLOCK_Q,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantized candidates × sparse query codes: the full-compression
     serving kernel.  Candidate tiles stream int8/int16 and dequantize in
@@ -539,22 +569,31 @@ def fused_retrieve_quantized_sparse_q_pallas(
     scratch panel (generation 3).  Neither an fp32 index nor a dense query
     panel ever exists in HBM.  Bit-identical to
     ``fused_retrieve_sparse_q_pallas`` over the dequantized arrays.
+    ``alive``: optional (N, 1) f32 1.0/0.0 deletion mask (see the fp32
+    sparse-q wrapper).
     """
     N, k = q_values.shape
     nq = query_values.shape[0]
     grid = (nq // block_q, N // block_n)  # candidate axis innermost
     kq = query_values.shape[1]
+    in_specs = [
+        pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+    ]
+    operands = [q_values, indices, scales, inv_norms,
+                query_values.astype(jnp.float32), query_indices]
+    if alive is not None:
+        in_specs.insert(4, pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)))
+        operands.insert(4, alive)
     out_v, out_i = pl.pallas_call(
-        _make_retrieve_quantized_sparse_q_kernel(n, n_valid, block_n, h),
+        _make_retrieve_quantized_sparse_q_kernel(n, n_valid, block_n, h,
+                                                 with_alive=alive is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
-            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
             pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
@@ -565,8 +604,7 @@ def fused_retrieve_quantized_sparse_q_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((block_q, h), jnp.float32)],
         interpret=interpret,
-    )(q_values, indices, scales, inv_norms,
-      query_values.astype(jnp.float32), query_indices)
+    )(*operands)
     return out_v, out_i
 
 
@@ -675,10 +713,15 @@ def fused_retrieve_quantized_mxu_pallas(
 
 
 def _make_retrieve_quantized_mxu_sparse_q_kernel(
-    n: int, n_valid: int, block_n: int, h: int
+    n: int, n_valid: int, block_n: int, h: int, with_alive: bool = False
 ):
-    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, qv_ref, qi_ref,
-               out_v_ref, out_i_ref, qi8_ref, qs_ref):
+    def kernel(qvals_ref, idx_ref, scale_ref, inv_ref, *rest):
+        if with_alive:
+            (alive_ref, qv_ref, qi_ref,
+             out_v_ref, out_i_ref, qi8_ref, qs_ref) = rest
+        else:
+            qv_ref, qi_ref, out_v_ref, out_i_ref, qi8_ref, qs_ref = rest
+            alive_ref = None
         nb = pl.program_id(1)
 
         @pl.when(nb == 0)
@@ -699,7 +742,8 @@ def _make_retrieve_quantized_mxu_sparse_q_kernel(
         scores = acc.astype(jnp.float32) * qs_ref[...]
         _mask_fold_merge(scores, scale_ref[...] * inv_ref[...], nb,
                          out_v_ref, out_i_ref,
-                         n=n, n_valid=n_valid, block_n=block_n)
+                         n=n, n_valid=n_valid, block_n=block_n,
+                         alive=None if alive_ref is None else alive_ref[...])
 
     return kernel
 
@@ -722,28 +766,39 @@ def fused_retrieve_quantized_mxu_sparse_q_pallas(
     interpret: bool = False,
     block_n: int = BLOCK_N,
     block_q: int = BLOCK_Q,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Int8-scoring × sparse query codes (generation 5, APPROXIMATE): the
     full-compression serving kernel with no dequant anywhere.  The (Q, kq)
     codes densify into a VMEM panel, quantize per row into int8 scratch,
     and score the int8 candidate stream with exact int32 accumulation.
     Bit-identical to ``retrieve_quantized_mxu_sparse_q_ref``.
+    ``alive``: optional (N, 1) f32 1.0/0.0 deletion mask (see the fp32
+    sparse-q wrapper).
     """
     N, k = q_values.shape
     nq = query_values.shape[0]
     grid = (nq // block_q, N // block_n)  # candidate axis innermost
     kq = query_values.shape[1]
+    in_specs = [
+        pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
+        pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+        pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
+    ]
+    operands = [q_values, indices, scales, inv_norms,
+                query_values.astype(jnp.float32), query_indices]
+    if alive is not None:
+        in_specs.insert(4, pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)))
+        operands.insert(4, alive)
     out_v, out_i = pl.pallas_call(
-        _make_retrieve_quantized_mxu_sparse_q_kernel(n, n_valid, block_n, h),
+        _make_retrieve_quantized_mxu_sparse_q_kernel(
+            n, n_valid, block_n, h, with_alive=alive is not None
+        ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda qi, i: (i, 0)),
-            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
-            pl.BlockSpec((block_q, kq), lambda qi, i: (qi, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
             pl.BlockSpec((block_q, n), lambda qi, i: (qi, 0)),
@@ -757,8 +812,7 @@ def fused_retrieve_quantized_mxu_sparse_q_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q_values, indices, scales, inv_norms,
-      query_values.astype(jnp.float32), query_indices)
+    )(*operands)
     return out_v, out_i
 
 

@@ -65,11 +65,13 @@ def sparse_dot(
     return out[0] if squeeze else out
 
 
-def _pad_candidates(values, indices, inv_norms, block_n, scales=None):
+def _pad_candidates(values, indices, inv_norms, block_n, scales=None,
+                    alive=None):
     """Zero-pad the candidate axis up to a tile multiple — the one padding
     scheme every retrieve wrapper shares (fp32 and quantized alike).
-    Padded rows carry value/scale 0 and inv-norm 0, and are additionally
-    masked to -inf by global id (``n_valid``) inside the kernels."""
+    Padded rows carry value/scale 0 and inv-norm 0 (and alive 0, i.e.
+    dead), and are additionally masked to -inf by global id (``n_valid``)
+    inside the kernels."""
     n_valid = values.shape[0]
     pad = (-n_valid) % block_n
     if pad:
@@ -78,7 +80,9 @@ def _pad_candidates(values, indices, inv_norms, block_n, scales=None):
         inv_norms = jnp.pad(inv_norms, (0, pad))
         if scales is not None:
             scales = jnp.pad(scales, (0, pad))
-    return values, indices, inv_norms, scales, n_valid
+        if alive is not None:
+            alive = jnp.pad(alive, (0, pad))
+    return values, indices, inv_norms, scales, alive, n_valid
 
 
 @functools.partial(
@@ -107,7 +111,7 @@ def fused_retrieve(
     if n > values.shape[0]:
         raise ValueError(f"top-n {n} exceeds candidate count {values.shape[0]}")
     nq = q.shape[0]
-    values, indices, inv_norms, _, n_valid = _pad_candidates(
+    values, indices, inv_norms, _, _, n_valid = _pad_candidates(
         values, indices, inv_norms, block_n
     )
     qpad = (-nq) % block_q
@@ -143,6 +147,7 @@ def fused_retrieve_sparse_q(
     block_n: int = BLOCK_N,
     block_q: int = BLOCK_Q,
     interpret: bool | None = None,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sparse-query fused score+select -> ((Q, n) scores, (Q, n) ids).
 
@@ -150,7 +155,10 @@ def fused_retrieve_sparse_q(
     (Q, kq) or (kq,) f32 + matching q_indices i32 — k-sparse query codes
     over [0, h), e.g. straight from ``fused_encode``.  Bit-identical to
     ``fused_retrieve(values, indices, inv_norms, densify(q), n=n)``, but
-    only the (Q, kq) codes ever touch HBM on the query side.
+    only the (Q, kq) codes ever touch HBM on the query side.  ``alive``:
+    optional (N,) 1.0/0.0 row-liveness mask (segmented-index deletions) —
+    dead rows are masked to -inf exactly like padding, so they can never
+    appear among the top-n while live rows' scores/ids are untouched.
     """
     squeeze = q_values.ndim == 1
     if squeeze:
@@ -158,8 +166,8 @@ def fused_retrieve_sparse_q(
     if n > values.shape[0]:
         raise ValueError(f"top-n {n} exceeds candidate count {values.shape[0]}")
     nq = q_values.shape[0]
-    values, indices, inv_norms, _, n_valid = _pad_candidates(
-        values, indices, inv_norms, block_n
+    values, indices, inv_norms, _, alive, n_valid = _pad_candidates(
+        values, indices, inv_norms, block_n, alive=alive
     )
     qpad = (-nq) % block_q
     if qpad:
@@ -177,6 +185,8 @@ def fused_retrieve_sparse_q(
         interpret=not _on_tpu() if interpret is None else interpret,
         block_n=block_n,
         block_q=block_q,
+        alive=(None if alive is None
+               else alive.astype(jnp.float32).reshape(-1, 1)),
     )
     out_v, out_i = out_v[:nq], out_i[:nq]
     return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
@@ -214,7 +224,7 @@ def fused_retrieve_quantized(
             f"top-n {n} exceeds candidate count {q_values.shape[0]}"
         )
     nq = q.shape[0]
-    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
+    q_values, indices, inv_norms, scales, _, n_valid = _pad_candidates(
         q_values, indices, inv_norms, block_n, scales
     )
     qpad = (-nq) % block_q
@@ -252,6 +262,7 @@ def fused_retrieve_quantized_sparse_q(
     block_n: int = BLOCK_N,
     block_q: int = BLOCK_Q,
     interpret: bool | None = None,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantized candidates × sparse query codes -> ((Q, n) scores, ids).
 
@@ -259,7 +270,9 @@ def fused_retrieve_quantized_sparse_q(
     and dequantize in VMEM, query codes densify into VMEM scratch.  Only
     the (Q, kq) codes and (Q, n) results touch HBM on the query side, and
     the index never exists in fp32.  Bit-identical to
-    ``fused_retrieve_sparse_q`` over the dequantized arrays.
+    ``fused_retrieve_sparse_q`` over the dequantized arrays.  ``alive``:
+    optional (N,) 1.0/0.0 row-liveness mask (see
+    ``fused_retrieve_sparse_q``).
     """
     squeeze = query_values.ndim == 1
     if squeeze:
@@ -269,8 +282,8 @@ def fused_retrieve_quantized_sparse_q(
             f"top-n {n} exceeds candidate count {q_values.shape[0]}"
         )
     nq = query_values.shape[0]
-    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
-        q_values, indices, inv_norms, block_n, scales
+    q_values, indices, inv_norms, scales, alive, n_valid = _pad_candidates(
+        q_values, indices, inv_norms, block_n, scales, alive=alive
     )
     qpad = (-nq) % block_q
     if qpad:
@@ -289,6 +302,8 @@ def fused_retrieve_quantized_sparse_q(
         interpret=not _on_tpu() if interpret is None else interpret,
         block_n=block_n,
         block_q=block_q,
+        alive=(None if alive is None
+               else alive.astype(jnp.float32).reshape(-1, 1)),
     )
     out_v, out_i = out_v[:nq], out_i[:nq]
     return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)
@@ -326,7 +341,7 @@ def fused_retrieve_quantized_mxu(
             f"top-n {n} exceeds candidate count {q_values.shape[0]}"
         )
     nq = q.shape[0]
-    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
+    q_values, indices, inv_norms, scales, _, n_valid = _pad_candidates(
         q_values, indices, inv_norms, block_n, scales
     )
     qpad = (-nq) % block_q
@@ -364,11 +379,14 @@ def fused_retrieve_quantized_mxu_sparse_q(
     block_n: int = BLOCK_N,
     block_q: int = BLOCK_Q,
     interpret: bool | None = None,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Int8-scoring × sparse query codes (generation 5, APPROXIMATE): the
     no-dequant full-compression serving op.  Codes densify + quantize into
     VMEM scratch once per panel; candidates stream and score in int8.
-    Bit-identical to ``retrieve_quantized_mxu_sparse_q_ref``.
+    Bit-identical to ``retrieve_quantized_mxu_sparse_q_ref``.  ``alive``:
+    optional (N,) 1.0/0.0 row-liveness mask (see
+    ``fused_retrieve_sparse_q``).
     """
     squeeze = query_values.ndim == 1
     if squeeze:
@@ -378,8 +396,8 @@ def fused_retrieve_quantized_mxu_sparse_q(
             f"top-n {n} exceeds candidate count {q_values.shape[0]}"
         )
     nq = query_values.shape[0]
-    q_values, indices, inv_norms, scales, n_valid = _pad_candidates(
-        q_values, indices, inv_norms, block_n, scales
+    q_values, indices, inv_norms, scales, alive, n_valid = _pad_candidates(
+        q_values, indices, inv_norms, block_n, scales, alive=alive
     )
     qpad = (-nq) % block_q
     if qpad:
@@ -398,6 +416,8 @@ def fused_retrieve_quantized_mxu_sparse_q(
         interpret=not _on_tpu() if interpret is None else interpret,
         block_n=block_n,
         block_q=block_q,
+        alive=(None if alive is None
+               else alive.astype(jnp.float32).reshape(-1, 1)),
     )
     out_v, out_i = out_v[:nq], out_i[:nq]
     return (out_v[0], out_i[0]) if squeeze else (out_v, out_i)

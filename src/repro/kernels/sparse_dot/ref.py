@@ -121,6 +121,7 @@ def _retrieve_chunked_mxu(
     n: int,
     block_n: int,
     q_chunk: int,
+    alive=None,  # None or (N,) f32 1.0/0.0 row-liveness mask
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked streaming top-n over int8×int8 scores (generation 5).
 
@@ -130,7 +131,8 @@ def _retrieve_chunked_mxu(
     ``_quantize_panel``.  Per block: int8 gather, int32 accumulate (exact),
     then one f32 rescale (acc · q_scale) · (row_scale · inv_norm) — the
     same op order as the kernel's ``_mask_fold_merge`` fold, so the two
-    paths agree bit-for-bit.
+    paths agree bit-for-bit.  ``alive`` (segmented indexes' deletion mask)
+    rides the padding mask: dead rows score -inf exactly like padding.
     """
     N, k = q_values.shape
     nq = qp_i8.shape[0]
@@ -143,7 +145,7 @@ def _retrieve_chunked_mxu(
         bv, bi = jax.lax.map(
             lambda c: _retrieve_chunked_mxu(
                 q_values, indices, scales, inv_norms, c[0], c[1],
-                n=n, block_n=block_n, q_chunk=q_chunk,
+                n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
             ),
             (chunks_p, chunks_s),
         )
@@ -155,12 +157,16 @@ def _retrieve_chunked_mxu(
         indices = jnp.pad(indices, ((0, pad), (0, 0)))
         scales = jnp.pad(scales, (0, pad))
         inv_norms = jnp.pad(inv_norms, (0, pad))
+        if alive is not None:
+            alive = jnp.pad(alive, (0, pad))
     nb = (N + pad) // block_n
     vals_b = q_values.reshape(nb, block_n, k)
     idx_b = indices.reshape(nb, block_n, k)
     sc_b = scales.reshape(nb, block_n)
     inv_b = inv_norms.reshape(nb, block_n)
     ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
+    alive_b = (jnp.zeros((nb, 0)) if alive is None
+               else alive.reshape(nb, block_n))
 
     init = (
         jnp.full((nq, n), -jnp.inf, jnp.float32),
@@ -169,7 +175,7 @@ def _retrieve_chunked_mxu(
 
     def step(carry, blk):
         best_v, best_i = carry
-        bv, bi, bsc, binv, bids = blk
+        bv, bi, bsc, binv, bids, balive = blk
         bi = _widen_idx(bi)
         gathered = qp_i8[:, bi]                              # (Q, block_n, k) i8
         acc = jnp.sum(
@@ -177,7 +183,10 @@ def _retrieve_chunked_mxu(
         )                                                    # (Q, block_n) i32
         s = acc.astype(jnp.float32) * q_scales               # fold q scale
         s = s * (bsc * binv)[None]                           # fold cand rescale
-        s = jnp.where(bids[None] < N, s, -jnp.inf)           # mask padding
+        keep = bids[None] < N                                # mask padding
+        if alive is not None:
+            keep = keep & (balive[None] > 0.0)               # mask deletions
+        s = jnp.where(keep, s, -jnp.inf)
         cand_v = jnp.concatenate([best_v, s], axis=1)
         cand_i = jnp.concatenate(
             [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
@@ -186,7 +195,7 @@ def _retrieve_chunked_mxu(
         return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
 
     (best_v, best_i), _ = jax.lax.scan(
-        step, init, (vals_b, idx_b, sc_b, inv_b, ids_b)
+        step, init, (vals_b, idx_b, sc_b, inv_b, ids_b, alive_b)
     )
     return best_v, best_i
 
@@ -202,6 +211,7 @@ def retrieve_quantized_mxu_ref(
     n: int,
     block_n: int = 8192,
     q_chunk: int = 64,
+    alive=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Int8-scoring chunked streaming top-n (generation 5, APPROXIMATE).
 
@@ -215,7 +225,7 @@ def retrieve_quantized_mxu_ref(
     qp_i8, q_scales = _quantize_panel(q.astype(jnp.float32))
     return _retrieve_chunked_mxu(
         q_values, indices, scales, inv_norms, qp_i8, q_scales,
-        n=n, block_n=block_n, q_chunk=q_chunk,
+        n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
     )
 
 
@@ -234,6 +244,7 @@ def retrieve_quantized_mxu_sparse_q_ref(
     n: int,
     block_n: int = 8192,
     q_chunk: int = 64,
+    alive=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Int8-scoring × sparse query codes (generation 5, APPROXIMATE).
 
@@ -253,7 +264,7 @@ def retrieve_quantized_mxu_sparse_q_ref(
         bv, bi = jax.lax.map(
             lambda c: retrieve_quantized_mxu_sparse_q_ref(
                 q_values, indices, scales, inv_norms, c[0], c[1], h,
-                n=n, block_n=block_n, q_chunk=q_chunk,
+                n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
             ),
             (chunks_v, chunks_i),
         )
@@ -263,7 +274,7 @@ def retrieve_quantized_mxu_sparse_q_ref(
     )
     return _retrieve_chunked_mxu(
         q_values, indices, scales, inv_norms, qp_i8, q_scales,
-        n=n, block_n=block_n, q_chunk=q_chunk,
+        n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
     )
 
 
@@ -277,12 +288,15 @@ def _retrieve_chunked(
     n: int,
     block_n: int,
     q_chunk: int,
+    alive=None,  # None or (N,) f32 1.0/0.0 row-liveness mask
 ) -> tuple[jax.Array, jax.Array]:
     """Shared chunked streaming top-n (see retrieve_ref for the contract).
 
     When ``scales`` is given, ``values`` is int8 and ``indices`` may be
     int16: each (block_n, k) block is dequantized inside the scan step —
-    the per-block mirror of the fused kernel's VMEM dequant.
+    the per-block mirror of the fused kernel's VMEM dequant.  ``alive``
+    (segmented indexes' deletion mask) rides the padding mask: dead rows
+    score -inf exactly like padding, so they can never surface.
     """
     N, k = values.shape
     nq = q.shape[0]
@@ -293,7 +307,7 @@ def _retrieve_chunked(
         bv, bi = jax.lax.map(
             lambda qb: _retrieve_chunked(
                 values, indices, inv_norms, qb, scales,
-                n=n, block_n=block_n, q_chunk=q_chunk,
+                n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
             ),
             chunks,
         )
@@ -306,6 +320,8 @@ def _retrieve_chunked(
         inv_norms = jnp.pad(inv_norms, (0, pad))
         if scales is not None:
             scales = jnp.pad(scales, (0, pad))
+        if alive is not None:
+            alive = jnp.pad(alive, (0, pad))
     nb = (N + pad) // block_n
     vals_b = values.reshape(nb, block_n, k)
     idx_b = indices.reshape(nb, block_n, k)
@@ -313,6 +329,8 @@ def _retrieve_chunked(
     ids_b = jnp.arange(nb * block_n, dtype=jnp.int32).reshape(nb, block_n)
     scales_b = (jnp.zeros((nb, 0)) if scales is None
                 else scales.reshape(nb, block_n))
+    alive_b = (jnp.zeros((nb, 0)) if alive is None
+               else alive.reshape(nb, block_n))
 
     init = (
         jnp.full((nq, n), -jnp.inf, jnp.float32),
@@ -321,14 +339,17 @@ def _retrieve_chunked(
 
     def step(carry, blk):
         best_v, best_i = carry
-        bv, bi, binv, bids, bsc = blk
+        bv, bi, binv, bids, bsc, balive = blk
         if scales is not None:  # per-block dequant, never a full fp32 index
             bv = bv.astype(jnp.float32) * bsc[:, None]
             bi = _widen_idx(bi)
         gathered = q[:, bi]                                  # (Q, block_n, k)
         s = jnp.sum(gathered * bv[None].astype(q.dtype), axis=-1)
         s = (s * binv[None]).astype(jnp.float32)             # (Q, block_n)
-        s = jnp.where(bids[None] < N, s, -jnp.inf)           # mask padding
+        keep = bids[None] < N                                # mask padding
+        if alive is not None:
+            keep = keep & (balive[None] > 0.0)               # mask deletions
+        s = jnp.where(keep, s, -jnp.inf)
         cand_v = jnp.concatenate([best_v, s], axis=1)
         cand_i = jnp.concatenate(
             [best_i, jnp.broadcast_to(bids[None], s.shape)], axis=1
@@ -337,7 +358,7 @@ def _retrieve_chunked(
         return (v, jnp.take_along_axis(cand_i, p, axis=1)), None
 
     (best_v, best_i), _ = jax.lax.scan(
-        step, init, (vals_b, idx_b, inv_b, ids_b, scales_b)
+        step, init, (vals_b, idx_b, inv_b, ids_b, scales_b, alive_b)
     )
     return best_v, best_i
 
@@ -352,6 +373,7 @@ def retrieve_ref(
     n: int,
     block_n: int = 8192,
     q_chunk: int = 64,
+    alive=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked streaming top-n -> ((Q, n) norm-folded scores, (Q, n) ids).
 
@@ -362,7 +384,8 @@ def retrieve_ref(
     processed in chunks, so memory stays bounded for big batches.
     """
     return _retrieve_chunked(values, indices, inv_norms, q, None,
-                             n=n, block_n=block_n, q_chunk=q_chunk)
+                             n=n, block_n=block_n, q_chunk=q_chunk,
+                             alive=alive)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block_n", "q_chunk"))
@@ -376,6 +399,7 @@ def retrieve_quantized_ref(
     n: int,
     block_n: int = 8192,
     q_chunk: int = 64,
+    alive=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantized-index chunked streaming top-n (see module doc).
 
@@ -385,7 +409,8 @@ def retrieve_quantized_ref(
     (block_n, k) block at a time inside the scan.
     """
     return _retrieve_chunked(q_values, indices, inv_norms, q, scales,
-                             n=n, block_n=block_n, q_chunk=q_chunk)
+                             n=n, block_n=block_n, q_chunk=q_chunk,
+                             alive=alive)
 
 
 def _densify_rows(q_values: jax.Array, q_indices: jax.Array, h: int) -> jax.Array:
@@ -413,6 +438,7 @@ def retrieve_sparse_q_ref(
     n: int,
     block_n: int = 8192,
     q_chunk: int = 64,
+    alive=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sparse-query chunked streaming top-n -> ((Q, n) scores, (Q, n) ids).
 
@@ -433,7 +459,7 @@ def retrieve_sparse_q_ref(
         bv, bi = jax.lax.map(
             lambda c: retrieve_sparse_q_ref(
                 values, indices, inv_norms, c[0], c[1], h,
-                n=n, block_n=block_n, q_chunk=q_chunk,
+                n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
             ),
             (chunks_v, chunks_i),
         )
@@ -441,7 +467,7 @@ def retrieve_sparse_q_ref(
     q_dense = _densify_rows(q_values, q_indices, h)
     return retrieve_ref(
         values, indices, inv_norms, q_dense,
-        n=n, block_n=block_n, q_chunk=q_chunk,
+        n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
     )
 
 
@@ -460,6 +486,7 @@ def retrieve_quantized_sparse_q_ref(
     n: int,
     block_n: int = 8192,
     q_chunk: int = 64,
+    alive=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantized candidates × sparse query codes, chunked on both sides:
     query slabs (≤ q_chunk) densify row-wise, candidate blocks dequantize
@@ -480,7 +507,7 @@ def retrieve_quantized_sparse_q_ref(
         bv, bi = jax.lax.map(
             lambda c: retrieve_quantized_sparse_q_ref(
                 q_values, indices, scales, inv_norms, c[0], c[1], h,
-                n=n, block_n=block_n, q_chunk=q_chunk,
+                n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
             ),
             (chunks_v, chunks_i),
         )
@@ -488,7 +515,7 @@ def retrieve_quantized_sparse_q_ref(
     q_dense = _densify_rows(query_values, query_indices, h)
     return _retrieve_chunked(
         q_values, indices, inv_norms, q_dense, scales,
-        n=n, block_n=block_n, q_chunk=q_chunk,
+        n=n, block_n=block_n, q_chunk=q_chunk, alive=alive,
     )
 
 

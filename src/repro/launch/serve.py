@@ -74,6 +74,23 @@ failure via the inverted-index checksum):
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --candidate-fraction 0.1
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --stage1 host
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --two-stage --inject-fault corrupt-postings
+
+Mutable serving (ISSUE 9, ``--mutate``): the engine serves a
+``repro.core.segments.SegmentedIndex`` — the built index becomes the
+immutable quantized base, and a deterministic add/delete/compact trace is
+replayed through ``engine.apply_update`` before traffic: deletes fold into
+the kernels' masking epilogue (fully-deleted tiles are skipped on device),
+adds land in a small append-only delta segment served as an extra shard of
+the same streaming top-n, and ``compact`` folds survivors into a fresh
+base bit-identical to rebuilding from scratch.  Recall is reported against
+dense truth over the SURVIVING catalog (deleted rows excluded, added rows
+included).  ``--inject-fault corrupt-delta`` flips one bit in the delta
+segment; the per-segment CRC catches it at startup and serving sheds to
+base-only with the lost coverage reported:
+
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --mutate
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --mutate --self-check
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --mutate --inject-fault corrupt-delta
 """
 from __future__ import annotations
 
@@ -133,6 +150,7 @@ from repro.serving import (
     GuardedEngine,
     RetrievalEngine,
     corrupt_postings,
+    flip_delta_byte,
     flip_index_byte,
     poison_queries,
 )
@@ -183,6 +201,12 @@ def main(argv=None):
                          "jitted device union ('device'; 'auto' resolves "
                          "to it) or the bit-identical NumPy oracle "
                          "('host'); requires --two-stage")
+    ap.add_argument("--mutate", action="store_true",
+                    help="serve a segmented mutable index: the built index "
+                         "becomes the immutable base and a deterministic "
+                         "add/delete/compact trace is replayed through "
+                         "engine.apply_update before traffic (sparse mode, "
+                         "unsharded, single-stage)")
     ap.add_argument("--self-check", action="store_true",
                     help="verify the index content checksum and run a "
                          "canary batch against the reference contract "
@@ -213,6 +237,14 @@ def main(argv=None):
     if args.stage1 != "auto" and not args.two_stage:
         ap.error("--stage1 requires --two-stage (stage 1 is the "
                  "candidate-union step)")
+    if args.mutate and (args.shards > 1 or args.two_stage
+                        or args.mode != "sparse"):
+        ap.error("--mutate requires --mode sparse, --shards 1 and no "
+                 "--two-stage (the segmented index serves single-stage "
+                 "sparse, unsharded)")
+    if args.inject_fault == "corrupt-delta" and not args.mutate:
+        ap.error("--inject-fault corrupt-delta requires --mutate "
+                 "(the fault lives in the segmented index's delta)")
 
     use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
     path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
@@ -273,8 +305,15 @@ def main(argv=None):
         print(f"[faults] injecting {args.inject_fault} "
               f"(deterministic, shard 0)")
 
+    serve_index = index
+    if args.mutate:
+        from repro.core.segments import SegmentedIndex
+
+        serve_index = SegmentedIndex.from_index(index)
+        path = f"{path}+segmented"
+
     engine = RetrievalEngine(
-        state.params, index,
+        state.params, serve_index,
         mode=args.mode, use_kernel=use_kernel, mesh=mesh,
         precision=args.precision,
         stage=("two_stage" if args.two_stage else "single"),
@@ -289,6 +328,53 @@ def main(argv=None):
         print("[faults] corrupt-postings: planted out-of-range ids in "
               "every posting list; expecting per-request fallback to "
               "single-stage")
+
+    # ----------------------------------------------- mutable serving trace
+    all_emb, surv_ids, surv_emb = catalog, None, None
+    if args.mutate:
+        n0 = args.catalog
+        new_emb = clustered_embeddings(jax.random.PRNGKey(77), 24, d=cfg.d)
+        all_emb = jnp.concatenate([catalog, new_emb], axis=0)
+        new_codes = encode(state.params, new_emb, cfg.k)
+
+        def _rows(c, lo, hi):
+            return c._replace(values=c.values[lo:hi],
+                              indices=c.indices[lo:hi])
+
+        del0 = sorted({int(v) for v in
+                       np.linspace(0, n0 - 1, 7).astype(np.int64)})
+        engine.apply_update("delete", ids=del0)
+        engine.apply_update("add", codes=_rows(new_codes, 0, 16),
+                            ids=list(range(n0, n0 + 16)))
+        engine.apply_update("delete", ids=[n0 + 3, n0 + 11])
+        engine.apply_update("compact")
+        engine.apply_update("add", codes=_rows(new_codes, 16, 24),
+                            ids=list(range(n0 + 16, n0 + 24)))
+        more = [int(v) for v in np.asarray(engine.segments.alive_ids())
+                if int(v) < n0][:3]
+        engine.apply_update("delete", ids=more)
+        seg = engine.segments
+        n_del = len(del0) + 2 + len(more)
+        print(f"[mutate] trace replayed through apply_update: "
+              f"{n0} base rows, +24 added, -{n_del} deleted, 1 compaction "
+              f"-> {seg.n_alive} alive "
+              f"(base coverage {seg.base_coverage:.3f})")
+        # dense truth for recall is the SURVIVING catalog: deleted rows
+        # excluded, added rows included, positions translated to item ids
+        surv = np.asarray(seg.alive_ids())
+        surv_ids = jnp.asarray(surv)
+        surv_emb = jnp.asarray(np.asarray(all_emb)[surv])
+        if args.inject_fault == "corrupt-delta":
+            engine = RetrievalEngine(
+                state.params, flip_delta_byte(seg),
+                mode=args.mode, use_kernel=use_kernel,
+                precision=args.precision,
+            )
+            args.self_check = True
+            print("[faults] corrupt-delta: flipped one bit in the delta "
+                  "segment; expecting the per-segment CRC to catch it at "
+                  "startup and serving to shed to base-only")
+
     guard = GuardedEngine(
         engine,
         deadline_ms=args.deadline_ms,
@@ -311,9 +397,12 @@ def main(argv=None):
     # SAME engine at exact precision (the harness's reference path)
     exact_engine = None
     if args.precision == "int8" and guard.engine.precision == "int8":
+        seg_now = getattr(guard.engine, "segments", None)
         exact_engine = RetrievalEngine(
-            state.params, guard.engine.index,
-            mode=args.mode, use_kernel=use_kernel, mesh=mesh,
+            state.params,
+            seg_now if seg_now is not None else guard.engine.index,
+            mode=args.mode, use_kernel=use_kernel,
+            mesh=None if seg_now is not None else mesh,
         )
 
     lat, recalls, vs_exact = [], [], []
@@ -329,7 +418,11 @@ def main(argv=None):
         if status.degraded and r < 3:
             print(f"[guard] request {r} degraded -> {status.path} "
                   f"({status.fault})")
-        _, true_ids = top_n(score_dense(catalog, q), args.topn)
+        if args.mutate:
+            _, pos = top_n(score_dense(surv_emb, q), args.topn)
+            true_ids = jnp.take(surv_ids, pos)
+        else:
+            _, true_ids = top_n(score_dense(catalog, q), args.topn)
         recalls.append(recall_at_n(ids, true_ids))
         if exact_engine is not None:
             exact = exact_engine.retrieve_dense(q, args.topn)

@@ -50,6 +50,7 @@ from repro.core.quantized_codes import QuantizedCodes
 from repro.core.retrieval import (
     NORM_EPS, index_codes_f32, kernel_path, two_stage_retrieve,
 )
+from repro.core.segments import SegmentedIndex
 from repro.core.types import SparseCodes
 from repro.errors import EngineConfigError, InvalidQueryError
 from repro.kernels.fused_encode import fused_encode
@@ -415,6 +416,25 @@ class RetrievalEngine:
             raise EngineConfigError(
                 f"unknown stage {stage!r} (expected 'single' or 'two_stage')"
             )
+        self.segments: Optional[SegmentedIndex] = None
+        if isinstance(index, SegmentedIndex):
+            if mode != "sparse":
+                raise EngineConfigError(
+                    "a SegmentedIndex serves mode='sparse' only "
+                    "(reconstructed-space norms are dropped at wrap time)"
+                )
+            if stage != "single":
+                raise EngineConfigError(
+                    "a SegmentedIndex serves stage='single' only — the "
+                    "inverted index does not track segment mutations"
+                )
+            if mesh is not None:
+                raise EngineConfigError(
+                    "a SegmentedIndex does not compose with a mesh — "
+                    "segments already merge like shards on one device"
+                )
+            self.segments = index
+            index = index.base
         if stage1 not in ("auto", "device", "host"):
             raise EngineConfigError(
                 f"unknown stage1 {stage1!r} "
@@ -477,6 +497,50 @@ class RetrievalEngine:
             )
             self._two_stage_cache: dict = {}
 
+    # ------------------------------------------------------------- mutation
+    def apply_update(self, op: str, *, codes=None, ids=None):
+        """Apply one catalog mutation to a segmented engine, atomically.
+
+        ``op``: ``"add"`` (requires ``codes`` — fp32 (m, k) SparseCodes —
+        and ``ids``), ``"delete"`` (requires ``ids``), or ``"compact"``.
+        The lifecycle ops are functional, so the engine swaps to the new
+        ``SegmentedIndex`` only after the op succeeded — a rejected
+        mutation (``SegmentMutationError``) leaves serving untouched.
+        Returns the new ``SegmentedIndex``.
+
+        No jit cache is invalidated: the serving path deliberately never
+        bakes segment arrays into a per-engine jit (see
+        ``retrieve_dense``), and the module-level retrieve jits key on
+        array shapes — an add/compact that changes the delta shape
+        retraces exactly those, a delete (same shapes, new mask) reuses
+        everything.
+        """
+        if self.segments is None:
+            raise EngineConfigError(
+                "apply_update requires an engine constructed over a "
+                "SegmentedIndex (core.segments); this engine serves an "
+                f"immutable {type(self.index).__name__}"
+            )
+        if op == "add":
+            if codes is None or ids is None:
+                raise EngineConfigError("op='add' requires codes and ids")
+            seg = self.segments.add_items(codes, ids)
+        elif op == "delete":
+            if ids is None:
+                raise EngineConfigError("op='delete' requires ids")
+            seg = self.segments.delete_items(ids)
+        elif op == "compact":
+            seg = self.segments.compact()
+        else:
+            raise EngineConfigError(
+                f"unknown update op {op!r} "
+                "(expected 'add', 'delete' or 'compact')"
+            )
+        self.segments = seg
+        self.index = seg.base
+        self._inv_norms = mode_inv_norms(seg.base, self.mode)
+        return seg
+
     # ---------------------------------------------------------- request flow
     def encode_queries(self, x: jax.Array) -> SparseCodes:
         """Dense (Q?, d) embeddings -> fixed-k query codes.  Kernel path:
@@ -497,6 +561,12 @@ class RetrievalEngine:
         self, q: SparseCodes, n: int
     ) -> tuple[jax.Array, jax.Array]:
         """Serve a request whose queries are already compressed codes."""
+        if self.segments is not None:
+            n = validate_topn(n, self.segments.n_rows)
+            validate_query_codes(q, h=self.index.codes.dim)
+            return self.segments.retrieve(
+                q, n, use_fused=self.use_fused, precision=self.precision
+            )
         n = validate_topn(n, self.index.codes.n)
         validate_query_codes(q, h=self.index.codes.dim)
         if self.stage == "two_stage":
@@ -528,8 +598,27 @@ class RetrievalEngine:
         """The end-to-end request: dense embeddings in, top-n out, one jit."""
         d = None if self.params is None else self.params["w_enc"].shape[0]
         validate_dense_query(x, d=d)
-        validate_topn(n, self.index.codes.n)
+        validate_topn(
+            n,
+            self.index.codes.n if self.segments is None
+            else self.segments.n_rows,
+        )
         squeeze = x.ndim == 1
+        if self.segments is not None:
+            # segment content mutates between requests, so the request is
+            # never one monolithic jit that would bake segment arrays in
+            # as constants.  The encode is its own cached jit; the
+            # per-segment retrieves are module-level jits keyed on the
+            # segment array SHAPES, so steady-state serving after a
+            # mutation that preserves shapes recompiles nothing, and
+            # ``apply_update`` never has to invalidate anything.
+            fn = self._serve_cache.get("encode")
+            if fn is None:
+                fn = jax.jit(lambda xb: self.encode_queries(xb))
+                self._serve_cache["encode"] = fn
+            codes = fn(x[None] if squeeze else x)
+            scores, ids = self.retrieve_codes(codes, n)
+            return (scores[0], ids[0]) if squeeze else (scores, ids)
         if self.stage == "two_stage":
             # stage 1 runs on host — the request can't be one jit.  The
             # encode is its own cached jit; retrieve_codes then does the

@@ -18,6 +18,11 @@ measured quality bound, never crash, never silently serve wrong results:
                        engine's inverted-index posting lists (stage 1's
                        integrity check must trip, and the ladder must fall
                        back to the exact single-stage scan)
+    corrupt-delta      a single flipped bit in a segmented index's DELTA
+                       segment (the per-segment CRC in the startup
+                       self-check must catch it, and serving must shed to
+                       base-only with coverage < 1.0 — partial catalog,
+                       never corrupt bytes)
 
 Everything here is host-side and deterministic: the same ``FaultInjector``
 configuration produces the same failure at the same step every run — no
@@ -43,6 +48,7 @@ FAULTS = (
     "slow-shard",
     "kernel-exception",
     "corrupt-postings",
+    "corrupt-delta",
 )
 
 
@@ -134,6 +140,28 @@ def flip_index_byte(index: Index, *, byte: int = 0, bit: int = 0) -> Index:
     flat[byte % flat.size] ^= np.uint8(1 << (bit % 8))
     return index._replace(
         codes=codes._replace(**{primary: jnp.asarray(arr)})
+    )
+
+
+def flip_delta_byte(segments, *, byte: int = 0, bit: int = 0):
+    """A copy of a ``SegmentedIndex`` with ONE bit flipped in its delta
+    segment's stored code bytes (checksum left stale, exactly like
+    ``flip_index_byte``) — what in-place delta corruption looks like, so
+    the per-segment CRC in ``SegmentedIndex.verify`` must raise
+    ``IndexIntegrityError`` while the base still verifies clean.
+    """
+    from repro.core.segments import SegmentedIndex
+
+    if segments.delta is None:
+        raise ValueError(
+            "segments has no delta segment to corrupt — add items first"
+        )
+    return SegmentedIndex(
+        segments.base, segments.base_ids, segments.base_alive,
+        delta=flip_index_byte(segments.delta, byte=byte, bit=bit),
+        delta_codes=segments.delta_codes,
+        delta_ids=segments.delta_ids,
+        delta_alive=segments.delta_alive,
     )
 
 

@@ -192,13 +192,24 @@ def self_check(
     Raises ``SelfCheckError`` / ``IndexIntegrityError``; returns a
     ``SelfCheckReport`` when the engine is fit to accept traffic.
     """
-    verify_index(engine.index, require=require_checksum)
+    segments = getattr(engine, "segments", None)
+    if segments is not None:
+        # segmented engines verify EVERY segment's content CRC32 — a
+        # flipped byte in the small delta is caught with the same
+        # startup rigor as one in the base
+        segments.verify(require=require_checksum)
+    else:
+        verify_index(engine.index, require=require_checksum)
     if engine.inverted is not None:
         # two-stage engines also serve from posting lists: hold them to
         # the same build-time checksum contract so corrupt-postings is a
         # startup failure, not a first-request surprise
         verify_inverted_index(engine.inverted, require=require_checksum)
     canary_n = min(canary_n, engine.index.codes.n)
+    if segments is not None:
+        # dead rows never surface; an underfull canary would trip the
+        # finiteness check on its (-inf, -1) padding
+        canary_n = max(1, min(canary_n, segments.n_alive))
 
     xq, qcodes = _canary_queries(engine, canary_q)
     serve = ((lambda e: e.retrieve_dense(xq, canary_n)) if xq is not None
@@ -212,7 +223,17 @@ def self_check(
             "canary produced non-finite scores — index norms or params "
             "are poisoned"
         )
-    if np.any(i < 0) or np.any(i >= n_cand):
+    if segments is not None:
+        # segmented retrieval returns ITEM ids — the valid set is the
+        # alive ids, not a contiguous [0, N) range
+        valid = set(int(v) for v in segments.alive_ids())
+        bad = [int(v) for v in i.ravel() if int(v) not in valid]
+        if bad:
+            raise SelfCheckError(
+                f"canary returned ids outside the alive item set "
+                f"(first: {bad[0]})"
+            )
+    elif np.any(i < 0) or np.any(i >= n_cand):
         raise SelfCheckError(
             f"canary returned candidate ids outside [0, {n_cand})"
         )
@@ -229,7 +250,9 @@ def self_check(
     if (engine.use_fused or engine.mesh is not None) \
             and engine.stage == "single":
         ref = RetrievalEngine(
-            engine.params, engine.index, mode=engine.mode,
+            engine.params,
+            segments if segments is not None else engine.index,
+            mode=engine.mode,
             use_kernel=False, mesh=None, precision=engine.precision,
         )
         rs, ri = serve(ref)
@@ -342,6 +365,9 @@ class GuardedEngine:
             "requests": 0, "degraded": 0, "rejected": 0, "sanitized": 0,
         }
         self.self_check_report: Optional[SelfCheckReport] = None
+        # fraction of the alive catalog a segmented engine still serves
+        # (< 1.0 only after a corrupt-delta shed to base-only)
+        self._segment_coverage: float = 1.0
 
         if run_self_check:
             try:
@@ -349,6 +375,38 @@ class GuardedEngine:
                     engine, canary_q=canary_q, canary_n=canary_n
                 )
             except IndexIntegrityError as err:
+                seg = getattr(engine, "segments", None)
+                shed = None
+                if seg is not None and seg.delta is not None:
+                    # a segmented engine carries its own stale-but-verified
+                    # replica: the immutable base.  If the base's CRC still
+                    # holds, drop the corrupt delta and serve base-only —
+                    # partial coverage, never corrupt bytes.
+                    try:
+                        verify_index(seg.base)
+                    except IndexIntegrityError:
+                        pass  # base is poisoned too — fall to the replica
+                    else:
+                        shed = seg.base_only()
+                if shed is not None:
+                    engine = RetrievalEngine(
+                        engine.params, shed, mode=engine.mode,
+                        use_kernel=engine.use_kernel,
+                        precision=engine.precision,
+                    )
+                    self.self_check_report = self_check(
+                        engine, canary_q=canary_q, canary_n=canary_n
+                    )
+                    self._segment_coverage = float(seg.base_coverage)
+                    self.degraded_from_start = (
+                        f"delta segment failed integrity check ({err}); "
+                        "serving base-only at coverage "
+                        f"{self._segment_coverage:.3f}"
+                    )
+                    self.engine = engine
+                    self._ladder = self._build_ladder()
+                    self._rung_engines = {0: engine}
+                    return
                 if fallback_index is None:
                     raise
                 verify_index(fallback_index)
@@ -381,6 +439,7 @@ class GuardedEngine:
         so the ladder only contains genuinely distinct paths."""
         e = self.engine
         quantized = isinstance(e.index.codes, QuantizedCodes)
+        segmented = getattr(e, "segments", None) is not None
         cfgs = []
         if e.stage == "two_stage":
             # two-stage occupies the TOP rungs: fastest, but approximate
@@ -409,9 +468,12 @@ class GuardedEngine:
             cfgs.append(dict(mesh=None, precision="exact",
                              use_fused=e.use_fused, dequant=False,
                              stage="single"))
-        # the pre-floor rung: fp32 index, jnp reference path
+        # the pre-floor rung: fp32 index, jnp reference path.  Segmented
+        # engines keep the base's stored format here — dequantizing the
+        # base alone would break the quantized-delta parity contract, so
+        # their fp32 answer comes from the full-score floor instead.
         cfgs.append(dict(mesh=None, precision="exact",
-                         use_fused=False, dequant=quantized,
+                         use_fused=False, dequant=quantized and not segmented,
                          stage="single"))
         ladder, seen = [], set()
         for cfg in cfgs:
@@ -451,7 +513,16 @@ class GuardedEngine:
             eng = None
         else:
             e = self.engine
-            index = dequantize_index(e.index) if cfg["dequant"] else e.index
+            seg = getattr(e, "segments", None)
+            if seg is not None:
+                # rungs below a segmented primary serve the SAME segments
+                # (base + delta + deletion masks) at the rung's
+                # precision/backend — shedding a kernel generation must
+                # not silently resurrect deleted rows or drop the delta
+                index = seg
+            else:
+                index = (dequantize_index(e.index) if cfg["dequant"]
+                         else e.index)
             two = cfg.get("stage") == "two_stage"
             eng = RetrievalEngine(
                 e.params, index, mode=e.mode,
@@ -478,6 +549,24 @@ class GuardedEngine:
         is the oracle every other path is tested against)."""
         e = self.engine
         codes = sae.encode(e.params, x, e.k)
+        seg = getattr(e, "segments", None)
+        if seg is not None:
+            # the segmented floor full-scores the COMPACTED survivors
+            # (base + delta, dead rows dropped) so deleted ids cannot
+            # surface even here, then translates positions to item ids
+            comp = seg.compact()
+            index = comp.base
+            if isinstance(index.codes, QuantizedCodes):
+                index = dequantize_index(index)
+            scores = score_sparse(index, codes, use_kernel=False)
+            n_eff = min(n, index.codes.n)
+            vals, pos = top_n(scores, n_eff)
+            ids = jnp.asarray(np.asarray(comp.base_ids))[pos]
+            if n_eff < n:
+                pad = [(0, 0)] * (vals.ndim - 1) + [(0, n - n_eff)]
+                vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+                ids = jnp.pad(ids, pad, constant_values=-1)
+            return vals, ids
         index = (dequantize_index(e.index)
                  if isinstance(e.index.codes, QuantizedCodes) else e.index)
         if e.mode == "reconstructed":
@@ -568,7 +657,9 @@ class GuardedEngine:
                             else deadline_ms)
         self.counters["requests"] += 1
         try:
-            n = validate_topn(n, self.engine.index.codes.n)
+            seg = getattr(self.engine, "segments", None)
+            n = validate_topn(n, self.engine.index.codes.n if seg is None
+                              else seg.n_rows)
             d = (None if self.engine.params is None
                  else self.engine.params["w_enc"].shape[0])
             validate_dense_query(x, d=d)
@@ -612,6 +703,8 @@ class GuardedEngine:
                 faults.append(f"{name}: {type(err).__name__}: {err}")
                 continue
 
+            # a base-only shed caps coverage at the surviving fraction
+            coverage = min(float(coverage), self._segment_coverage)
             reasons = faults + ([fault] if fault else [])
             if self.degraded_from_start:
                 reasons.insert(0, self.degraded_from_start)

@@ -93,6 +93,19 @@ def test_benchmarks_smoke_writes_perf_record(forced_device_count):
     assert tsd["scanned_fraction"] == ts["scanned_fraction"], (tsd, ts)
     assert tsd["candidate_fraction"] == ts["candidate_fraction"], (tsd, ts)
     assert tsd["quality_n"] == 32, tsd
+    # ISSUE 9: the segmented mutable-index row serves the mutated catalog
+    # (base + delta + deletion masks).  Its recall_vs_exact is measured
+    # against a fresh build_index over the surviving rows — 1.0 by the
+    # bit-identity contract at ANY size — and compaction_parity is the
+    # checksum equality of compact() vs that rebuilt index, also
+    # size-independent, so both gate exactly even on the smoke record
+    sg = by_name["retrieval_segmented"]
+    assert sg["recall_vs_exact"] == 1.0, sg
+    assert sg["compaction_parity"] == 1, sg
+    assert sg["quality_n"] == 32, sg
+    assert sg["adds"] >= 1 and sg["deletes"] >= 1, sg
+    assert sg["n_alive"] == sg["n"] + sg["adds"] - sg["deletes"], sg
+    assert 0.0 < sg["base_coverage"] <= 1.0, sg
     # ISSUE 7: the candidate-generator row (inverted-index bench) appends
     # after retrieval_modes' wholesale rewrite — presence proves ordering
     inv = by_name["retrieval_inverted_index"]

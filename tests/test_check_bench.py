@@ -154,6 +154,39 @@ def test_two_stage_device_row_schema_floor_and_parity():
     assert any("divergence" in x for x in failures)
 
 
+def test_segmented_row_schema_floor_and_compaction_parity():
+    """ISSUE 9: the segmented-index row must carry its mutation-trace and
+    quality fields; recall_vs_exact shares the two-stage rows' absolute
+    0.95 floor at full size; compaction_parity must equal 1 EXACTLY at
+    ANY size — compact() reproducing the rebuilt index's checksum is a
+    bit-identity contract, not a statistic."""
+    sg = dict(recall_vs_exact=1.0, compaction_parity=1, quality_n=32,
+              n_alive=1034, adds=24, deletes=14, base_coverage=0.9923)
+    # missing mutation/quality fields fail the schema gate
+    f = by_name(rec("retrieval_segmented"))
+    failures, _ = compare({}, f, recall_tol=0.02)
+    assert any("schema" in x and "compaction_parity" in x for x in failures)
+    # complete full-size row passes
+    f = by_name(rec("retrieval_segmented", smoke=False, **sg))
+    failures, _ = compare(dict(f), f, recall_tol=0.02)
+    assert failures == []
+    # the absolute recall floor applies at full size, baseline or not
+    bad = by_name(rec("retrieval_segmented", smoke=False,
+                      **{**sg, "recall_vs_exact": 0.90}))
+    failures, _ = compare(dict(bad), bad, recall_tol=0.02)
+    assert any("quality floor" in x and "segmented" in x for x in failures)
+    # ... but smoke records are exempt from it
+    smoke = by_name(rec("retrieval_segmented", smoke=True,
+                        **{**sg, "recall_vs_exact": 0.90}))
+    failures, _ = compare(dict(smoke), smoke, recall_tol=0.02)
+    assert failures == []
+    # compaction parity gates exactly, smoke included
+    broken = by_name(rec("retrieval_segmented", smoke=True,
+                         **{**sg, "compaction_parity": 0}))
+    failures, _ = compare(dict(broken), broken, recall_tol=0.02)
+    assert any("compaction parity" in x for x in failures)
+
+
 def test_inverted_index_row_schema():
     """ISSUE 7: the candidate-generator row must carry its cap and scan
     fraction so the work-reduction claim stays auditable."""

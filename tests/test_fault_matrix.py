@@ -26,9 +26,10 @@ from repro.distributed.retrieve import (
 )
 from repro.errors import IndexIntegrityError, ShardFailureError
 from repro.launch.mesh import make_candidate_mesh
+from repro.core.segments import SegmentedIndex
 from repro.serving import (
     FAULTS, FaultInjector, GuardedEngine, RetrievalEngine, corrupt_postings,
-    flip_index_byte, poison_queries,
+    flip_delta_byte, flip_index_byte, poison_queries,
 )
 
 CFG = SAEConfig(d=32, h=128, k=8)
@@ -204,6 +205,20 @@ def test_fault_matrix_never_crashes(setup, forced_device_count):
         return RetrievalEngine(params, qindex, use_kernel=False,
                                precision="int8")
 
+    def corrupted_segments():
+        # flipped bit in the delta segment: the per-segment CRC catches
+        # it at startup and serving sheds to base-only (coverage < 1.0)
+        ecodes = encode(
+            params, jax.random.normal(jax.random.PRNGKey(9), (8, CFG.d)),
+            CFG.k)
+        seg = SegmentedIndex.from_index(qindex)
+        seg = seg.add_items(ecodes, ids=range(N, N + 8))
+        return GuardedEngine(
+            RetrievalEngine(params, flip_delta_byte(seg),
+                            use_kernel=False, precision="int8"),
+            run_self_check=True,
+        )
+
     def corrupted_two_stage():
         # planted out-of-range posting id: stage 1's integrity check
         # fires, the ladder sheds candidate generation and serves the
@@ -236,6 +251,7 @@ def test_fault_matrix_never_crashes(setup, forced_device_count):
             int8_engine(), injector=FaultInjector("kernel-exception")
         ),
         "corrupt-postings": lambda: GuardedEngine(corrupted_two_stage()),
+        "corrupt-delta": corrupted_segments,
     }
     assert set(matrix) == set(FAULTS)
 
@@ -304,3 +320,53 @@ def test_fault_matrix_specific_outcomes(setup):
     keep = [r for r in range(Q) if r != 1]
     np.testing.assert_array_equal(np.asarray(ids)[keep],
                                   np.asarray(hi)[keep])
+
+
+def test_corrupt_delta_sheds_to_base_only(setup):
+    """Pin the corrupt-delta recovery PATH: the per-segment CRC catches
+    the flipped bit at startup, serving sheds to base-only (the base IS
+    the stale-but-verified replica — no fallback_index needed), base
+    deletions stay masked, delta-only items become unservable, and
+    ``ServingStatus.coverage`` reports the surviving fraction."""
+    params, _, qindex, queries = setup
+    ecodes = encode(
+        params, jax.random.normal(jax.random.PRNGKey(9), (8, CFG.d)),
+        CFG.k)
+    seg = SegmentedIndex.from_index(qindex)
+    seg = seg.add_items(ecodes, ids=range(N, N + 8))
+    seg = seg.delete_items([5])
+
+    g = GuardedEngine(
+        RetrievalEngine(params, flip_delta_byte(seg),
+                        use_kernel=False, precision="int8"),
+        run_self_check=True,
+    )
+    assert "base-only" in g.degraded_from_start
+    assert g.engine.segments.delta is None
+
+    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    assert status.degraded and "base-only" in status.fault
+    assert status.coverage == pytest.approx(seg.base_coverage)
+    assert status.coverage == pytest.approx((N - 1) / (N - 1 + 8))
+    returned = set(np.asarray(ids).ravel().tolist())
+    assert not any(v >= N for v in returned)     # delta items are shed
+    assert 5 not in returned                     # deletions persist
+
+    # the answer is the healthy base-only engine's, bit for bit
+    wv, wi = RetrievalEngine(
+        params, seg.base_only(), use_kernel=False, precision="int8"
+    ).retrieve_dense(queries, TOPN)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
+
+    # a flipped BASE byte cannot shed (no verified segment left): with no
+    # fallback index the integrity error surfaces typed
+    base_bad = SegmentedIndex(
+        flip_index_byte(seg.base, byte=3, bit=1), seg.base_ids,
+        seg.base_alive, delta=seg.delta, delta_codes=seg.delta_codes,
+        delta_ids=seg.delta_ids, delta_alive=seg.delta_alive,
+    )
+    with pytest.raises(IndexIntegrityError):
+        GuardedEngine(RetrievalEngine(params, base_bad, use_kernel=False,
+                                      precision="int8"),
+                      run_self_check=True)

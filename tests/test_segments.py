@@ -1,0 +1,318 @@
+"""Segmented mutable index — the ISSUE 9 tier-1 parity gate.
+
+The binding contract (core/segments.py module doc): after ANY
+interleaving of add_items / delete_items / compact, ``retrieve`` over
+(base + delta + deletion masks) is BIT-identical — scores, ids, ties —
+to a fresh ``build_index`` over the surviving fp32 rows (base survivors
+then delta survivors, original order), across {exact, quantized, int8}
+x {ref, fused}; and ``compact()`` output is bit-identical, checksum
+included, to that rebuilt index.
+
+Every assertion here is ``assert_array_equal`` on purpose: the contract
+is bit-identity, not allclose.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SAEConfig, build_index, encode, init_params
+from repro.core.retrieval import NORM_EPS, verify_index
+from repro.core.segments import SegmentedIndex, concat_indexes
+from repro.core.types import SparseCodes
+from repro.errors import IndexIntegrityError, SegmentMutationError
+from repro.serving.engine import select_retrieve_fn
+
+CFG = SAEConfig(d=32, h=128, k=8)
+
+# (precision, quantize, use_fused): every serving generation segments
+# compose with — ref and fused must BOTH hold the oracle parity
+GRID = [
+    ("exact", False, False),
+    ("exact", False, True),
+    ("exact", True, False),
+    ("exact", True, True),
+    ("int8", True, False),
+    ("int8", True, True),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (300, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    queries = jax.random.normal(jax.random.PRNGKey(2), (7, CFG.d))
+    qcodes = encode(params, queries, CFG.k)
+    extra = jax.random.normal(jax.random.PRNGKey(3), (16, CFG.d))
+    ecodes = encode(params, extra, CFG.k)
+    return params, codes, qcodes, ecodes
+
+
+def _rows(codes: SparseCodes, rows) -> SparseCodes:
+    rows = np.asarray(rows)
+    return SparseCodes(
+        values=jnp.asarray(np.asarray(codes.values)[rows]),
+        indices=jnp.asarray(np.asarray(codes.indices)[rows]),
+        dim=codes.dim,
+    )
+
+
+def _ledger_codes(ledger: dict, ids) -> SparseCodes:
+    vals = np.stack([ledger[int(i)][0] for i in ids])
+    idx = np.stack([ledger[int(i)][1] for i in ids])
+    return SparseCodes(
+        values=jnp.asarray(vals), indices=jnp.asarray(idx), dim=CFG.h
+    )
+
+
+def _ledger_from(codes: SparseCodes, ids) -> dict:
+    vals, idx = np.asarray(codes.values), np.asarray(codes.indices)
+    return {int(i): (vals[p], idx[p]) for p, i in enumerate(ids)}
+
+
+def oracle_retrieve(index, item_ids, q, n, *, use_fused, precision):
+    """The independent oracle: the SAME serving generation run over an
+    immutable index rebuilt from the surviving fp32 rows, with the same
+    (-inf, -1) padding and post-merge query-norm division."""
+    squeeze = q.values.ndim == 1
+    qv = q.values[None] if squeeze else q.values
+    qi = q.indices[None] if squeeze else q.indices
+    quantized = hasattr(index.codes, "q_values")
+    fn = select_retrieve_fn(
+        sparse_query=True, quantized=quantized,
+        int8_scoring=precision == "int8", use_fused=use_fused,
+    )
+    if quantized:
+        cand = (index.codes.q_values, index.codes.indices,
+                index.codes.scales)
+    else:
+        cand = (index.codes.values, index.codes.indices)
+    inv = index.inv_sparse_norms
+    if inv is None:
+        inv = 1.0 / jnp.maximum(index.sparse_norms, NORM_EPS)
+    n_eff = min(n, index.codes.n)
+    vals, ids = fn(*cand, inv, qv, qi, index.codes.dim, n=n_eff)
+    ids = jnp.where(vals == -jnp.inf, -1, ids)
+    table = jnp.asarray(np.asarray(item_ids))
+    ids = jnp.where(ids >= 0, table[jnp.maximum(ids, 0)], -1)
+    if n_eff < n:
+        pad = [(0, 0)] * (vals.ndim - 1) + [(0, n - n_eff)]
+        vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+        ids = jnp.pad(ids, pad, constant_values=-1)
+    norm = jnp.linalg.norm(qv, axis=-1)
+    scores = vals / jnp.maximum(norm[..., None], NORM_EPS)
+    return (scores[0], ids[0]) if squeeze else (scores, ids)
+
+
+def assert_parity(seg, ledger, qcodes, n, *, use_fused, precision):
+    """seg.retrieve must be bit-identical to the rebuilt-index oracle."""
+    surv = np.asarray(seg.alive_ids())
+    rebuilt = build_index(_ledger_codes(ledger, surv),
+                          quantize=seg.quantized)
+    want_s, want_i = oracle_retrieve(
+        rebuilt, surv, qcodes, n, use_fused=use_fused, precision=precision
+    )
+    got_s, got_i = seg.retrieve(
+        qcodes, n, use_fused=use_fused, precision=precision
+    )
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    # deleted ids never appear — not even in padded slots
+    alive = set(int(v) for v in surv)
+    for v in np.asarray(got_i).ravel():
+        assert int(v) in alive or int(v) == -1
+
+
+# --------------------------------------------------- lifecycle parity grid
+@pytest.mark.parametrize("precision,quantize,use_fused", GRID)
+def test_lifecycle_parity(setup, precision, quantize, use_fused):
+    _, codes, qcodes, ecodes = setup
+    ledger = _ledger_from(codes, range(300))
+    seg = SegmentedIndex.from_index(build_index(codes, quantize=quantize))
+    check = lambda s: assert_parity(s, ledger, qcodes, 16,
+                                    use_fused=use_fused,
+                                    precision=precision)
+    check(seg)
+
+    seg = seg.delete_items([3, 7, 250])                  # base deletes
+    check(seg)
+
+    ledger.update(_ledger_from(_rows(ecodes, range(10)),
+                               range(1000, 1010)))
+    seg = seg.add_items(_rows(ecodes, range(10)),
+                        ids=range(1000, 1010))           # delta adds
+    check(seg)
+
+    seg = seg.delete_items([1004, 12])                   # delta + base
+    check(seg)
+
+    # delete-then-readd of the same item id: the dead base row stays
+    # masked, the NEW delta row serves under the old id
+    ledger[3] = (np.asarray(ecodes.values)[10],
+                 np.asarray(ecodes.indices)[10])
+    seg = seg.add_items(_rows(ecodes, [10]), ids=[3])
+    check(seg)
+
+    # compact: bit-identical (arrays AND checksum) to the rebuilt index
+    surv = np.asarray(seg.alive_ids())
+    rebuilt = build_index(_ledger_codes(ledger, surv), quantize=quantize)
+    comp = seg.compact()
+    assert comp.base.checksum == rebuilt.checksum
+    if quantize:
+        np.testing.assert_array_equal(
+            np.asarray(comp.base.codes.q_values),
+            np.asarray(rebuilt.codes.q_values))
+        np.testing.assert_array_equal(
+            np.asarray(comp.base.codes.scales),
+            np.asarray(rebuilt.codes.scales))
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(comp.base.codes.values),
+            np.asarray(rebuilt.codes.values))
+    np.testing.assert_array_equal(np.asarray(comp.base_ids), surv)
+    assert comp.delta is None and comp.base_alive.all()
+    check(comp)
+
+    # mutation continues across the compaction boundary
+    ledger.update(_ledger_from(_rows(ecodes, range(11, 14)),
+                               range(2000, 2003)))
+    seg2 = comp.add_items(_rows(ecodes, range(11, 14)),
+                          ids=range(2000, 2003))
+    seg2 = seg2.delete_items([2001, 30])
+    check(seg2)
+
+
+# --------------------------------------------------- underfull top-n (n > N)
+@pytest.mark.parametrize("precision,quantize,use_fused",
+                         [("exact", False, False), ("exact", True, True),
+                          ("int8", True, True)])
+def test_n_exceeds_surviving_rows(setup, precision, quantize, use_fused):
+    _, codes, qcodes, ecodes = setup
+    small = _rows(codes, range(12))
+    ledger = _ledger_from(small, range(12))
+    seg = SegmentedIndex.from_index(build_index(small, quantize=quantize))
+    seg = seg.delete_items([0, 4, 5, 9, 11])
+    ledger.update(_ledger_from(_rows(ecodes, [0, 1]), [100, 101]))
+    seg = seg.add_items(_rows(ecodes, [0, 1]), ids=[100, 101])
+    assert seg.n_alive == 9
+    assert_parity(seg, ledger, qcodes, 32,
+                  use_fused=use_fused, precision=precision)
+    s, i = seg.retrieve(qcodes, 32, use_fused=use_fused,
+                        precision=precision)
+    # exactly n_alive filled slots, the rest the (-inf, -1) contract
+    np.testing.assert_array_equal(np.asarray(i)[:, 9:], -1)
+    assert np.all(np.asarray(s)[:, 9:] == -np.inf)
+
+
+# ------------------------------------ whole-tile deletion + boundary ties
+@pytest.mark.parametrize("quantize", [False, True])
+def test_whole_tile_deleted_and_tie_across_boundary(setup, quantize):
+    """Deleting item ids 0..255 kills the fused path's entire first
+    candidate tile (BLOCK_N=256) — the kernels' whole-tile skip must not
+    drop survivors.  A delta row with codes IDENTICAL to an alive base
+    row then ties across the segment boundary; the merge must resolve it
+    exactly like the rebuilt oracle (base survivor first)."""
+    _, codes, qcodes, _ = setup
+    ledger = _ledger_from(codes, range(300))
+    seg = SegmentedIndex.from_index(build_index(codes, quantize=quantize))
+    seg = seg.delete_items(list(range(256)))             # tile 0, entirely
+    dup = _rows(codes, [260])                            # == alive base row
+    ledger.update(_ledger_from(dup, [5000]))
+    seg = seg.add_items(dup, ids=[5000])
+    for use_fused in (False, True):
+        assert_parity(seg, ledger, qcodes, 16, use_fused=use_fused,
+                      precision="int8" if quantize else "exact")
+        s, i = seg.retrieve(qcodes, seg.n_alive, use_fused=use_fused,
+                            precision="exact")
+        i = np.asarray(i)
+        # the tied pair surfaces base-id-first in every row's list
+        for row in range(i.shape[0]):
+            pos = {int(v): p for p, v in enumerate(i[row])}
+            assert pos[260] < pos[5000]
+
+
+# ----------------------------------------------------------- typed errors
+def test_lifecycle_typed_errors(setup):
+    _, codes, _, ecodes = setup
+    seg = SegmentedIndex.from_index(build_index(_rows(codes, range(20))))
+    one = _rows(ecodes, [0])
+    with pytest.raises(SegmentMutationError, match="already alive"):
+        seg.add_items(one, ids=[5])
+    with pytest.raises(SegmentMutationError, match="unique within one add"):
+        seg.add_items(_rows(ecodes, [0, 1]), ids=[100, 100])
+    with pytest.raises(SegmentMutationError, match="rows for"):
+        seg.add_items(one, ids=[100, 101])
+    with pytest.raises(SegmentMutationError, match="dim"):
+        seg.add_items(one._replace(dim=CFG.h * 2), ids=[100])
+    with pytest.raises(SegmentMutationError, match="not alive"):
+        seg.delete_items([999])
+    with pytest.raises(SegmentMutationError, match="listed twice"):
+        seg.delete_items([5, 5])
+    gone = seg.delete_items([5])
+    with pytest.raises(SegmentMutationError, match="not alive"):
+        gone.delete_items([5])
+    with pytest.raises(SegmentMutationError, match="unique"):
+        SegmentedIndex.from_index(build_index(_rows(codes, range(4))),
+                                  ids=[0, 1, 1, 2])
+
+
+# ---------------------------------------------- shed + per-segment verify
+def test_base_only_coverage_and_per_segment_verify(setup):
+    from repro.serving import flip_delta_byte
+
+    _, codes, _, ecodes = setup
+    seg = SegmentedIndex.from_index(
+        build_index(_rows(codes, range(30)), quantize=True))
+    with pytest.raises(ValueError, match="no delta"):
+        flip_delta_byte(seg)
+    seg = seg.add_items(_rows(ecodes, range(10)), ids=range(100, 110))
+    seg = seg.delete_items([2, 103])
+    assert seg.n_alive == 38 and seg.n_rows == 40
+    assert seg.base_coverage == pytest.approx(29 / 38)
+
+    shed = seg.base_only()
+    assert shed.delta is None
+    assert set(shed.alive_ids()) == set(range(30)) - {2}
+
+    bad = flip_delta_byte(seg)
+    with pytest.raises(IndexIntegrityError):
+        bad.verify()
+    verify_index(bad.base)               # the base is still pristine
+    assert seg.verify()                  # and the original untouched
+
+
+def test_concat_indexes_rejects_mixed_formats(setup):
+    _, codes, _, _ = setup
+    a = build_index(_rows(codes, range(8)))
+    b = build_index(_rows(codes, range(8, 16)), quantize=True)
+    with pytest.raises(SegmentMutationError, match="concatenate"):
+        concat_indexes(a, b)
+
+
+# ------------------------------------------------------- engine lifecycle
+def test_engine_apply_update_serves_current_segments(setup):
+    from repro.serving import RetrievalEngine
+
+    params, codes, qcodes, ecodes = setup
+    ledger = _ledger_from(codes, range(300))
+    seg = SegmentedIndex.from_index(build_index(codes, quantize=True))
+    eng = RetrievalEngine(params, seg, use_kernel=True, precision="int8")
+
+    eng.apply_update("delete", ids=[1, 2, 3])
+    ledger.update(_ledger_from(_rows(ecodes, range(4)), range(400, 404)))
+    eng.apply_update("add", codes=_rows(ecodes, range(4)),
+                     ids=range(400, 404))
+    want = eng.segments.retrieve(qcodes, 10, use_fused=True,
+                                 precision="int8")
+    got = eng.retrieve_codes(qcodes, 10)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert_parity(eng.segments, ledger, qcodes, 10,
+                  use_fused=True, precision="int8")
+
+    eng.apply_update("compact")
+    assert eng.segments.delta is None
+    assert eng.index is eng.segments.base     # base swap went through
+    assert_parity(eng.segments, ledger, qcodes, 10,
+                  use_fused=True, precision="int8")

@@ -1,0 +1,128 @@
+"""Hypothesis property tests for the segmented mutable index (ISSUE 9).
+
+Random mutation traces — interleaved add/delete/compact with drawn
+sizes, drawn victims, and drawn top-n (including n > survivors) — must
+preserve the bit-identity contract against the rebuilt-index oracle,
+and ids that were EVER deleted (and not re-added) must never appear in
+any result, padded slots included.
+
+Ref path only (use_fused=False): the deterministic grid in
+tests/test_segments.py pins the fused kernels on the same contract;
+here Hypothesis explores trace space, where interpret-mode kernel
+recompiles per drawn shape would dominate the run time.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import numpy as np
+from hypothesis import given
+
+from repro.core import SAEConfig, build_index, encode, init_params
+from repro.core.segments import SegmentedIndex
+
+from test_segments import (
+    _ledger_codes,
+    _ledger_from,
+    _rows,
+    oracle_retrieve,
+)
+
+hypothesis.settings.register_profile(
+    "repro_segments", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("repro_segments")
+
+CFG = SAEConfig(d=16, h=64, k=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (40, CFG.d))
+    codes = encode(params, corpus, CFG.k)
+    queries = jax.random.normal(jax.random.PRNGKey(2), (5, CFG.d))
+    qcodes = encode(params, queries, CFG.k)
+    pool = encode(params,
+                  jax.random.normal(jax.random.PRNGKey(3), (24, CFG.d)),
+                  CFG.k)
+    return codes, qcodes, pool
+
+
+@given(st.data())
+def test_random_trace_matches_rebuilt_oracle(setup, data):
+    codes, qcodes, pool = setup
+    quantize = data.draw(st.booleans(), label="quantize")
+    precision = ("int8" if quantize and data.draw(st.booleans(),
+                                                  label="int8")
+                 else "exact")
+    # test_segments helpers key the ledger codes dim off their module's
+    # CFG.h; rebuild with OUR dim
+    ledger = {k: v for k, v in _ledger_from(codes, range(40)).items()}
+    seg = SegmentedIndex.from_index(build_index(codes, quantize=quantize))
+
+    deleted_now: set[int] = set()
+    next_id, pool_pos = 1000, 0
+    n_ops = data.draw(st.integers(1, 6), label="n_ops")
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(["add", "delete", "compact"]),
+                       label="op")
+        if op == "add" and pool_pos < 24:
+            m = min(data.draw(st.integers(1, 4), label="m"),
+                    24 - pool_pos)
+            rows = list(range(pool_pos, pool_pos + m))
+            # sometimes resurrect a previously deleted id instead of a
+            # fresh one — the delete-then-readd path
+            ids = []
+            for _ in range(m):
+                if deleted_now and data.draw(st.booleans(),
+                                             label="readd"):
+                    rid = sorted(deleted_now)[0]
+                    deleted_now.discard(rid)
+                    ids.append(rid)
+                else:
+                    ids.append(next_id)
+                    next_id += 1
+            chunk = _rows(pool, rows)
+            ledger.update(_ledger_from(chunk, ids))
+            seg = seg.add_items(chunk, ids=ids)
+            pool_pos += m
+        elif op == "delete":
+            alive = [int(v) for v in seg.alive_ids()]
+            if len(alive) <= 4:
+                continue
+            k = data.draw(st.integers(1, min(4, len(alive) - 4)),
+                          label="k")
+            picks = data.draw(
+                st.lists(st.integers(0, len(alive) - 1),
+                         min_size=k, max_size=k, unique=True),
+                label="victims")
+            victims = [alive[j] for j in picks]
+            deleted_now.update(victims)
+            seg = seg.delete_items(victims)
+        elif op == "compact":
+            seg = seg.compact()
+            assert seg.delta is None and seg.base_alive.all()
+
+    n = data.draw(st.integers(1, seg.n_alive + 10), label="n")
+    surv = np.asarray(seg.alive_ids())
+    rebuilt = build_index(_ledger_codes_dim(ledger, surv, CFG.h),
+                          quantize=quantize)
+    want_s, want_i = oracle_retrieve(rebuilt, surv, qcodes, n,
+                                     use_fused=False, precision=precision)
+    got_s, got_i = seg.retrieve(qcodes, n, use_fused=False,
+                                precision=precision)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+    # deleted ids NEVER appear — padded slots are -1, nothing else leaks
+    returned = {int(v) for v in np.asarray(got_i).ravel()}
+    assert not (returned & deleted_now)
+    assert returned <= {int(v) for v in surv} | {-1}
+
+
+def _ledger_codes_dim(ledger, ids, dim):
+    out = _ledger_codes(ledger, ids)
+    return out._replace(dim=dim)

@@ -329,3 +329,85 @@ def test_guard_startup_self_check_and_fallback(setup):
                              use_kernel=False).retrieve_dense(queries, 8)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
+
+
+# ------------------------------------------------- segmented engines (ISSUE 9)
+def _segmented(params, index, *, adds=8, deletes=(5, 9)):
+    """A mutated SegmentedIndex over ``index``: ``adds`` delta rows with
+    ids starting at N, then ``deletes`` masked out of the base."""
+    from repro.core.segments import SegmentedIndex
+
+    n = index.codes.n
+    extra = jax.random.normal(jax.random.PRNGKey(7), (adds, CFG.d))
+    ecodes = encode(params, extra, CFG.k)
+    seg = SegmentedIndex.from_index(index)
+    seg = seg.add_items(ecodes, ids=range(n, n + adds))
+    if deletes:
+        seg = seg.delete_items(list(deletes))
+    return seg
+
+
+def test_segmented_self_check_per_segment_crc(setup):
+    """self_check verifies EVERY segment's CRC32: a healthy segmented
+    kernel engine passes with the int8 bit-identity contract intact, and
+    one flipped delta byte is a typed startup failure."""
+    from repro.serving import flip_delta_byte
+
+    params, _, qindex, _ = setup
+    seg = _segmented(params, qindex)
+    rep = self_check(RetrievalEngine(params, seg, use_kernel=True,
+                                     precision="int8"))
+    assert rep.kernel_vs_ref == "bit-identical"
+    bad = RetrievalEngine(params, flip_delta_byte(seg),
+                          use_kernel=True, precision="int8")
+    with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
+        self_check(bad)
+
+
+def test_segmented_ladder_serves_segments_on_every_rung(setup):
+    """Rungs below a segmented primary keep serving (base + delta +
+    masks) — stepping down a generation must not resurrect deleted rows
+    or drop the delta — and the base-alone dequant rung is suppressed."""
+    params, _, qindex, _ = setup
+    seg = _segmented(params, qindex)
+    g = GuardedEngine(
+        RetrievalEngine(params, seg, use_kernel=False, precision="int8"))
+    assert g.ladder == ("int8-ref", "quantized-ref", "fp32-fullscore")
+    for step in range(len(g.ladder) - 1):
+        assert g._engine_for(step).segments is not None
+
+
+def test_segmented_floor_serves_survivors_only(setup):
+    """The full-score floor for a segmented engine scores the COMPACTED
+    survivors: deleted ids cannot surface even on the last rung, added
+    ids can, and the ids agree with the engine's own exact answer."""
+    params, index, _, queries = setup
+    seg = _segmented(params, index)
+    g = GuardedEngine(
+        RetrievalEngine(params, seg, use_kernel=False),
+        injector=FaultInjector("kernel-exception"),
+    )
+    assert g.ladder == ("fp32-ref", "fp32-fullscore")
+    scores, ids, status = g.retrieve_dense(queries, 16)
+    assert status.path == "fp32-fullscore" and status.degraded
+    alive = set(int(v) for v in seg.alive_ids())
+    assert set(np.asarray(ids).ravel().tolist()) <= alive | {-1}
+    assert {5, 9}.isdisjoint(set(np.asarray(ids).ravel().tolist()))
+    wv, wi = RetrievalEngine(params, seg,
+                             use_kernel=False).retrieve_dense(queries, 16)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(wv),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segmented_topn_admission_spans_all_segments(setup):
+    """Admission caps top-n at the segmented index's TOTAL physical rows
+    (base + delta), not the base alone."""
+    params, index, _, queries = setup
+    seg = _segmented(params, index, adds=8)
+    g = GuardedEngine(RetrievalEngine(params, seg, use_kernel=False))
+    n_total = seg.n_rows
+    scores, ids = g.retrieve_dense(queries, n_total)[:2]
+    assert np.asarray(ids).shape == (queries.shape[0], n_total)
+    with pytest.raises(InvalidQueryError, match="top-n"):
+        g.retrieve_dense(queries, n_total + 1)

@@ -54,3 +54,58 @@ def test_distributed_matches_single_device():
     )
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "DISTRIBUTED TOPK OK" in proc.stdout
+
+
+# ------------------------------------------- sharded_top_n ragged shards
+# Regression (ISSUE 9 satellite): a local slice narrower than n — a tiny
+# delta segment next to a huge base, or an uneven final shard — must pad
+# out with the (-inf, -1) contract before the local top-k.  Previously
+# lax.top_k rejected k > width outright.
+def _run_sharded(scores, ids, n):
+    from repro.core.retrieval import sharded_top_n
+
+    f = jax.vmap(lambda s, i: sharded_top_n(s, i, n, axis_name="shards"),
+                 axis_name="shards")
+    return f(scores, ids)
+
+
+def test_sharded_top_n_ragged_width_matches_global():
+    n_shards, width, n = 4, 16, 32         # width < n: the ragged case
+    scores = jax.random.normal(jax.random.PRNGKey(7), (n_shards, width))
+    ids = jnp.arange(n_shards * width).reshape(n_shards, width)
+    fv, fi = _run_sharded(scores, ids, n)
+    want_v, want_i = jax.lax.top_k(scores.reshape(-1), n)
+    for shard in range(n_shards):          # merged list replicated
+        np.testing.assert_array_equal(np.asarray(fv[shard]),
+                                      np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(fi[shard]),
+                                      np.asarray(want_i))
+
+
+def test_sharded_top_n_ragged_underfull_pads_neg_inf():
+    # total candidates < n: the padding itself must surface as (-inf, -1)
+    n_shards, width, n = 4, 5, 32
+    scores = jax.random.normal(jax.random.PRNGKey(8), (n_shards, width))
+    ids = jnp.arange(n_shards * width).reshape(n_shards, width)
+    fv, fi = _run_sharded(scores, ids, n)
+    total = n_shards * width
+    want_v = np.sort(np.asarray(scores).ravel())[::-1]
+    for shard in range(n_shards):
+        v, i = np.asarray(fv[shard]), np.asarray(fi[shard])
+        np.testing.assert_array_equal(v[:total], want_v)
+        assert np.all(v[total:] == -np.inf) and np.all(i[total:] == -1)
+        assert set(i[:total]) == set(range(total))
+
+
+def test_sharded_top_n_ragged_lookup_table_variant():
+    # the 1-D (N_loc,) id-table calling convention must pad identically
+    n_shards, width, n = 2, 3, 8
+    scores = jax.random.normal(jax.random.PRNGKey(9), (n_shards, width))
+    ids = (jnp.arange(width)[None, :]
+           + width * jnp.arange(n_shards)[:, None])
+    fv, fi = _run_sharded(scores, ids, n)
+    flat = np.asarray(scores).ravel()
+    order = np.argsort(-flat, kind="stable")
+    np.testing.assert_array_equal(np.asarray(fi[0])[: flat.size],
+                                  order.astype(np.int32))
+    assert np.all(np.asarray(fv[0])[flat.size:] == -np.inf)

@@ -15,14 +15,18 @@ GATES (exit 1):
     not comparable), any ``recall*`` field may not drop by more than
     ``--recall-tol`` (default 0.02; CPU runs are seeded and
     deterministic, so a real drop means a serving-path change);
-  * two-stage quality floor — the ``retrieval_two_stage`` and
-    ``retrieval_two_stage_device`` rows' ``recall_vs_exact`` must be
-    >= 0.95 ABSOLUTE at full benchmark size (baseline-independent;
-    smoke records are exempt);
+  * quality floor — the ``retrieval_two_stage``,
+    ``retrieval_two_stage_device`` and ``retrieval_segmented`` rows'
+    ``recall_vs_exact`` must be >= 0.95 ABSOLUTE at full benchmark size
+    (baseline-independent; smoke records are exempt);
   * two-stage host/device parity — ``retrieval_two_stage_device``'s
     ``recall_vs_exact`` must EQUAL ``retrieval_two_stage``'s (the
     device union is bit-identical to the host oracle by contract; no
-    tolerance, no smoke exemption).
+    tolerance, no smoke exemption);
+  * segmented compaction parity — ``retrieval_segmented``'s
+    ``compaction_parity`` must equal 1 EXACTLY (compact() reproduces a
+    fresh build_index over the surviving rows checksum-for-checksum;
+    bit-identity is size-independent, so no smoke exemption).
 
 WARN-ONLY (exit 0):
   * ``us_per_call`` movement in either direction — CPU-runner timing is
@@ -72,12 +76,25 @@ EXTRA_REQUIRED = {
         "quality_n",
     },
     "retrieval_inverted_index": {"cap", "scan_frac"},
+    # segmented mutable index (ISSUE 9): recall_vs_exact carries the
+    # same absolute floor as the two-stage rows; compaction_parity is a
+    # hard equality gate (see compare()) — compact() must reproduce the
+    # rebuilt index's content checksum bit-for-bit at ANY size
+    "retrieval_segmented": {
+        "recall_vs_exact", "compaction_parity", "quality_n",
+        "n_alive", "adds", "deletes", "base_coverage",
+    },
 }
 
-# absolute quality floor for the two-stage row at full benchmark size
-# (smoke-size records skip it — tiny corpora + a briefly trained SAE make
-# absolute recall noise; the relative baseline gate still applies)
+# absolute quality floor for the two-stage and segmented rows at full
+# benchmark size (smoke-size records skip it — tiny corpora + a briefly
+# trained SAE make absolute recall noise; the relative baseline gate
+# still applies)
 TWO_STAGE_RECALL_FLOOR = 0.95
+RECALL_FLOOR_ROWS = (
+    "retrieval_two_stage", "retrieval_two_stage_device",
+    "retrieval_segmented",
+)
 # records are only comparable within an identical configuration
 CONFIG_FIELDS = ("path", "shards", "n", "q", "topn")
 
@@ -102,16 +119,28 @@ def compare(baseline: dict, fresh: dict, recall_tol: float
         if missing:
             failures.append(f"schema: row `{name}` missing {sorted(missing)}")
 
-    for ts_name in ("retrieval_two_stage", "retrieval_two_stage_device"):
+    for ts_name in RECALL_FLOOR_ROWS:
         ts = fresh.get(ts_name)
         if ts is not None and not ts.get("smoke") \
                 and "recall_vs_exact" in ts \
                 and ts["recall_vs_exact"] < TWO_STAGE_RECALL_FLOOR:
             failures.append(
-                f"two-stage quality floor: `{ts_name}`."
+                f"quality floor: `{ts_name}`."
                 f"recall_vs_exact {ts['recall_vs_exact']:.4f} < "
                 f"{TWO_STAGE_RECALL_FLOOR} at full benchmark size"
             )
+
+    # segmented compaction parity: compact() must reproduce a fresh
+    # build_index over the surviving rows checksum-for-checksum.  Bit
+    # -identity does not depend on corpus size, so smoke records gate too.
+    seg = fresh.get("retrieval_segmented")
+    if seg is not None and "compaction_parity" in seg \
+            and seg["compaction_parity"] != 1:
+        failures.append(
+            "segmented compaction parity: `retrieval_segmented`."
+            f"compaction_parity {seg['compaction_parity']!r} != 1 — "
+            "compact() must rebuild the index bit-for-bit"
+        )
 
     # host/device two-stage parity: the device union is bit-identical to
     # the host oracle by contract, so the two rows' recall_vs_exact must
