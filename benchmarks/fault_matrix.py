@@ -49,6 +49,7 @@ from repro.data import clustered_embeddings
 from repro.launch.mesh import make_candidate_mesh
 from repro.optim import AdamConfig
 from repro.serving import (
+    EngineConfig,
     FaultInjector,
     GuardedEngine,
     RetrievalEngine,
@@ -86,30 +87,26 @@ def main(smoke: bool = False):
     fp_index = build_index(codes, params)
 
     # the exactness oracle every entry's recall is measured against
-    exact_engine = RetrievalEngine(params, qindex)
+    exact_engine = RetrievalEngine(qindex, params)
     exact = exact_engine.retrieve_dense(queries, TOPN)
 
     n_shards = min(4, jax.device_count())
     mesh = make_candidate_mesh(n_shards) if n_shards > 1 else None
 
     def guarded(precision="exact", sharded=False, **guard_kw):
-        eng = RetrievalEngine(
-            params, qindex, precision=precision,
-            mesh=mesh if sharded else None,
-        )
+        eng = RetrievalEngine(qindex, params, config=EngineConfig(
+            precision=precision, mesh=mesh if sharded else None))
         return GuardedEngine(eng, backoff_s=0.001, **guard_kw)
 
     def corrupted_two_stage():
-        eng = RetrievalEngine(params, qindex, stage="two_stage",
-                              candidate_fraction=0.5)
+        eng = RetrievalEngine(qindex, params, config=EngineConfig(
+            stage="two_stage", candidate_fraction=0.5))
         eng.inverted = corrupt_postings(eng.inverted)
         return eng
 
     def healthy_twin(precision="exact", sharded=False):
-        eng = RetrievalEngine(
-            params, qindex, precision=precision,
-            mesh=mesh if sharded else None,
-        )
+        eng = RetrievalEngine(qindex, params, config=EngineConfig(
+            precision=precision, mesh=mesh if sharded else None))
         return eng.retrieve_dense(queries, TOPN)
 
     # (fault-entry name, build guard, request queries, needs_mesh)
@@ -118,8 +115,9 @@ def main(smoke: bool = False):
         # fp32 fallback replica serves (exact precision on the fallback)
         ("corrupt-index",
          lambda: GuardedEngine(
-             RetrievalEngine(params, flip_index_byte(qindex, byte=11, bit=5),
-                             precision="int8"),
+             RetrievalEngine(flip_index_byte(qindex, byte=11, bit=5),
+                             params,
+                             config=EngineConfig(precision="int8")),
              run_self_check=True, fallback_index=fp_index, backoff_s=0.001),
          queries, False),
         # NaN planted in the batch -> sanitized at admission, served degraded
@@ -164,7 +162,7 @@ def main(smoke: bool = False):
             continue
         guard = build()
         t0 = time.time()
-        scores, ids, status = guard.retrieve_dense(req, TOPN)
+        scores, ids, status, *_ = guard.retrieve_dense(req, TOPN)
         jax.block_until_ready(ids)
         us = (time.time() - t0) * 1e6
         lat_us.append(us)

@@ -121,7 +121,7 @@ from repro.core.segments import SegmentedIndex
 from repro.launch.mesh import make_candidate_mesh
 from repro.data import clustered_embeddings
 from repro.optim import AdamConfig
-from repro.serving import RetrievalEngine
+from repro.serving import EngineConfig, RetrievalEngine
 
 D, H, K = 256, 1024, 16
 N, Q, TOPN = 16384, 64, 10
@@ -182,7 +182,8 @@ def main(smoke: bool = False):
     )
     # serving-engine whole request (ISSUE 3): dense embeddings in, top-n
     # out, encode folded into the kernel chain — no dense-query HBM trip
-    engine = RetrievalEngine(params, index, mode="sparse")
+    engine = RetrievalEngine(index, params,
+                             config=EngineConfig(mode="sparse"))
     e2e_fn = lambda q: engine.retrieve_dense(q, topn)  # noqa: E731
     # quantized serving (ISSUE 4), at the paper's k=32 so the byte ratio is
     # the one the paper's storage arithmetic is quoted at (h < 65536 ->
@@ -191,15 +192,17 @@ def main(smoke: bool = False):
     K32 = 32
     codes32 = encode(params, corpus, K32)
     qindex32 = build_index(codes32, params, quantize=True)
-    qengine = RetrievalEngine(params, qindex32, mode="sparse")
+    qengine = RetrievalEngine(qindex32, params,
+                              config=EngineConfig(mode="sparse"))
     quant_fn = lambda q: qengine.retrieve_dense(q, topn)  # noqa: E731
     q_index_bytes = int(qindex32.codes.nbytes_logical)
     q_index_bytes_fp = int(codes32.nbytes_logical)
     # generation 5 (ISSUE 5): the same quantized request at precision="int8"
     # — candidate tiles scored int8×int8, never dequantized; approximate,
     # measured against the exact quantized engine below
-    qengine_mxu = RetrievalEngine(params, qindex32, mode="sparse",
-                                  precision="int8")
+    qengine_mxu = RetrievalEngine(
+        qindex32, params,
+        config=EngineConfig(mode="sparse", precision="int8"))
     mxu_fn = lambda q: qengine_mxu.retrieve_dense(q, topn)  # noqa: E731
     # two-stage serving (ISSUE 7): inverted-index candidate union (host)
     # feeding the fused re-rank over only the gathered rows.  The budget
@@ -207,17 +210,17 @@ def main(smoke: bool = False):
     # at smoke sizes the posting union is small enough that the budget
     # covers it entirely (recall_vs_exact is then exactly 1.0)
     cand_frac = 0.4 if smoke else 0.3
-    ts_engine = RetrievalEngine(params, index, mode="sparse",
-                                stage="two_stage",
-                                candidate_fraction=cand_frac,
-                                stage1="host")
+    ts_engine = RetrievalEngine(
+        index, params,
+        config=EngineConfig(mode="sparse", stage="two_stage",
+                            candidate_fraction=cand_frac, stage1="host"))
     ts_fn = lambda q: ts_engine.retrieve_dense(q, topn)  # noqa: E731
     # device stage 1 (ISSUE 8): the same request with the candidate union
     # as one jitted batched pass — bit-identical output, no host loop
-    ts_dev_engine = RetrievalEngine(params, index, mode="sparse",
-                                    stage="two_stage",
-                                    candidate_fraction=cand_frac,
-                                    stage1="device")
+    ts_dev_engine = RetrievalEngine(
+        index, params,
+        config=EngineConfig(mode="sparse", stage="two_stage",
+                            candidate_fraction=cand_frac, stage1="device"))
     ts_dev_fn = lambda q: ts_dev_engine.retrieve_dense(q, topn)  # noqa: E731
     # segmented mutable serving (ISSUE 9): wrap the same fp32 index as
     # the base segment and replay a deterministic add/delete/compact
@@ -234,8 +237,8 @@ def main(smoke: bool = False):
                            indices=jnp.asarray(np.asarray(c.indices)[rows]),
                            dim=c.dim)
 
-    seg_engine = RetrievalEngine(params, SegmentedIndex.from_index(index),
-                                 mode="sparse")
+    seg_engine = RetrievalEngine(SegmentedIndex.from_index(index), params,
+                                 config=EngineConfig(mode="sparse"))
     seg_engine.apply_update(
         "delete", ids=sorted({int(v) for v in np.linspace(0, n - 1, n_del)}))
     seg_engine.apply_update("add", codes=_code_rows(extra_codes, range(16)),
@@ -309,7 +312,7 @@ def main(smoke: bool = False):
 
     # engine whole-request must be BIT-identical to the composed
     # encode()+retrieve() request it replaces
-    v_e, i_e = e2e_fn(queries)
+    v_e, i_e, *_ = e2e_fn(queries)
     assert (np.asarray(i_e) == np.asarray(i_1)).all(), "engine ids differ"
     assert (np.asarray(v_e) == np.asarray(v_1)).all(), "engine scores differ"
     by_name = {r["name"]: r for r in records}
@@ -320,10 +323,10 @@ def main(smoke: bool = False):
     # quantized serving must be BIT-identical to the engine over the
     # dequantized index (same quantized values) — quantization error is a
     # build-time choice, never a serving-path one
-    dengine = RetrievalEngine(params, dequantize_index(qindex32),
-                              mode="sparse")
-    v_q, i_q = quant_fn(queries)
-    v_d, i_d = dengine.retrieve_dense(queries, topn)
+    dengine = RetrievalEngine(dequantize_index(qindex32), params,
+                              config=EngineConfig(mode="sparse"))
+    v_q, i_q, *_ = quant_fn(queries)
+    v_d, i_d, *_ = dengine.retrieve_dense(queries, topn)
     assert (np.asarray(i_q) == np.asarray(i_d)).all(), "quantized ids differ"
     assert (np.asarray(v_q) == np.asarray(v_d)).all(), "quantized scores differ"
     ratio_b = q_index_bytes / q_index_bytes_fp
@@ -386,8 +389,8 @@ def main(smoke: bool = False):
     # end to end (the device union is a drop-in, not an approximation of
     # an approximation) — so its record inherits the host row's quality
     # verbatim, and check_bench fails any host/device recall divergence
-    v_th, i_th = ts_fn(queries)
-    v_td, i_td = ts_dev_fn(queries)
+    v_th, i_th, *_ = ts_fn(queries)
+    v_td, i_td, *_ = ts_dev_fn(queries)
     assert (np.asarray(i_td) == np.asarray(i_th)).all(), \
         "device-stage-1 ids differ from host stage 1"
     assert (np.asarray(v_td) == np.asarray(v_th)).all(), \
@@ -423,9 +426,10 @@ def main(smoke: bool = False):
         indices=jnp.concatenate([codes.indices, extra_codes.indices]),
         dim=codes.dim)
     rebuilt = build_index(_code_rows(all_codes, surv))
-    reb_engine = RetrievalEngine(params, rebuilt, mode="sparse")
+    reb_engine = RetrievalEngine(rebuilt, params,
+                                 config=EngineConfig(mode="sparse"))
     seg32 = seg_engine.retrieve_dense(queries, 32)
-    v_rb, pos_rb = reb_engine.retrieve_dense(queries, 32)
+    v_rb, pos_rb, *_ = reb_engine.retrieve_dense(queries, 32)
     seg_quality = retrieval_quality(
         seg32, (v_rb, jnp.take(jnp.asarray(surv), pos_rb)))
     parity = int(seg.compact().base.checksum == rebuilt.checksum)

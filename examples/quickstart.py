@@ -92,10 +92,11 @@ def main():
     #    scratch), so only (Q, k) codes and (Q, n) results touch HBM.
     #    Results are bit-identical to the composed encode() + retrieve()
     #    calls above, on every backend and mesh.
-    from repro.serving import RetrievalEngine
+    from repro.serving import EngineConfig, RetrievalEngine
 
-    engine = RetrievalEngine(state.params, index, mode="sparse")
-    vals_e, ids_e = engine.retrieve_dense(queries, 10)
+    engine = RetrievalEngine(index, state.params,
+                             config=EngineConfig(mode="sparse"))
+    vals_e, ids_e, *_ = engine.retrieve_dense(queries, 10)
     assert (np.asarray(ids_e) == np.asarray(ids_served)).all()
     print(f"RetrievalEngine.retrieve_dense: recall@10 {recall(ids_e):.3f} "
           f"(bit-identical to the composed encode+retrieve path; "
@@ -113,12 +114,14 @@ def main():
     from repro.core import dequantize_index
 
     qindex = build_index(codes, state.params, quantize=True)
-    engine_q = RetrievalEngine(state.params, qindex, mode="sparse")
-    vals_q, ids_q = engine_q.retrieve_dense(queries, 10)
+    engine_q = RetrievalEngine(qindex, state.params,
+                               config=EngineConfig(mode="sparse"))
+    vals_q, ids_q, *_ = engine_q.retrieve_dense(queries, 10)
     engine_dq = RetrievalEngine(
-        state.params, dequantize_index(qindex), mode="sparse"
+        dequantize_index(qindex), state.params,
+        config=EngineConfig(mode="sparse"),
     )
-    vals_dq, ids_dq = engine_dq.retrieve_dense(queries, 10)
+    vals_dq, ids_dq, *_ = engine_dq.retrieve_dense(queries, 10)
     assert (np.asarray(ids_q) == np.asarray(ids_dq)).all()
     assert (np.asarray(vals_q) == np.asarray(vals_dq)).all()
     q_mb = qindex.codes.nbytes_logical / 2**20

@@ -138,13 +138,15 @@ def rank_displacement(ids, ref_ids, n: Optional[int] = None) -> float:
 def retrieval_quality(approx, exact, n: Optional[int] = None) -> dict:
     """The bundle: compare two ``(scores, ids)`` retrieval outputs.
 
-    ``approx`` / ``exact``: (scores, ids) pairs exactly as returned by
-    ``retrieve`` / ``RetrievalEngine.retrieve_dense`` — (n,) or (Q, n).
+    ``approx`` / ``exact``: (scores, ids) pairs as returned by
+    ``retrieve``, or ``RetrievalResponse``s from
+    ``RetrievalEngine.retrieve_dense`` (scores/ids ride positions 0/1 of
+    both) — (n,) or (Q, n).
     Returns ``{"n", "recall", "score_mae", "rank_displacement"}`` with
     ``n`` the effective (clamped) comparison width.
     """
-    a_scores, a_ids = approx
-    e_scores, e_ids = exact
+    a_scores, a_ids = approx[0], approx[1]
+    e_scores, e_ids = exact[0], exact[1]
     a_ids2, e_ids2 = _as_2d(a_ids), _as_2d(e_ids)
     width = min(a_ids2.shape[1], e_ids2.shape[1])
     if n is not None:

@@ -570,7 +570,9 @@ def retrieve(
     (``repro.serving.engine.RetrievalEngine.retrieve_codes``): constructs a
     per-call engine and serves one request through it.  Long-lived callers
     should hold a ``RetrievalEngine`` instead and use ``retrieve_dense``
-    for whole requests (dense embeddings in).
+    for whole requests (dense embeddings in; returns a typed
+    ``RetrievalResponse``) — this adapter deliberately keeps the plain
+    tuple contract.
 
     q: (Q?, k) query codes; returns (Q?, n) scores and int32 ids.  The
     (Q, N) score matrix is never materialized on either path, and in
@@ -591,12 +593,15 @@ def retrieve(
     quality vs ``"exact"`` is a measured bound (``repro.core.eval``),
     everything else about the call is unchanged.
     """
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import RetrievalEngine
 
     engine = RetrievalEngine(
-        params, index,
-        mode=mode, use_kernel=use_kernel, mesh=mesh, shard_axis=shard_axis,
-        precision=precision,
+        index, params,
+        config=EngineConfig(
+            mode=mode, use_kernel=use_kernel, mesh=mesh,
+            shard_axis=shard_axis, precision=precision,
+        ),
     )
     return engine.retrieve_codes(q, n)
 

@@ -5,6 +5,7 @@ from repro.data.synthetic import (
     token_batch,
 )
 from repro.data.loader import ShardedLoader, LoaderState
+from repro.data.sampler import ZipfianQueryStream
 
 __all__ = [
     "clustered_embeddings",
@@ -12,5 +13,6 @@ __all__ = [
     "random_graph",
     "token_batch",
     "ShardedLoader",
+    "ZipfianQueryStream",
     "LoaderState",
 ]

@@ -1,9 +1,15 @@
-"""Fanout neighbor sampler (GraphSAGE-style) for sampled GNN training.
+"""Host-side numpy samplers: graph fanout sampling for GNN training and
+traffic-shaped query sampling for serving loadtests.
 
-Host-side numpy: builds a CSR adjacency once, then samples fixed-fanout
-k-hop neighborhoods producing *static-shaped* padded arrays (seed nodes →
-hop-1 fanout f1 → hop-2 fanout f2 …), which is what the jitted train step
-consumes.  Padding uses node -1 / edge mask conventions.
+* Fanout neighbor sampler (GraphSAGE-style): builds a CSR adjacency
+  once, then samples fixed-fanout k-hop neighborhoods producing
+  *static-shaped* padded arrays (seed nodes → hop-1 fanout f1 → hop-2
+  fanout f2 …), which is what the jitted train step consumes.  Padding
+  uses node -1 / edge mask conventions.
+* ``ZipfianQueryStream`` (ISSUE 10): replays a Zipf-popular user
+  population as retrieval queries — the arrival-content model the
+  microbatching loadtest (``repro.launch.loadtest``) drives offered
+  load with.
 """
 from __future__ import annotations
 
@@ -11,6 +17,58 @@ import dataclasses
 from typing import Dict, Sequence
 
 import numpy as np
+
+
+@dataclasses.dataclass
+class ZipfianQueryStream:
+    """Deterministic traffic-shaped query replay over a user population.
+
+    ``users`` is a (U, d) matrix of per-user preference embeddings (the
+    loadtest builds it with ``data.synthetic.clustered_embeddings`` so
+    queries share the catalog's cluster structure).  Request frequencies
+    follow the same bounded-Zipf construction ``clustered_embeddings``
+    uses for cluster sizes — rank r is drawn with the exponentiated
+    -uniform trick ``clip(u^(-1/a) - 1, 0, U-1)`` — so a few head users
+    dominate the stream and the long tail trickles, which is exactly the
+    arrival pattern that makes microbatch coalescing measurable.  Each
+    request is its user's embedding plus per-request Gaussian jitter
+    (session context), so repeated head-user hits are near-duplicate but
+    not identical queries.
+
+    Host-side numpy and fully seeded: two streams with the same
+    ``(users, zipf_a, jitter, seed)`` emit identical request sequences —
+    the loadtest's determinism contract.
+    """
+
+    users: np.ndarray            # (U, d) preference embeddings
+    zipf_a: float = 1.1
+    jitter: float = 0.05
+    seed: int = 0
+
+    def __post_init__(self):
+        self.users = np.asarray(self.users, dtype=np.float32)
+        if self.users.ndim != 2 or self.users.shape[0] < 1:
+            raise ValueError(
+                f"users: expected a (U, d) matrix, got {self.users.shape}"
+            )
+        if self.zipf_a <= 0:
+            raise ValueError(f"zipf_a must be > 0, got {self.zipf_a}")
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self, count: int) -> tuple[np.ndarray, np.ndarray]:
+        """The next ``count`` requests: (user_ids (count,), queries
+        (count, d) float32), advancing the stream."""
+        n_users = self.users.shape[0]
+        u = self._rng.uniform(1e-6, 1.0, size=count)
+        ranks = np.clip(
+            u ** (-1.0 / self.zipf_a) - 1.0, 0, n_users - 1
+        ).astype(np.int64)
+        q = self.users[ranks]
+        if self.jitter > 0:
+            q = q + self.jitter * self._rng.standard_normal(
+                q.shape
+            ).astype(np.float32)
+        return ranks, q.astype(np.float32)
 
 
 @dataclasses.dataclass

@@ -61,6 +61,20 @@ class DeadlineExceededError(RetrievalError, TimeoutError):
     """The per-request deadline budget ran out at the recorded stage."""
 
 
+class QueueFullError(RetrievalError):
+    """The microbatching front shed this request at admission: the queue
+    already holds ``queued_rows`` >= its ``max_queue_rows`` bound.  The
+    typed overload signal — callers retry (with backoff) or downgrade;
+    the server never buffers unboundedly.  ``queued_rows`` /
+    ``max_queue_rows`` let callers size their backoff."""
+
+    def __init__(self, message: str, *, queued_rows: int = 0,
+                 max_queue_rows: int = 0):
+        super().__init__(message)
+        self.queued_rows = queued_rows
+        self.max_queue_rows = max_queue_rows
+
+
 class ShardFailureError(RetrievalError):
     """A candidate shard failed to answer.  ``shard`` is the failing
     shard's mesh position when known, else None."""

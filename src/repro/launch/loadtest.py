@@ -1,0 +1,330 @@
+"""Traffic-shaped serving loadtest (ISSUE 10 tentpole).
+
+Replays a Zipfian user/query distribution (``data.sampler
+.ZipfianQueryStream`` over ``data.synthetic.clustered_embeddings`` user
+preferences) against the microbatching serving front
+(``serving.batcher.MicrobatchServer`` wrapping a ``GuardedEngine``), and
+reports what a single cold ``us_per_call`` number cannot: latency
+percentiles, throughput, batch occupancy and shed rate under sustained
+concurrent load.
+
+Two drivers, both fully seeded on the request-content side:
+
+* **closed loop** — ``--concurrency`` workers, each submitting its next
+  request the moment the previous one completes: measures the system's
+  sustainable throughput and the latency it costs.
+* **open loop** — requests arrive on a Poisson process at
+  ``--offered-load`` rps regardless of completions (the honest overload
+  model): measures queueing delay, and the shed rate once the offered
+  load exceeds what coalescing can absorb.  Latency is measured from the
+  *scheduled arrival*, so queue buildup is charged to the system, not
+  hidden in the driver.
+
+Results land wholesale in a schema-gated ``BENCH_serving.json``
+(``tools/check_bench.py --schema serving``: schema/row-set/shed-rate
+gate, latency warn-only — CPU-runner timing is noise):
+
+    PYTHONPATH=src python -m repro.launch.loadtest --smoke
+    PYTHONPATH=src python -m repro.launch.loadtest --catalog 50000 \
+        --requests 2000 --offered-load 300 --max-wait-us 2000
+
+Engine knobs ride the shared ``EngineConfig.from_flags`` namespace, so
+``--quantized --precision int8``, ``--two-stage``, ``--shards N`` etc.
+mean exactly what they mean in ``repro.launch.serve``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import threading
+import time
+
+
+def _force_host_devices_from_argv() -> None:
+    """``--shards N`` on CPU needs N visible devices before jax imports —
+    same trick as ``repro.launch.serve`` (see there)."""
+    n = None
+    for i, tok in enumerate(sys.argv):
+        try:
+            if tok == "--shards":
+                n = int(sys.argv[i + 1])
+            elif tok.startswith("--shards="):
+                n = int(tok.split("=", 1)[1])
+        except (IndexError, ValueError):
+            return
+    if n is None:
+        return
+    flag = "xla_force_host_platform_device_count"
+    if n > 1 and flag not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"{os.environ.get('XLA_FLAGS', '')} --{flag}={n}"
+        ).strip()
+
+
+if __name__ == "__main__":
+    _force_host_devices_from_argv()
+
+import numpy as np
+import jax
+
+from repro.core import SAEConfig, build_index, encode, init_train_state, train_step
+from repro.data import ZipfianQueryStream, clustered_embeddings
+from repro.errors import QueueFullError
+from repro.optim import AdamConfig
+from repro.serving import (
+    EngineConfig,
+    GuardedEngine,
+    MicrobatchServer,
+    RetrievalEngine,
+    path_name,
+)
+
+
+# --------------------------------------------------------------- drivers
+class _Slot:
+    """One in-flight open-loop request: scheduled arrival + completion."""
+
+    __slots__ = ("sched", "future", "done_t", "shed")
+
+    def __init__(self, sched: float):
+        self.sched = sched
+        self.future = None
+        self.done_t = None
+        self.shed = False
+
+
+def run_open_loop(server: MicrobatchServer, queries: np.ndarray, *,
+                  offered_rps: float, topn: int, seed: int = 0) -> dict:
+    """Poisson arrivals at ``offered_rps``; latency from scheduled
+    arrival; sheds counted, not retried (the honest overload picture)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / offered_rps, size=len(queries))
+    sched = np.cumsum(gaps)
+    slots = [_Slot(s) for s in sched]
+    t0 = time.monotonic()
+    for q, slot in zip(queries, slots):
+        now = time.monotonic()
+        wait = (t0 + slot.sched) - now
+        if wait > 0:
+            time.sleep(wait)
+        try:
+            slot.future = server.submit(q, topn)
+        except QueueFullError:
+            slot.shed = True
+            continue
+
+        def _stamp(fut, slot=slot):
+            slot.done_t = time.monotonic()
+
+        slot.future.add_done_callback(_stamp)
+    for slot in slots:
+        if slot.future is not None:
+            slot.future.result(timeout=120)
+    wall = time.monotonic() - t0
+    lats, statuses = [], []
+    for slot in slots:
+        if slot.shed:
+            continue
+        lats.append(slot.done_t - (t0 + slot.sched))
+        statuses.append(slot.future.result().status)
+    return dict(
+        kind="open", lats_s=lats, statuses=statuses, wall_s=wall,
+        submitted=len(queries), shed=sum(s.shed for s in slots),
+        offered_rps=float(offered_rps),
+    )
+
+
+def run_closed_loop(server: MicrobatchServer, queries: np.ndarray, *,
+                    concurrency: int, topn: int) -> dict:
+    """``concurrency`` workers in lock-step with completions — measures
+    sustainable throughput; queues stay bounded by construction."""
+    cursor = {"i": 0}
+    lock = threading.Lock()
+    lats: list[float] = [None] * len(queries)
+    statuses: list = [None] * len(queries)
+    shed = {"count": 0}
+
+    def worker():
+        while True:
+            with lock:
+                i = cursor["i"]
+                if i >= len(queries):
+                    return
+                cursor["i"] = i + 1
+            t_s = time.monotonic()
+            try:
+                resp = server.serve(queries[i], topn, timeout=120)
+            except QueueFullError:
+                with lock:
+                    shed["count"] += 1
+                continue
+            lats[i] = time.monotonic() - t_s
+            statuses[i] = resp.status
+
+    t0 = time.monotonic()
+    threads = [threading.Thread(target=worker) for _ in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    done_lats = [v for v in lats if v is not None]
+    done_status = [s for s in statuses if s is not None]
+    return dict(
+        kind="closed", lats_s=done_lats, statuses=done_status, wall_s=wall,
+        submitted=len(queries), shed=shed["count"],
+        offered_rps=(len(done_lats) / wall if wall > 0 else 0.0),
+    )
+
+
+def summarize(result: dict, server: MicrobatchServer, *,
+              extra: dict) -> dict:
+    """One ``BENCH_serving.json`` row from a driver result + the server's
+    panel counters."""
+    lats_ms = np.asarray(result["lats_s"], dtype=np.float64) * 1e3
+    stats = server.stats()
+    completed = int(lats_ms.size)
+    degraded = sum(1 for s in result["statuses"] if s.degraded)
+    paths = {s.path for s in result["statuses"]}
+    rec = {
+        "name": f"serving_{result['kind']}_loop",
+        "p50_ms": float(np.percentile(lats_ms, 50)) if completed else 0.0,
+        "p95_ms": float(np.percentile(lats_ms, 95)) if completed else 0.0,
+        "p99_ms": float(np.percentile(lats_ms, 99)) if completed else 0.0,
+        "throughput_rps": (completed / result["wall_s"]
+                           if result["wall_s"] > 0 else 0.0),
+        "offered_rps": result["offered_rps"],
+        "occupancy_mean": stats["occupancy_mean"],
+        "shed_rate": (result["shed"] / result["submitted"]
+                      if result["submitted"] else 0.0),
+        "requests": result["submitted"],
+        "completed": completed,
+        "degraded": degraded,
+        "panels": stats["panels"],
+        "paths_seen": sorted(paths),
+    }
+    rec.update(extra)
+    return rec
+
+
+# ------------------------------------------------------------------ main
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    EngineConfig.add_flags(ap)
+    ap.add_argument("--catalog", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--h", type=int, default=1024)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--users", type=int, default=2000,
+                    help="Zipf-popular user population size")
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    ap.add_argument("--jitter", type=float, default=0.05,
+                    help="per-request Gaussian jitter on the user embedding")
+    ap.add_argument("--requests", type=int, default=600,
+                    help="requests per driver")
+    ap.add_argument("--topn", type=int, default=20)
+    ap.add_argument("--offered-load", type=float, default=300.0,
+                    help="open-loop Poisson arrival rate (requests/s)")
+    ap.add_argument("--concurrency", type=int, default=16,
+                    help="closed-loop worker count")
+    ap.add_argument("--max-wait-us", type=float, default=2000.0,
+                    help="microbatch coalescing deadline for the oldest "
+                         "queued request")
+    ap.add_argument("--max-queue-rows", type=int, default=256,
+                    help="admission bound: queued rows beyond this shed "
+                         "with a typed QueueFullError")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (same schema, smoke-tagged rows)")
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=pathlib.Path("BENCH_serving.json"))
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.catalog = min(args.catalog, 2000)
+        args.users = min(args.users, 200)
+        args.requests = min(args.requests, 80)
+        args.train_steps = min(args.train_steps, 20)
+        args.offered_load = min(args.offered_load, 200.0)
+        args.concurrency = min(args.concurrency, 8)
+    try:
+        engine_cfg = EngineConfig.from_flags(args)
+    except Exception as e:  # EngineConfigError -> clean CLI message
+        ap.error(str(e))
+
+    # ------------------------------------------------------- build stack
+    cfg = SAEConfig(d=args.d, h=args.h, k=args.k)
+    key = jax.random.PRNGKey(args.seed)
+    catalog = clustered_embeddings(key, args.catalog, d=cfg.d)
+    print(f"[loadtest] training CompresSAE ({cfg.d}->{cfg.h}, k={cfg.k}) "
+          f"on {args.catalog} embeddings")
+    state = init_train_state(cfg, jax.random.PRNGKey(args.seed + 1))
+    step = jax.jit(lambda s, b: train_step(s, b, cfg, AdamConfig(lr=3e-3)))
+    for i in range(args.train_steps):
+        idx = jax.random.randint(
+            jax.random.PRNGKey(100 + i),
+            (min(8192, args.catalog),), 0, args.catalog,
+        )
+        state, _ = step(state, catalog[idx])
+    codes = encode(state.params, catalog, cfg.k)
+    index = build_index(codes, state.params, quantize=args.quantized)
+    engine = RetrievalEngine(index, state.params, config=engine_cfg)
+    guard = GuardedEngine(engine)
+    print(f"[loadtest] path={path_name(engine)} catalog={args.catalog} "
+          f"users={args.users} zipf_a={args.zipf_a} topn={args.topn}")
+
+    users = np.asarray(
+        clustered_embeddings(jax.random.PRNGKey(args.seed + 2),
+                             args.users, d=cfg.d)
+    )
+    extra = {
+        "path": path_name(engine),
+        "shards": args.shards,
+        "n": args.catalog,
+        "users": args.users,
+        "zipf_a": args.zipf_a,
+        "topn": args.topn,
+        "max_wait_us": args.max_wait_us,
+        "max_queue_rows": args.max_queue_rows,
+        "smoke": bool(args.smoke),
+    }
+
+    records = []
+    for kind in ("closed", "open"):
+        # a fresh stream (same seed) and a fresh server per driver: both
+        # drivers replay the SAME deterministic request sequence, and the
+        # occupancy/panel counters are per-driver
+        stream = ZipfianQueryStream(users, zipf_a=args.zipf_a,
+                                    jitter=args.jitter, seed=args.seed + 3)
+        _, queries = stream.sample(args.requests)
+        with MicrobatchServer(guard, max_wait_us=args.max_wait_us,
+                              max_queue_rows=args.max_queue_rows) as server:
+            server.warmup(args.topn)
+            if kind == "closed":
+                result = run_closed_loop(server, queries,
+                                         concurrency=args.concurrency,
+                                         topn=args.topn)
+            else:
+                result = run_open_loop(server, queries,
+                                       offered_rps=args.offered_load,
+                                       topn=args.topn, seed=args.seed + 4)
+            rec = summarize(result, server, extra=extra)
+        records.append(rec)
+        print(f"[loadtest] {rec['name']}: p50 {rec['p50_ms']:.1f} ms  "
+              f"p95 {rec['p95_ms']:.1f} ms  p99 {rec['p99_ms']:.1f} ms  "
+              f"{rec['throughput_rps']:.0f} rps "
+              f"(offered {rec['offered_rps']:.0f})  "
+              f"occupancy {rec['occupancy_mean']:.2f}  "
+              f"shed {rec['shed_rate']:.3f}  "
+              f"panels {rec['panels']}")
+
+    args.out.write_text(json.dumps(records, indent=2) + "\n")
+    print(f"[loadtest] wrote {len(records)} records -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

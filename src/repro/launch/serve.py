@@ -91,6 +91,18 @@ base-only with the lost coverage reported:
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --mutate
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --mutate --self-check
     PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --mutate --inject-fault corrupt-delta
+
+Microbatched loadtest (ISSUE 10, ``--loadtest``): instead of the fixed
+recall loop, drive the same hardened stack through the microbatching
+front (``repro.serving.MicrobatchServer``) with Zipfian closed-loop
+traffic — concurrent single-row requests coalesced into BLOCK_Q-aligned
+panels (``--max-wait-us`` bounds how long a lone request waits) — and
+report latency percentiles, throughput, mean batch occupancy and shed
+rate.  The full traffic-shaped benchmark driver (open-loop Poisson
+arrivals, ``BENCH_serving.json``) is ``repro.launch.loadtest``:
+
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --loadtest --requests 200
+    PYTHONPATH=src python -m repro.launch.serve --catalog 50000 --quantized --loadtest --max-wait-us 500
 """
 from __future__ import annotations
 
@@ -143,9 +155,11 @@ from repro.core import (
 from repro.core.retrieval import kernel_path
 from repro.core.eval import recall_at_n, retrieval_quality
 from repro.data import clustered_embeddings
+from repro.errors import EngineConfigError
 from repro.optim import AdamConfig
 from repro.serving import (
     FAULTS,
+    EngineConfig,
     FaultInjector,
     GuardedEngine,
     RetrievalEngine,
@@ -158,6 +172,7 @@ from repro.serving import (
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    EngineConfig.add_flags(ap)  # the shared engine-knob namespace
     ap.add_argument("--catalog", type=int, default=50000)
     ap.add_argument("--d", type=int, default=256)
     ap.add_argument("--h", type=int, default=1024)
@@ -166,41 +181,15 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--topn", type=int, default=20)
-    ap.add_argument("--mode", choices=["sparse", "reconstructed"], default="sparse")
-    ap.add_argument("--use-kernel", choices=["auto", "1", "0"], default="auto",
-                    help="route scoring+selection through the fused Pallas "
-                         "kernel (1), the chunked jnp path (0), or pick by "
-                         "backend (auto)")
-    ap.add_argument("--shards", type=int, default=1,
-                    help="candidate-shard the index over an N-way mesh and "
-                         "serve through distributed_retrieve (N>1 on CPU "
-                         "forces N host devices when run as a fresh process)")
-    ap.add_argument("--quantized", action="store_true",
-                    help="serve directly from the compound-compressed index "
-                         "(int8 values + int16/int32 indices + fp32 scales "
-                         "in HBM, dequantized tile-by-tile in VMEM) — "
-                         "bit-identical to serving the dequantized index")
-    ap.add_argument("--precision", choices=["exact", "int8"], default="exact",
-                    help="scoring precision: 'exact' (default; bit-identical "
-                         "to the fp32 path) or 'int8' (approximate int8-MXU "
-                         "scoring, requires --quantized; quality vs exact "
-                         "is reported per request)")
-    ap.add_argument("--two-stage", action="store_true",
-                    help="serve two-stage: inverted-index candidate "
-                         "generation (stage 1) feeding one batched fused "
-                         "re-rank over the gathered candidate panels "
-                         "(stage 2) — sub-linear in catalog size, "
-                         "approximate; sparse mode, unsharded only")
-    ap.add_argument("--candidate-fraction", type=float, default=0.25,
-                    help="two-stage candidate budget as a fraction of the "
-                         "catalog (stage 2 scans ~this fraction; 1.0 is "
-                         "bit-identical to single-stage)")
-    ap.add_argument("--stage1", choices=["auto", "device", "host"],
-                    default="auto",
-                    help="stage-1 candidate-union implementation: the "
-                         "jitted device union ('device'; 'auto' resolves "
-                         "to it) or the bit-identical NumPy oracle "
-                         "('host'); requires --two-stage")
+    ap.add_argument("--loadtest", action="store_true",
+                    help="after building the (possibly hardened/mutated) "
+                         "engine, drive it through the microbatching front "
+                         "with Zipfian closed-loop traffic instead of the "
+                         "fixed recall loop (see repro.launch.loadtest for "
+                         "the full benchmark driver)")
+    ap.add_argument("--max-wait-us", type=float, default=2000.0,
+                    help="loadtest microbatch coalescing deadline for the "
+                         "oldest queued request")
     ap.add_argument("--mutate", action="store_true",
                     help="serve a segmented mutable index: the built index "
                          "becomes the immutable base and a deterministic "
@@ -220,23 +209,20 @@ def main(argv=None):
                          "abandoned when it expires and the response is "
                          "tagged deadline_exceeded (default: unbounded)")
     args = ap.parse_args(argv)
-    if args.precision == "int8" and not args.quantized:
-        ap.error("--precision int8 requires --quantized (the int8 scoring "
-                 "path reads int8 candidate tiles)")
+    # engine-knob cross checks (int8 vs quantized, two-stage vs shards,
+    # stage1 vs two-stage, ...) live on EngineConfig now — one namespace,
+    # one validator, every entry point
+    try:
+        engine_cfg = EngineConfig.from_flags(args)
+    except EngineConfigError as e:
+        ap.error(str(e))
+    # serve-specific combinations stay here: fault fixtures and the
+    # mutable-serving trace are this entry point's own surface
     if args.inject_fault in ("dead-shard", "slow-shard") and args.shards < 2:
         ap.error(f"--inject-fault {args.inject_fault} requires --shards > 1")
-    if args.two_stage and args.shards > 1:
-        ap.error("--two-stage does not compose with --shards > 1 "
-                 "(candidate generation is per-catalog, not per-shard)")
-    if args.two_stage and args.mode != "sparse":
-        ap.error("--two-stage requires --mode sparse (posting lists index "
-                 "the sparse code latents)")
     if args.inject_fault == "corrupt-postings" and not args.two_stage:
         ap.error("--inject-fault corrupt-postings requires --two-stage "
                  "(the fault lives in stage 1's posting lists)")
-    if args.stage1 != "auto" and not args.two_stage:
-        ap.error("--stage1 requires --two-stage (stage 1 is the "
-                 "candidate-union step)")
     if args.mutate and (args.shards > 1 or args.two_stage
                         or args.mode != "sparse"):
         ap.error("--mutate requires --mode sparse, --shards 1 and no "
@@ -246,13 +232,10 @@ def main(argv=None):
         ap.error("--inject-fault corrupt-delta requires --mutate "
                  "(the fault lives in the segmented index's delta)")
 
-    use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
-    path = "fused-kernel" if kernel_path(use_kernel) else "jnp-chunked"
-    mesh = None
-    if args.shards > 1:
-        from repro.launch.mesh import make_candidate_mesh
-
-        mesh = make_candidate_mesh(args.shards)
+    path = ("fused-kernel" if kernel_path(engine_cfg.use_kernel)
+            else "jnp-chunked")
+    mesh = engine_cfg.mesh
+    if mesh is not None:
         path = f"{path}+sharded"
 
     cfg = SAEConfig(d=args.d, h=args.h, k=args.k)
@@ -312,14 +295,7 @@ def main(argv=None):
         serve_index = SegmentedIndex.from_index(index)
         path = f"{path}+segmented"
 
-    engine = RetrievalEngine(
-        state.params, serve_index,
-        mode=args.mode, use_kernel=use_kernel, mesh=mesh,
-        precision=args.precision,
-        stage=("two_stage" if args.two_stage else "single"),
-        candidate_fraction=args.candidate_fraction,
-        stage1=args.stage1,
-    )
+    engine = RetrievalEngine(serve_index, state.params, config=engine_cfg)
     if args.inject_fault == "corrupt-postings":
         # plant out-of-range ids in the posting lists AFTER the build:
         # stage 1's integrity check must trip on every request, and the
@@ -365,11 +341,8 @@ def main(argv=None):
         surv_ids = jnp.asarray(surv)
         surv_emb = jnp.asarray(np.asarray(all_emb)[surv])
         if args.inject_fault == "corrupt-delta":
-            engine = RetrievalEngine(
-                state.params, flip_delta_byte(seg),
-                mode=args.mode, use_kernel=use_kernel,
-                precision=args.precision,
-            )
+            engine = RetrievalEngine(flip_delta_byte(seg), state.params,
+                                     config=engine_cfg)
             args.self_check = True
             print("[faults] corrupt-delta: flipped one bit in the delta "
                   "segment; expecting the per-segment CRC to catch it at "
@@ -393,16 +366,46 @@ def main(argv=None):
     if guard.degraded_from_start:
         print(f"[self-check] DEGRADED: {guard.degraded_from_start}")
         engine = guard.engine  # the fallback-backed engine now serves
+
+    # --------------------------------------------- microbatched loadtest
+    if args.loadtest:
+        # same hardened stack, but traffic-shaped: Zipfian single-row
+        # requests coalesced into BLOCK_Q panels by the microbatch front
+        from repro.data import ZipfianQueryStream
+        from repro.launch.loadtest import run_closed_loop, summarize
+        from repro.serving import MicrobatchServer
+
+        users = np.asarray(
+            clustered_embeddings(jax.random.PRNGKey(7), 2000, d=cfg.d))
+        stream = ZipfianQueryStream(users, seed=0)
+        _, queries = stream.sample(max(args.requests, 1))
+        with MicrobatchServer(guard,
+                              max_wait_us=args.max_wait_us) as server:
+            server.warmup(args.topn)
+            result = run_closed_loop(server, queries, concurrency=16,
+                                     topn=args.topn)
+            rec = summarize(result, server, extra={"path": path})
+        print(f"[serve] loadtest path={path} closed-loop "
+              f"{rec['requests']} requests: "
+              f"p50 {rec['p50_ms']:.1f} ms p95 {rec['p95_ms']:.1f} ms "
+              f"p99 {rec['p99_ms']:.1f} ms | "
+              f"{rec['throughput_rps']:.0f} rps, "
+              f"occupancy {rec['occupancy_mean']:.2f}, "
+              f"shed {rec['shed_rate']:.3f}, panels {rec['panels']}")
+        return 0
+
     # int8 scoring is approximate: measure its live quality against the
     # SAME engine at exact precision (the harness's reference path)
     exact_engine = None
     if args.precision == "int8" and guard.engine.precision == "int8":
         seg_now = getattr(guard.engine, "segments", None)
         exact_engine = RetrievalEngine(
-            state.params,
             seg_now if seg_now is not None else guard.engine.index,
-            mode=args.mode, use_kernel=use_kernel,
-            mesh=None if seg_now is not None else mesh,
+            state.params,
+            config=engine_cfg.replace(
+                precision="exact", stage="single", stage1="auto",
+                mesh=None if seg_now is not None else mesh,
+            ),
         )
 
     lat, recalls, vs_exact = [], [], []
@@ -412,7 +415,7 @@ def main(argv=None):
             q = poison_queries(q, kind="nan" if r % 2 == 0 else "inf",
                                position=(r % args.batch, r % cfg.d))
         t0 = time.time()
-        vals, ids, status = guard.retrieve_dense(q, args.topn)
+        vals, ids, status, *_ = guard.retrieve_dense(q, args.topn)
         jax.block_until_ready(ids)
         lat.append(time.time() - t0)
         if status.degraded and r < 3:

@@ -1,10 +1,16 @@
-from repro.serving.engine import (
+from repro.serving.batcher import DEFAULT_BUCKETS, MicrobatchServer
+from repro.serving.config import (
     PRECISIONS,
+    EngineConfig,
+    check_precision,
+)
+from repro.serving.engine import (
     PreppedQuery,
     RetrievalEngine,
-    check_precision,
     mode_inv_norms,
+    path_name,
     prep_query,
+    resolve_stage1,
     retrieve_prepped,
     select_retrieve_fn,
     validate_dense_query,
@@ -23,17 +29,23 @@ from repro.serving.guard import (
     Deadline,
     GuardedEngine,
     SelfCheckReport,
-    ServingStatus,
     self_check,
 )
+from repro.serving.response import RetrievalResponse, ServingStatus
 
 __all__ = [
     "RetrievalEngine",
+    "EngineConfig",
+    "RetrievalResponse",
+    "MicrobatchServer",
+    "DEFAULT_BUCKETS",
     "PreppedQuery",
     "prep_query",
     "retrieve_prepped",
     "select_retrieve_fn",
     "mode_inv_norms",
+    "path_name",
+    "resolve_stage1",
     "check_precision",
     "PRECISIONS",
     "validate_dense_query",

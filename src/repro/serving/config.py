@@ -1,0 +1,251 @@
+"""Typed engine configuration (ISSUE 10 api_redesign).
+
+``EngineConfig`` is the one frozen object that names every serving knob
+the engine accreted across PRs 3–9 (mode, backend, precision, staging,
+sharding), with the cross-field validation that used to live inline in
+``RetrievalEngine.__init__`` moved onto the config itself:
+
+* **field-space checks** run in ``__post_init__`` — an invalid
+  combination (two-stage + mesh, reconstructed two-stage, a
+  candidate_fraction outside (0, 1]) is rejected the moment the config
+  exists, before any index or params are in sight;
+* **index/params-dependent checks** run in ``validate(index, params)``
+  — precision vs index format, segmented-index constraints,
+  reconstructed-mode requirements, latent-dim agreement.
+
+``RetrievalEngine(index, params, config=...)`` is the primary
+constructor; every entry point (``launch/serve.py``,
+``launch/loadtest.py``, benchmarks) builds its config through
+``EngineConfig.add_flags`` / ``EngineConfig.from_flags`` so a knob added
+here appears everywhere at once, and the per-file duplicated
+``ap.error(...)`` validation is gone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core.quantized_codes import QuantizedCodes
+from repro.core.segments import SegmentedIndex
+from repro.errors import EngineConfigError
+
+PRECISIONS = ("exact", "int8")
+MODES = ("sparse", "reconstructed")
+STAGES = ("single", "two_stage")
+STAGE1S = ("auto", "device", "host")
+
+
+def check_precision(index, precision: str) -> str:
+    """Validate a scoring-precision switch against an index format.
+
+    ``"exact"`` — dequantize-(if needed)-and-score-in-f32, bit-identical
+    to the fp32 path (every index).  ``"int8"`` — generation 5's
+    approximate int8×int8 scoring; requires a ``QuantizedIndex`` (the
+    candidate tiles must already live in int8).
+    """
+    if precision not in PRECISIONS:
+        raise EngineConfigError(
+            f"unknown precision {precision!r} (expected one of {PRECISIONS})"
+        )
+    if precision == "int8" and not isinstance(index.codes, QuantizedCodes):
+        raise EngineConfigError(
+            "precision='int8' requires a QuantizedIndex "
+            "(build_index(..., quantize=True)); got fp32 codes"
+        )
+    return precision
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every serving knob of a ``RetrievalEngine``, as one frozen value.
+
+    mode:      "sparse" (direct sparse-space cosine) or "reconstructed"
+               (kernel-trick scoring; requires SAE params).
+    use_kernel: "auto" | True | False — fused Pallas chain vs chunked jnp.
+    precision: "exact" (bit-identical to fp32) or "int8" (approximate
+               int8-MXU scoring; QuantizedIndex only).
+    stage:     "single" (full-catalog scan) or "two_stage"
+               (inverted-index candidate generation + gathered re-rank).
+    stage1:    "auto"/"device" (jitted batched union) or "host" (NumPy
+               parity oracle) — two-stage only.
+    candidate_fraction: two-stage stage-2 budget as a catalog fraction.
+    inverted_cap: posting-list length cap of the two-stage inverted index.
+    mesh / shard_axis: candidate-sharded serving over ``mesh[shard_axis]``.
+    k:         encoder top-k override (defaults to the index's k).
+    """
+
+    mode: str = "sparse"
+    use_kernel: Any = "auto"
+    precision: str = "exact"
+    stage: str = "single"
+    stage1: str = "auto"
+    candidate_fraction: float = 0.25
+    inverted_cap: int = 2048
+    mesh: Any = None
+    shard_axis: str = "cand"
+    k: Optional[int] = None
+
+    # ------------------------------------------------- field-space checks
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise EngineConfigError(f"unknown retrieval mode: {self.mode!r}")
+        if self.stage not in STAGES:
+            raise EngineConfigError(
+                f"unknown stage {self.stage!r} "
+                "(expected 'single' or 'two_stage')"
+            )
+        if self.stage1 not in STAGE1S:
+            raise EngineConfigError(
+                f"unknown stage1 {self.stage1!r} "
+                "(expected 'auto', 'device' or 'host')"
+            )
+        if self.precision not in PRECISIONS:
+            raise EngineConfigError(
+                f"unknown precision {self.precision!r} "
+                f"(expected one of {PRECISIONS})"
+            )
+        if self.stage == "two_stage":
+            if self.mesh is not None:
+                raise EngineConfigError(
+                    "stage='two_stage' does not compose with a mesh — "
+                    "candidate generation is per-catalog, not per-shard; "
+                    "use single-stage sharded serving instead"
+                )
+            if self.mode != "sparse":
+                raise EngineConfigError(
+                    "stage='two_stage' requires mode='sparse': posting "
+                    "lists index the sparse code latents, and the "
+                    "reconstructed-space query is dense by construction"
+                )
+            if not 0.0 < self.candidate_fraction <= 1.0:
+                raise EngineConfigError(
+                    "candidate_fraction must be in (0, 1]: "
+                    f"{self.candidate_fraction}"
+                )
+
+    # --------------------------------------------- index-dependent checks
+    def validate(self, index, params=None) -> None:
+        """The cross-field checks that need the actual index/params —
+        everything ``RetrievalEngine.__init__`` used to do inline."""
+        if isinstance(index, SegmentedIndex):
+            if self.mode != "sparse":
+                raise EngineConfigError(
+                    "a SegmentedIndex serves mode='sparse' only "
+                    "(reconstructed-space norms are dropped at wrap time)"
+                )
+            if self.stage != "single":
+                raise EngineConfigError(
+                    "a SegmentedIndex serves stage='single' only — the "
+                    "inverted index does not track segment mutations"
+                )
+            if self.mesh is not None:
+                raise EngineConfigError(
+                    "a SegmentedIndex does not compose with a mesh — "
+                    "segments already merge like shards on one device"
+                )
+            index = index.base
+        if self.mode == "reconstructed":
+            if params is None:
+                raise EngineConfigError(
+                    "mode='reconstructed' requires SAE params"
+                )
+            if index.recon_norms is None:
+                raise EngineConfigError(
+                    "index built without params; recon norms missing"
+                )
+        if params is not None and index.codes.dim != params["w_enc"].shape[1]:
+            raise EngineConfigError(
+                "params/index latent-dim mismatch: w_enc encodes into "
+                f"h={params['w_enc'].shape[1]} but the index codes address "
+                f"h={index.codes.dim}"
+            )
+        check_precision(index, self.precision)
+
+    def replace(self, **changes) -> "EngineConfig":
+        """A modified copy (frozen dataclasses are immutable)."""
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------ CLI plumbing
+    @staticmethod
+    def add_flags(ap) -> None:
+        """Register the shared engine flags on an argparse parser — the
+        ONE flag namespace every entry point serves from."""
+        ap.add_argument("--mode", choices=list(MODES), default="sparse")
+        ap.add_argument("--use-kernel", choices=["auto", "1", "0"],
+                        default="auto",
+                        help="route scoring+selection through the fused "
+                             "Pallas kernel (1), the chunked jnp path (0), "
+                             "or pick by backend (auto)")
+        ap.add_argument("--shards", type=int, default=1,
+                        help="candidate-shard the index over an N-way mesh "
+                             "and serve through distributed_retrieve (N>1 "
+                             "on CPU forces N host devices when run as a "
+                             "fresh process)")
+        ap.add_argument("--quantized", action="store_true",
+                        help="serve directly from the compound-compressed "
+                             "index (int8 values + int16/int32 indices + "
+                             "fp32 scales in HBM, dequantized tile-by-tile "
+                             "in VMEM) — bit-identical to serving the "
+                             "dequantized index")
+        ap.add_argument("--precision", choices=list(PRECISIONS),
+                        default="exact",
+                        help="scoring precision: 'exact' (default; "
+                             "bit-identical to the fp32 path) or 'int8' "
+                             "(approximate int8-MXU scoring, requires "
+                             "--quantized)")
+        ap.add_argument("--two-stage", action="store_true",
+                        help="serve two-stage: inverted-index candidate "
+                             "generation (stage 1) feeding one batched "
+                             "fused re-rank over the gathered candidate "
+                             "panels (stage 2) — sub-linear in catalog "
+                             "size, approximate; sparse mode, unsharded "
+                             "only")
+        ap.add_argument("--candidate-fraction", type=float, default=0.25,
+                        help="two-stage candidate budget as a fraction of "
+                             "the catalog (stage 2 scans ~this fraction; "
+                             "1.0 is bit-identical to single-stage)")
+        ap.add_argument("--inverted-cap", type=int, default=2048,
+                        help="two-stage posting-list length cap")
+        ap.add_argument("--stage1", choices=list(STAGE1S), default="auto",
+                        help="stage-1 candidate-union implementation: the "
+                             "jitted device union ('device'; 'auto' "
+                             "resolves to it) or the bit-identical NumPy "
+                             "oracle ('host'); requires --two-stage")
+
+    @classmethod
+    def from_flags(cls, args) -> "EngineConfig":
+        """An ``EngineConfig`` from an ``add_flags`` namespace, with the
+        flag-level cross checks that used to be duplicated as per-file
+        ``ap.error(...)`` calls.  Raises ``EngineConfigError`` — CLI
+        mains catch it and hand the message to ``parser.error``."""
+        if args.precision == "int8" and not getattr(args, "quantized", True):
+            raise EngineConfigError(
+                "--precision int8 requires --quantized (the int8 scoring "
+                "path reads int8 candidate tiles)"
+            )
+        if args.two_stage and args.shards > 1:
+            raise EngineConfigError(
+                "--two-stage does not compose with --shards > 1 "
+                "(candidate generation is per-catalog, not per-shard)"
+            )
+        if args.stage1 != "auto" and not args.two_stage:
+            raise EngineConfigError(
+                "--stage1 requires --two-stage (stage 1 is the "
+                "candidate-union step)"
+            )
+        mesh = None
+        if args.shards > 1:
+            from repro.launch.mesh import make_candidate_mesh
+
+            mesh = make_candidate_mesh(args.shards)
+        use_kernel = {"auto": "auto", "1": True, "0": False}[args.use_kernel]
+        return cls(
+            mode=args.mode,
+            use_kernel=use_kernel,
+            precision=args.precision,
+            stage=("two_stage" if args.two_stage else "single"),
+            stage1=args.stage1,
+            candidate_fraction=args.candidate_fraction,
+            inverted_cap=args.inverted_cap,
+            mesh=mesh,
+        )

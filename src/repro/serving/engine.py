@@ -4,7 +4,7 @@
 owns ``(params, index, mode, use_kernel, mesh)`` at construction and
 exposes
 
-    engine.retrieve_dense(x, n)   # raw dense embeddings in, (scores, ids) out
+    engine.retrieve_dense(x, n)   # dense embeddings in, RetrievalResponse out
 
 with **no SparseCodes→dense-query round-trip through HBM**.  On the TPU
 kernel path a request flows
@@ -39,6 +39,9 @@ previous generation broadcast.
 """
 from __future__ import annotations
 
+import time
+import warnings
+from collections.abc import Mapping
 from typing import NamedTuple, Optional
 
 import jax
@@ -54,6 +57,13 @@ from repro.core.segments import SegmentedIndex
 from repro.core.types import SparseCodes
 from repro.errors import EngineConfigError, InvalidQueryError
 from repro.kernels.fused_encode import fused_encode
+from repro.kernels.sparse_dot.kernel import BLOCK_Q
+from repro.serving.config import (  # noqa: F401 — re-exported API
+    PRECISIONS,
+    EngineConfig,
+    check_precision,
+)
+from repro.serving.response import RetrievalResponse, ServingStatus
 from repro.kernels.sparse_dot import (
     fused_retrieve,
     fused_retrieve_gathered_quantized_mxu_sparse_q,
@@ -75,27 +85,24 @@ from repro.kernels.sparse_dot import (
     retrieve_sparse_q_ref,
 )
 
-PRECISIONS = ("exact", "int8")
+def resolve_stage1(stage1: str) -> str:
+    """The stage-1 implementation a ``stage1`` knob actually runs
+    ("auto" resolves to the device union)."""
+    return "device" if stage1 == "auto" else stage1
 
 
-def check_precision(index, precision: str) -> str:
-    """Validate a scoring-precision switch against an index format.
-
-    ``"exact"`` — dequantize-(if needed)-and-score-in-f32, bit-identical
-    to the fp32 path (every index).  ``"int8"`` — generation 5's
-    approximate int8×int8 scoring; requires a ``QuantizedIndex`` (the
-    candidate tiles must already live in int8).
-    """
-    if precision not in PRECISIONS:
-        raise EngineConfigError(
-            f"unknown precision {precision!r} (expected one of {PRECISIONS})"
-        )
-    if precision == "int8" and not isinstance(index.codes, QuantizedCodes):
-        raise EngineConfigError(
-            "precision='int8' requires a QuantizedIndex "
-            "(build_index(..., quantize=True)); got fp32 codes"
-        )
-    return precision
+def path_name(engine: "RetrievalEngine") -> str:
+    """The canonical serving-path name of an engine's configuration —
+    what a healthy ``ServingStatus.path`` reports and what the guard
+    ladder's rung names are built from."""
+    quantized = isinstance(engine.index.codes, QuantizedCodes)
+    fmt = ("int8" if engine.precision == "int8"
+           else "quantized" if quantized else "fp32")
+    backend = "kernel" if engine.use_fused else "ref"
+    sharded = "-sharded" if engine.mesh is not None else ""
+    prefix = (f"two-stage-{resolve_stage1(engine.stage1)}-"
+              if engine.stage == "two_stage" else "")
+    return f"{prefix}{fmt}-{backend}{sharded}"
 
 
 def validate_topn(n, n_candidates: int) -> int:
@@ -352,10 +359,53 @@ def retrieve_prepped(
     return scores, ids
 
 
+_LEGACY_ENGINE_KWARGS = frozenset((
+    "mode", "use_kernel", "mesh", "shard_axis", "k", "precision",
+    "stage", "stage1", "candidate_fraction", "inverted_cap",
+))
+
+
+def _looks_like_index(obj) -> bool:
+    return isinstance(obj, SegmentedIndex) or hasattr(obj, "codes")
+
+
+def _looks_like_params(obj) -> bool:
+    return isinstance(obj, Mapping) and "w_enc" in obj
+
+
+def _normalize_ctor_order(index, params):
+    """Accept both ``RetrievalEngine(index, params)`` (primary) and the
+    legacy ``RetrievalEngine(params, index)`` order.  The two argument
+    kinds are structurally unambiguous — an index carries ``.codes`` (or
+    is a ``SegmentedIndex``), params are a mapping with ``"w_enc"`` — so
+    detection is type-based, and the legacy order earns a
+    ``DeprecationWarning``."""
+    if _looks_like_index(index) and (params is None
+                                     or _looks_like_params(params)):
+        return index, params
+    if _looks_like_params(index) or _looks_like_index(params):
+        warnings.warn(
+            "RetrievalEngine(params, index) argument order is deprecated; "
+            "use RetrievalEngine(index, params, config=...)",
+            DeprecationWarning, stacklevel=3,
+        )
+        return params, index
+    raise EngineConfigError(
+        "RetrievalEngine(index, params): could not identify an index "
+        f"(needs .codes or SegmentedIndex) in ({type(index).__name__}, "
+        f"{type(params).__name__})"
+    )
+
+
 class RetrievalEngine:
-    """One object owns the serving lifecycle: params, index, mode, backend,
-    mesh.  Construct once, then serve ``retrieve_dense(x, n)`` — raw dense
-    embeddings in, top-n (cosine scores, candidate ids) out.
+    """One object owns the serving lifecycle: index, params, and one
+    ``EngineConfig`` naming every knob (mode, backend, precision, staging,
+    mesh).  Construct once — ``RetrievalEngine(index, params,
+    config=EngineConfig(...))`` — then serve ``retrieve_dense(x, n)``: raw
+    dense embeddings in, a ``RetrievalResponse`` (top-n cosine scores,
+    candidate ids, ``ServingStatus``, latency split) out.  The legacy
+    ``RetrievalEngine(params, index, mode=..., ...)`` spelling still
+    works through a shim that emits ``DeprecationWarning``.
 
     ``use_kernel``: "auto" (fused Pallas chain on TPU, chunked jnp
     elsewhere) | True | False — same switch as ``core.retrieve``.
@@ -394,106 +444,56 @@ class RetrievalEngine:
     the candidate union between them.)
     """
 
-    def __init__(
-        self,
-        params: Optional[sae.Params],
-        index,
-        *,
-        mode: str = "sparse",
-        use_kernel="auto",
-        mesh=None,
-        shard_axis: str = "cand",
-        k: Optional[int] = None,
-        precision: str = "exact",
-        stage: str = "single",
-        stage1: str = "auto",
-        candidate_fraction: float = 0.25,
-        inverted_cap: int = 2048,
-    ):
-        if mode not in ("sparse", "reconstructed"):
-            raise EngineConfigError(f"unknown retrieval mode: {mode!r}")
-        if stage not in ("single", "two_stage"):
-            raise EngineConfigError(
-                f"unknown stage {stage!r} (expected 'single' or 'two_stage')"
+    def __init__(self, index=None, params: Optional[sae.Params] = None,
+                 *, config: Optional[EngineConfig] = None, **legacy):
+        index, params = _normalize_ctor_order(index, params)
+        if legacy:
+            unknown = set(legacy) - _LEGACY_ENGINE_KWARGS
+            if unknown:
+                raise TypeError(
+                    "RetrievalEngine got unexpected keyword argument(s) "
+                    f"{sorted(unknown)}"
+                )
+            if config is not None:
+                raise EngineConfigError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    f"keyword knobs {sorted(legacy)}, not both"
+                )
+            warnings.warn(
+                "RetrievalEngine(..., mode=/use_kernel=/...) keyword knobs "
+                "are deprecated; pass config=EngineConfig(...) instead",
+                DeprecationWarning, stacklevel=2,
             )
+            config = EngineConfig(**legacy)
+        cfg = EngineConfig() if config is None else config
+        cfg.validate(index, params)
+
+        self.config = cfg
         self.segments: Optional[SegmentedIndex] = None
         if isinstance(index, SegmentedIndex):
-            if mode != "sparse":
-                raise EngineConfigError(
-                    "a SegmentedIndex serves mode='sparse' only "
-                    "(reconstructed-space norms are dropped at wrap time)"
-                )
-            if stage != "single":
-                raise EngineConfigError(
-                    "a SegmentedIndex serves stage='single' only — the "
-                    "inverted index does not track segment mutations"
-                )
-            if mesh is not None:
-                raise EngineConfigError(
-                    "a SegmentedIndex does not compose with a mesh — "
-                    "segments already merge like shards on one device"
-                )
             self.segments = index
             index = index.base
-        if stage1 not in ("auto", "device", "host"):
-            raise EngineConfigError(
-                f"unknown stage1 {stage1!r} "
-                "(expected 'auto', 'device' or 'host')"
-            )
-        if stage == "two_stage":
-            if mesh is not None:
-                raise EngineConfigError(
-                    "stage='two_stage' does not compose with a mesh — "
-                    "candidate generation is per-catalog, not per-shard; "
-                    "use single-stage sharded serving instead"
-                )
-            if mode != "sparse":
-                raise EngineConfigError(
-                    "stage='two_stage' requires mode='sparse': posting "
-                    "lists index the sparse code latents, and the "
-                    "reconstructed-space query is dense by construction"
-                )
-            if not 0.0 < candidate_fraction <= 1.0:
-                raise EngineConfigError(
-                    "candidate_fraction must be in (0, 1]: "
-                    f"{candidate_fraction}"
-                )
-        if mode == "reconstructed":
-            if params is None:
-                raise EngineConfigError(
-                    "mode='reconstructed' requires SAE params"
-                )
-            if index.recon_norms is None:
-                raise EngineConfigError(
-                    "index built without params; recon norms missing"
-                )
-        if params is not None and index.codes.dim != params["w_enc"].shape[1]:
-            raise EngineConfigError(
-                "params/index latent-dim mismatch: w_enc encodes into "
-                f"h={params['w_enc'].shape[1]} but the index codes address "
-                f"h={index.codes.dim}"
-            )
         self.params = params
         self.index = index
-        self.mode = mode
-        self.use_kernel = use_kernel
-        self.use_fused = kernel_path(use_kernel)
-        self.mesh = mesh
-        self.shard_axis = shard_axis
-        self.k = index.codes.k if k is None else k
-        self.precision = check_precision(index, precision)
-        self.stage = stage
-        self.stage1 = stage1
-        self.candidate_fraction = candidate_fraction
-        self.inverted_cap = inverted_cap
-        self._inv_norms = mode_inv_norms(index, mode)
+        self.mode = cfg.mode
+        self.use_kernel = cfg.use_kernel
+        self.use_fused = kernel_path(cfg.use_kernel)
+        self.mesh = cfg.mesh
+        self.shard_axis = cfg.shard_axis
+        self.k = index.codes.k if cfg.k is None else cfg.k
+        self.precision = cfg.precision
+        self.stage = cfg.stage
+        self.stage1 = cfg.stage1
+        self.candidate_fraction = cfg.candidate_fraction
+        self.inverted_cap = cfg.inverted_cap
+        self._inv_norms = mode_inv_norms(index, cfg.mode)
         self._serve_cache: dict[int, callable] = {}
         self.inverted = None
-        if stage == "two_stage":
+        if cfg.stage == "two_stage":
             from repro.core.inverted_index import build_inverted_index
 
             self.inverted = build_inverted_index(
-                index_codes_f32(index), cap=inverted_cap
+                index_codes_f32(index), cap=cfg.inverted_cap
             )
             self._two_stage_cache: dict = {}
 
@@ -592,10 +592,19 @@ class RetrievalEngine:
             precision=self.precision,
         )
 
-    def retrieve_dense(
-        self, x: jax.Array, n: int
-    ) -> tuple[jax.Array, jax.Array]:
-        """The end-to-end request: dense embeddings in, top-n out, one jit."""
+    def retrieve_dense(self, x: jax.Array, n: int) -> RetrievalResponse:
+        """The end-to-end request: dense embeddings in, a
+        ``RetrievalResponse`` out — one jit per distinct ``n``.
+
+        ``resp.scores``/``resp.ids`` (equivalently ``resp[:2]``) are
+        exactly the panels the tuple-era API returned.  The stamped
+        ``ServingStatus`` is the healthy configured path (step 0, not
+        degraded) — the guard layer replaces it with what actually
+        happened when serving degrades.  ``compute_us`` records host
+        dispatch time; device completion stays the caller's
+        ``block_until_ready``, as before.
+        """
+        t0 = time.monotonic()
         d = None if self.params is None else self.params["w_enc"].shape[0]
         validate_dense_query(x, d=d)
         validate_topn(
@@ -604,40 +613,51 @@ class RetrievalEngine:
             else self.segments.n_rows,
         )
         squeeze = x.ndim == 1
-        if self.segments is not None:
-            # segment content mutates between requests, so the request is
-            # never one monolithic jit that would bake segment arrays in
-            # as constants.  The encode is its own cached jit; the
-            # per-segment retrieves are module-level jits keyed on the
-            # segment array SHAPES, so steady-state serving after a
-            # mutation that preserves shapes recompiles nothing, and
-            # ``apply_update`` never has to invalidate anything.
+        xb = x[None] if squeeze else x
+        # Shape-stable serve path: every panel the jit sees is padded to
+        # a BLOCK_Q multiple with zero rows (scored and sliced off), so
+        # a lone request and a coalesced microbatch panel of the same
+        # bucket compile and compute IDENTICALLY — the bit-identity the
+        # batcher promises is structural, not an XLA accident — and
+        # per-request traffic of varied widths retraces once per bucket,
+        # not once per width.
+        rows = int(xb.shape[0])
+        pad = (-rows) % BLOCK_Q
+        if pad:
+            xb = jnp.concatenate(
+                [xb, jnp.zeros((pad, xb.shape[1]), dtype=xb.dtype)],
+                axis=0,
+            )
+        if self.segments is not None or self.stage == "two_stage":
+            # segment content mutates between requests, and two-stage
+            # runs host work between its two jits — neither request can
+            # be one monolithic jit (segments: arrays would bake in as
+            # constants; the per-segment retrieves are module-level jits
+            # keyed on segment array SHAPES, so shape-preserving
+            # mutations recompile nothing and ``apply_update`` never
+            # invalidates).  The encode is its own cached jit.
             fn = self._serve_cache.get("encode")
             if fn is None:
                 fn = jax.jit(lambda xb: self.encode_queries(xb))
                 self._serve_cache["encode"] = fn
-            codes = fn(x[None] if squeeze else x)
+            codes = fn(xb)
             scores, ids = self.retrieve_codes(codes, n)
-            return (scores[0], ids[0]) if squeeze else (scores, ids)
-        if self.stage == "two_stage":
-            # stage 1 runs on host — the request can't be one jit.  The
-            # encode is its own cached jit; retrieve_codes then does the
-            # host union + cached per-query stage-2 jit.
-            fn = self._serve_cache.get("encode")
+        else:
+            fn = self._serve_cache.get(n)
             if fn is None:
-                fn = jax.jit(lambda xb: self.encode_queries(xb))
-                self._serve_cache["encode"] = fn
-            codes = fn(x[None] if squeeze else x)
-            scores, ids = self.retrieve_codes(codes, n)
-            return (scores[0], ids[0]) if squeeze else (scores, ids)
-        fn = self._serve_cache.get(n)
-        if fn is None:
-            def _serve(xb):
-                return self.retrieve_codes(self.encode_queries(xb), n)
+                def _serve(xb):
+                    return self.retrieve_codes(self.encode_queries(xb), n)
 
-            fn = jax.jit(_serve)
-            self._serve_cache[n] = fn
-        scores, ids = fn(x[None] if squeeze else x)
+                fn = jax.jit(_serve)
+                self._serve_cache[n] = fn
+            scores, ids = fn(xb)
+        if pad:
+            scores, ids = scores[:rows], ids[:rows]
         if squeeze:
             scores, ids = scores[0], ids[0]
-        return scores, ids
+        return RetrievalResponse(
+            scores=scores, ids=ids,
+            status=ServingStatus(path=path_name(self)),
+            queue_us=0.0,
+            compute_us=(time.monotonic() - t0) * 1e6,
+        )

@@ -70,41 +70,18 @@ from repro.errors import (
     SelfCheckError,
     ShardFailureError,
 )
+from repro.serving.config import EngineConfig
 from repro.serving.engine import (
     RetrievalEngine,
+    path_name,
+    resolve_stage1,
     validate_dense_query,
     validate_topn,
 )
-
-
-class ServingStatus(NamedTuple):
-    """How a request was actually served — attached to every response.
-
-    path:      name of the ladder rung that produced the answer.
-    step:      rung index (0 = the configured primary path).
-    degraded:  True whenever the answer differs in ANY way from what the
-               healthy primary path would have returned (stepped-down
-               rung, sanitized inputs, partial shard coverage).
-    fault:     why serving left the primary path (None when healthy).
-    shards_total / shards_used: mesh shard accounting (1/1 unsharded).
-    coverage:  fraction of the candidate catalog actually scored — the
-               recall bound for partial results (1.0 = full catalog).
-    retries:   shard retry attempts spent before this answer.
-    sanitized: count of non-finite query values zeroed at admission.
-    deadline_exceeded: the budget ran out; the answer came from the
-               cheapest remaining path rather than being dropped.
-    """
-
-    path: str
-    step: int = 0
-    degraded: bool = False
-    fault: Optional[str] = None
-    shards_total: int = 1
-    shards_used: int = 1
-    coverage: float = 1.0
-    retries: int = 0
-    sanitized: int = 0
-    deadline_exceeded: bool = False
+from repro.serving.response import (  # noqa: F401 — re-exported API
+    RetrievalResponse,
+    ServingStatus,
+)
 
 
 class Deadline:
@@ -212,7 +189,8 @@ def self_check(
         canary_n = max(1, min(canary_n, segments.n_alive))
 
     xq, qcodes = _canary_queries(engine, canary_q)
-    serve = ((lambda e: e.retrieve_dense(xq, canary_n)) if xq is not None
+    serve = ((lambda e: e.retrieve_dense(xq, canary_n).pair)
+             if xq is not None
              else (lambda e: e.retrieve_codes(qcodes, canary_n)))
     scores, ids = serve(engine)
     s = np.asarray(scores)
@@ -250,10 +228,10 @@ def self_check(
     if (engine.use_fused or engine.mesh is not None) \
             and engine.stage == "single":
         ref = RetrievalEngine(
-            engine.params,
             segments if segments is not None else engine.index,
-            mode=engine.mode,
-            use_kernel=False, mesh=None, precision=engine.precision,
+            engine.params,
+            config=EngineConfig(mode=engine.mode, use_kernel=False,
+                                precision=engine.precision),
         )
         rs, ri = serve(ref)
         rs, ri = np.asarray(rs), np.asarray(ri)
@@ -282,15 +260,9 @@ def self_check(
     return SelfCheckReport(
         index_verified=engine.index.checksum is not None,
         canary_q=int(s.shape[0]), canary_n=canary_n,
-        path=_path_name(engine), kernel_vs_ref=kernel_vs_ref,
+        path=path_name(engine), kernel_vs_ref=kernel_vs_ref,
         max_abs_diff=max_diff,
     )
-
-
-def _resolve_stage1(stage1: str) -> str:
-    """The stage-1 implementation a ``stage1`` knob actually runs
-    ("auto" resolves to the device union)."""
-    return "device" if stage1 == "auto" else stage1
 
 
 def _stage1_impl(cfg) -> Optional[str]:
@@ -299,18 +271,7 @@ def _stage1_impl(cfg) -> Optional[str]:
     host two-stage rung never dedup into one."""
     if cfg.get("stage") != "two_stage":
         return None
-    return _resolve_stage1(cfg.get("stage1", "auto"))
-
-
-def _path_name(engine: RetrievalEngine) -> str:
-    quantized = isinstance(engine.index.codes, QuantizedCodes)
-    fmt = ("int8" if engine.precision == "int8"
-           else "quantized" if quantized else "fp32")
-    backend = "kernel" if engine.use_fused else "ref"
-    sharded = "-sharded" if engine.mesh is not None else ""
-    prefix = (f"two-stage-{_resolve_stage1(engine.stage1)}-"
-              if engine.stage == "two_stage" else "")
-    return f"{prefix}{fmt}-{backend}{sharded}"
+    return resolve_stage1(cfg.get("stage1", "auto"))
 
 
 class GuardedEngine:
@@ -390,9 +351,12 @@ class GuardedEngine:
                         shed = seg.base_only()
                 if shed is not None:
                     engine = RetrievalEngine(
-                        engine.params, shed, mode=engine.mode,
-                        use_kernel=engine.use_kernel,
-                        precision=engine.precision,
+                        shed, engine.params,
+                        config=EngineConfig(
+                            mode=engine.mode,
+                            use_kernel=engine.use_kernel,
+                            precision=engine.precision,
+                        ),
                     )
                     self.self_check_report = self_check(
                         engine, canary_q=canary_q, canary_n=canary_n
@@ -411,12 +375,14 @@ class GuardedEngine:
                     raise
                 verify_index(fallback_index)
                 engine = RetrievalEngine(
-                    engine.params, fallback_index, mode=engine.mode,
-                    use_kernel=engine.use_kernel, mesh=engine.mesh,
-                    shard_axis=engine.shard_axis,
-                    precision=(engine.precision if isinstance(
-                        fallback_index.codes, QuantizedCodes)
-                        else "exact"),
+                    fallback_index, engine.params,
+                    config=EngineConfig(
+                        mode=engine.mode, use_kernel=engine.use_kernel,
+                        mesh=engine.mesh, shard_axis=engine.shard_axis,
+                        precision=(engine.precision if isinstance(
+                            fallback_index.codes, QuantizedCodes)
+                            else "exact"),
+                    ),
                 )
                 self.self_check_report = self_check(
                     engine, canary_q=canary_q, canary_n=canary_n
@@ -524,15 +490,15 @@ class GuardedEngine:
                 index = (dequantize_index(e.index) if cfg["dequant"]
                          else e.index)
             two = cfg.get("stage") == "two_stage"
-            eng = RetrievalEngine(
-                e.params, index, mode=e.mode,
-                use_kernel=cfg["use_fused"], mesh=cfg["mesh"],
+            rung_cfg = EngineConfig(
+                mode=e.mode, use_kernel=cfg["use_fused"], mesh=cfg["mesh"],
                 shard_axis=e.shard_axis, precision=cfg["precision"],
                 stage=cfg.get("stage", "single"),
                 **(dict(candidate_fraction=e.candidate_fraction,
                         inverted_cap=e.inverted_cap,
                         stage1=cfg.get("stage1", "auto")) if two else {}),
             )
+            eng = RetrievalEngine(index, e.params, config=rung_cfg)
             if two and e.inverted is not None:
                 # every two-stage rung serves from the SAME inverted
                 # index as the primary engine (not a private rebuild):
@@ -619,7 +585,7 @@ class GuardedEngine:
                 inj.stall(attempt)        # slow shard: host-visible stall
             dead = inj.dead_shards(attempt) if inj is not None else frozenset()
             if not dead:
-                scores, ids = eng.retrieve_dense(x, n)
+                scores, ids, *_ = eng.retrieve_dense(x, n)
                 fault = (f"shard recovered after {attempt} retr"
                          f"{'y' if attempt == 1 else 'ies'}"
                          if attempt else None)
@@ -644,8 +610,10 @@ class GuardedEngine:
 
     # ------------------------------------------------------------ serving
     def retrieve_dense(self, x, n: int, *,
-                       deadline_ms: Optional[float] = None):
-        """Serve one guarded request: ``(scores, ids, ServingStatus)``.
+                       deadline_ms: Optional[float] = None
+                       ) -> RetrievalResponse:
+        """Serve one guarded request: a ``RetrievalResponse`` whose
+        ``ServingStatus`` names the ladder rung that actually answered.
 
         Admission failures raise typed errors (the caller sent garbage);
         every fault PAST admission is absorbed by the ladder — the
@@ -653,6 +621,7 @@ class GuardedEngine:
         so.  Only when every rung fails does ``DegradationExhaustedError``
         surface, chaining each rung's reason.
         """
+        t0 = time.monotonic()
         deadline = Deadline(self.deadline_ms if deadline_ms is None
                             else deadline_ms)
         self.counters["requests"] += 1
@@ -693,7 +662,7 @@ class GuardedEngine:
                     dead_now = round(shards_total * (1.0 - coverage))
                     shards_used = shards_total - dead_now
                 else:
-                    scores, ids = eng.retrieve_dense(x, n)
+                    scores, ids, *_ = eng.retrieve_dense(x, n)
             except RetrievalError as err:
                 faults.append(f"{name}: {err}")
                 continue
@@ -726,7 +695,11 @@ class GuardedEngine:
                 sanitized=sanitized,
                 deadline_exceeded=deadline.expired,
             )
-            return scores, ids, status
+            return RetrievalResponse(
+                scores=scores, ids=ids, status=status,
+                queue_us=0.0,
+                compute_us=(time.monotonic() - t0) * 1e6,
+            )
 
         raise DegradationExhaustedError(
             "every degradation-ladder rung failed for this request: "

@@ -8,7 +8,12 @@ import sys
 import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "tools"))
-from check_bench import compare, main, render_summary  # noqa: E402
+from check_bench import (  # noqa: E402
+    compare,
+    compare_serving,
+    main,
+    render_summary,
+)
 
 
 def rec(name, **over):
@@ -253,6 +258,120 @@ def test_nameless_record_fails_cleanly(tmp_path):
 def test_render_summary_lists_findings():
     md = render_summary(["bad thing"], ["meh thing"])
     assert ":x: bad thing" in md and ":warning: meh thing" in md
+
+
+# ------------------------------------------ serving schema (ISSUE 10)
+def srec(name, **over):
+    base = {"name": name, "p50_ms": 5.0, "p95_ms": 9.0, "p99_ms": 12.0,
+            "throughput_rps": 800.0, "offered_rps": 900.0,
+            "occupancy_mean": 0.8, "shed_rate": 0.0, "requests": 200,
+            "path": "jnp-chunked", "shards": 1, "n": 2000, "users": 200,
+            "topn": 10, "max_wait_us": 2000.0, "max_queue_rows": 256,
+            "smoke": True}
+    base.update(over)
+    return base
+
+
+def test_serving_identical_records_pass():
+    b = by_name(srec("serving_closed_loop"), srec("serving_open_loop"))
+    failures, warnings = compare_serving(b, dict(b), shed_tol=0.05)
+    assert failures == [] and warnings == []
+
+
+def test_serving_schema_gate():
+    f = by_name({"name": "serving_closed_loop", "p50_ms": 5.0})
+    failures, _ = compare_serving({}, f, shed_tol=0.05)
+    assert any("schema" in x and "shed_rate" in x for x in failures)
+
+
+def test_serving_sanity_gates_fire_without_a_baseline():
+    """Bookkeeping bugs (a shed_rate of 1.2, inverted percentiles) gate
+    on ANY machine, baseline or not — they are driver bugs, not noise."""
+    f = by_name(srec("serving_closed_loop", shed_rate=1.2))
+    failures, _ = compare_serving({}, f, shed_tol=0.05)
+    assert any("shed_rate" in x and "not in [0, 1]" in x for x in failures)
+    f = by_name(srec("serving_closed_loop", occupancy_mean=-0.1))
+    failures, _ = compare_serving({}, f, shed_tol=0.05)
+    assert any("occupancy_mean" in x for x in failures)
+    f = by_name(srec("serving_open_loop", p50_ms=20.0, p95_ms=9.0))
+    failures, _ = compare_serving({}, f, shed_tol=0.05)
+    assert any("percentile ordering broken" in x for x in failures)
+
+
+def test_serving_row_set_gate_and_new_row_warning():
+    b = by_name(srec("serving_closed_loop"), srec("serving_open_loop"))
+    f = by_name(srec("serving_closed_loop"), srec("serving_burst_loop"))
+    failures, warnings = compare_serving(b, f, shed_tol=0.05)
+    assert any("disappeared" in x and "serving_open_loop" in x
+               for x in failures)
+    assert any("new row" in w and "serving_burst_loop" in w
+               for w in warnings)
+
+
+def test_serving_shed_rate_regression_gates_within_tol_passes():
+    b = by_name(srec("serving_open_loop", shed_rate=0.02))
+    worse = by_name(srec("serving_open_loop", shed_rate=0.20))
+    failures, _ = compare_serving(b, worse, shed_tol=0.05)
+    assert any("shed-rate regression" in x for x in failures)
+    close = by_name(srec("serving_open_loop", shed_rate=0.06))
+    failures, _ = compare_serving(b, close, shed_tol=0.05)
+    assert failures == []
+    # shedding LESS is an improvement, never a failure
+    better = by_name(srec("serving_open_loop", shed_rate=0.0))
+    failures, _ = compare_serving(
+        by_name(srec("serving_open_loop", shed_rate=0.2)), better,
+        shed_tol=0.05)
+    assert failures == []
+
+
+def test_serving_config_change_skips_shed_gate_with_warning():
+    # a different admission bound (or smoke vs full) is a different
+    # serving system — shed rates are not comparable across them
+    b = by_name(srec("serving_open_loop", max_queue_rows=256,
+                     shed_rate=0.0))
+    f = by_name(srec("serving_open_loop", max_queue_rows=64,
+                     shed_rate=0.5))
+    failures, warnings = compare_serving(b, f, shed_tol=0.05)
+    assert failures == []
+    assert any("not comparable" in w for w in warnings)
+
+
+def test_serving_latency_and_throughput_are_warn_only():
+    b = by_name(srec("serving_closed_loop", p50_ms=5.0, p95_ms=9.0,
+                     p99_ms=12.0, throughput_rps=800.0))
+    f = by_name(srec("serving_closed_loop", p50_ms=15.0, p95_ms=27.0,
+                     p99_ms=36.0, throughput_rps=300.0))
+    failures, warnings = compare_serving(b, f, shed_tol=0.05)
+    assert failures == []
+    assert any("p50_ms" in w and "warn-only" in w for w in warnings)
+    assert any("throughput_rps" in w for w in warnings)
+
+
+def test_serving_main_end_to_end(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    summary = tmp_path / "summary.md"
+    rows = [srec("serving_closed_loop"), srec("serving_open_loop")]
+    base.write_text(json.dumps(rows))
+    fresh.write_text(json.dumps(rows))
+    assert main([str(base), str(fresh), "--schema", "serving",
+                 "--summary", str(summary)]) == 0
+    assert "**OK**" in summary.read_text()
+    fresh.write_text(json.dumps(
+        [srec("serving_closed_loop", shed_rate=0.9),
+         srec("serving_open_loop")]))
+    assert main([str(base), str(fresh), "--schema", "serving",
+                 "--summary", str(summary)]) == 1
+    assert "**FAIL**" in summary.read_text()
+
+
+def test_serving_gate_accepts_the_committed_record():
+    """The committed BENCH_serving.json must pass its own gate against
+    itself — otherwise the CI loadtest step is born red."""
+    bench = pathlib.Path(__file__).parents[1] / "BENCH_serving.json"
+    if not bench.exists():
+        pytest.skip("no committed serving record")
+    assert main([str(bench), str(bench), "--schema", "serving"]) == 0
 
 
 def test_gate_accepts_the_committed_record():

@@ -111,7 +111,7 @@ def test_dead_shard_partial_merge_matches_survivor_oracle(
         injector=FaultInjector("dead-shard", shard=1),
         retries=1, backoff_s=1e-4,
     )
-    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(queries, TOPN)
     assert status.degraded and status.path == "fp32-ref-sharded"
     assert status.shards_total == 4 and status.shards_used == 3
     assert "partial merge over 3/4 shards" in status.fault
@@ -145,12 +145,12 @@ def test_flaky_shard_recovers_bit_identically(setup, forced_device_count):
         injector=FaultInjector("dead-shard", shard=2, recover_after=1),
         retries=2, backoff_s=1e-4,
     )
-    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(queries, TOPN)
     # recovered on retry: full-coverage answer, annotated but NOT degraded
     assert not status.degraded and status.retries == 1
     assert status.coverage == 1.0
     assert "recovered after 1 retry" in status.fault
-    wv, wi = RetrievalEngine(params, index,
+    wv, wi, *_ = RetrievalEngine(params, index,
                              use_kernel=False).retrieve_dense(queries, TOPN)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
@@ -170,10 +170,10 @@ def test_slow_shard_deadline_annotates_not_drops(setup, forced_device_count):
         injector=FaultInjector("slow-shard", delay_s=0.02),
         deadline_ms=1.0,
     )
-    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(queries, TOPN)
     assert status.deadline_exceeded
     assert not status.degraded and status.coverage == 1.0
-    wv, wi = RetrievalEngine(params, index,
+    wv, wi, *_ = RetrievalEngine(params, index,
                              use_kernel=False).retrieve_dense(queries, TOPN)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
@@ -196,7 +196,7 @@ def test_fault_matrix_never_crashes(setup, forced_device_count):
     recall@16 vs exact still clearing a floor.  No fault crashes."""
     params, index, qindex, queries = setup
     exact = RetrievalEngine(params, qindex, use_kernel=False)
-    ev, ei = exact.retrieve_dense(queries, TOPN)
+    ev, ei, *_ = exact.retrieve_dense(queries, TOPN)
     mesh = (make_candidate_mesh(min(4, forced_device_count))
             if forced_device_count > 1 else None)
     fp_index = dequantize_index(qindex)
@@ -261,7 +261,7 @@ def test_fault_matrix_never_crashes(setup, forced_device_count):
         guard = build()
         x = (poison_queries(queries, kind="nan", position=(1, 3))
              if fault == "nonfinite-query" else queries)
-        scores, ids, status = guard.retrieve_dense(x, TOPN)  # never raises
+        scores, ids, status, *_ = guard.retrieve_dense(x, TOPN)  # never raises
         assert np.asarray(ids).shape == (Q, TOPN), fault
         identical = (np.array_equal(np.asarray(ids), np.asarray(ei))
                      and np.array_equal(np.asarray(scores), np.asarray(ev)))
@@ -283,7 +283,7 @@ def test_fault_matrix_specific_outcomes(setup):
     the exact rung bit-identically; sanitize reports the plant."""
     params, _, qindex, queries = setup
     exact = RetrievalEngine(params, qindex, use_kernel=False)
-    ev, ei = exact.retrieve_dense(queries, TOPN)
+    ev, ei, *_ = exact.retrieve_dense(queries, TOPN)
     fp_index = dequantize_index(qindex)
 
     g = GuardedEngine(
@@ -291,7 +291,7 @@ def test_fault_matrix_specific_outcomes(setup):
                         use_kernel=False, precision="int8"),
         run_self_check=True, fallback_index=fp_index,
     )
-    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(queries, TOPN)
     assert status.degraded and "fallback" in status.fault
     # fallback = dequantized twin served exactly == the exact oracle
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(ei))
@@ -301,7 +301,7 @@ def test_fault_matrix_specific_outcomes(setup):
         RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
         injector=FaultInjector("kernel-exception"),
     )
-    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(queries, TOPN)
     assert status.degraded and status.path == "quantized-ref"
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(ei))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(ev))
@@ -311,10 +311,10 @@ def test_fault_matrix_specific_outcomes(setup):
         on_invalid="sanitize",
     )
     x = poison_queries(queries, kind="inf", position=(1, 3))
-    scores, ids, status = g.retrieve_dense(x, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(x, TOPN)
     assert status.degraded and status.sanitized == 1
     # only the poisoned row's answer may differ from the healthy int8 one
-    hv, hi = RetrievalEngine(
+    hv, hi, *_ = RetrievalEngine(
         params, qindex, use_kernel=False, precision="int8"
     ).retrieve_dense(queries, TOPN)
     keep = [r for r in range(Q) if r != 1]
@@ -344,7 +344,7 @@ def test_corrupt_delta_sheds_to_base_only(setup):
     assert "base-only" in g.degraded_from_start
     assert g.engine.segments.delta is None
 
-    scores, ids, status = g.retrieve_dense(queries, TOPN)
+    scores, ids, status, *_ = g.retrieve_dense(queries, TOPN)
     assert status.degraded and "base-only" in status.fault
     assert status.coverage == pytest.approx(seg.base_coverage)
     assert status.coverage == pytest.approx((N - 1) / (N - 1 + 8))
@@ -353,7 +353,7 @@ def test_corrupt_delta_sheds_to_base_only(setup):
     assert 5 not in returned                     # deletions persist
 
     # the answer is the healthy base-only engine's, bit for bit
-    wv, wi = RetrievalEngine(
+    wv, wi, *_ = RetrievalEngine(
         params, seg.base_only(), use_kernel=False, precision="int8"
     ).retrieve_dense(queries, TOPN)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))

@@ -76,12 +76,12 @@ def test_nonfinite_always_rejected(setup, batch):
 def test_nonfinite_always_sanitized(setup, batch):
     x, n_bad = batch
     g = fresh_guard(setup, on_invalid="sanitize")
-    scores, ids, status = g.retrieve_dense(x, 5)
+    scores, ids, status, *_ = g.retrieve_dense(x, 5)
     assert status.degraded and status.sanitized == n_bad
     assert np.all(np.isfinite(np.asarray(scores)))
     # serving the pre-zeroed batch is the same request
     clean = np.where(np.isfinite(x), x, 0.0)
-    wv, wi = g.engine.retrieve_dense(jnp.asarray(clean), 5)
+    wv, wi, *_ = g.engine.retrieve_dense(jnp.asarray(clean), 5)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
 
 
@@ -136,7 +136,7 @@ def valid_batches(draw, d=CFG.d):
 def test_valid_inputs_never_rejected(setup, req):
     x, n = req
     g = fresh_guard(setup)
-    scores, ids, status = g.retrieve_dense(x, n)
+    scores, ids, status, *_ = g.retrieve_dense(x, n)
     assert not status.degraded and status.step == 0
     assert status.fault is None and status.sanitized == 0
     assert scores.shape == (x.shape[0], n)

@@ -18,7 +18,7 @@ from repro.core import (
 )
 from repro.core.types import SparseCodes
 from repro.launch.mesh import make_candidate_mesh
-from repro.serving import RetrievalEngine
+from repro.serving import EngineConfig, RetrievalEngine
 
 CFG = SAEConfig(d=32, h=128, k=8)
 
@@ -37,9 +37,9 @@ def setup():
 
 def _assert_engine_matches_composed(params, index, x, n, mode, use_kernel,
                                     mesh=None):
-    engine = RetrievalEngine(params, index, mode=mode, use_kernel=use_kernel,
-                             mesh=mesh)
-    got_v, got_i = engine.retrieve_dense(x, n)
+    engine = RetrievalEngine(index, params,
+                    config=EngineConfig(mode=mode, use_kernel=use_kernel, mesh=mesh))
+    got_v, got_i, *_ = engine.retrieve_dense(x, n)
     want_v, want_i = retrieve(
         index, encode(params, x, CFG.k), n,
         mode=mode, params=params, use_kernel=use_kernel, mesh=mesh,
@@ -70,9 +70,10 @@ def test_engine_matches_composed_sharded(setup, mode, shards,
         params, index, queries, 20, mode, False, mesh=mesh
     )
     # and the sharded engine must equal the UNsharded engine bit-for-bit
-    single = RetrievalEngine(params, index, mode=mode, use_kernel=False)
-    sv, si = single.retrieve_dense(queries, 20)
-    gv, gi = engine.retrieve_dense(queries, 20)
+    single = RetrievalEngine(index, params,
+                    config=EngineConfig(mode=mode, use_kernel=False))
+    sv, si, *_ = single.retrieve_dense(queries, 20)
+    gv, gi, *_ = engine.retrieve_dense(queries, 20)
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(si))
     np.testing.assert_array_equal(np.asarray(gv), np.asarray(sv))
 
@@ -95,10 +96,12 @@ def test_quantized_engine_matches_dequantized(qsetup, mode, use_kernel):
     backends and both modes.  Quantization error is a build-time choice,
     never a serving-path one."""
     params, qindex, dindex, queries = qsetup
-    eq = RetrievalEngine(params, qindex, mode=mode, use_kernel=use_kernel)
-    ed = RetrievalEngine(params, dindex, mode=mode, use_kernel=use_kernel)
-    qv, qi = eq.retrieve_dense(queries, 25)
-    dv, di = ed.retrieve_dense(queries, 25)
+    eq = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=use_kernel))
+    ed = RetrievalEngine(dindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=use_kernel))
+    qv, qi, *_ = eq.retrieve_dense(queries, 25)
+    dv, di, *_ = ed.retrieve_dense(queries, 25)
     np.testing.assert_array_equal(np.asarray(qi), np.asarray(di))
     np.testing.assert_array_equal(np.asarray(qv), np.asarray(dv))
     # and the codes-in entry point agrees too
@@ -120,14 +123,15 @@ def test_quantized_engine_sharded(qsetup, mode, shards, forced_device_count):
         pytest.skip(f"needs {shards} devices")
     params, qindex, dindex, queries = qsetup
     mesh = make_candidate_mesh(shards)
-    em = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
-                         mesh=mesh)
-    e1 = RetrievalEngine(params, qindex, mode=mode, use_kernel=False)
-    ed = RetrievalEngine(params, dindex, mode=mode, use_kernel=False,
-                         mesh=mesh)
-    mv, mi = em.retrieve_dense(queries, 20)
-    sv, si = e1.retrieve_dense(queries, 20)
-    dv, di = ed.retrieve_dense(queries, 20)
+    em = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False, mesh=mesh))
+    e1 = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False))
+    ed = RetrievalEngine(dindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False, mesh=mesh))
+    mv, mi, *_ = em.retrieve_dense(queries, 20)
+    sv, si, *_ = e1.retrieve_dense(queries, 20)
+    dv, di, *_ = ed.retrieve_dense(queries, 20)
     np.testing.assert_array_equal(np.asarray(mi), np.asarray(si))
     np.testing.assert_array_equal(np.asarray(mv), np.asarray(sv))
     np.testing.assert_array_equal(np.asarray(mi), np.asarray(di))
@@ -147,13 +151,13 @@ def test_quantized_engine_sharded_fused_kernel(qsetup, mode,
         pytest.skip("needs 2 devices")
     params, qindex, dindex, queries = qsetup
     mesh = make_candidate_mesh(2)
-    em = RetrievalEngine(params, qindex, mode=mode, use_kernel=True,
-                         mesh=mesh)
-    ed = RetrievalEngine(params, dindex, mode=mode, use_kernel=True,
-                         mesh=mesh)
+    em = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=True, mesh=mesh))
+    ed = RetrievalEngine(dindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=True, mesh=mesh))
     q = queries[:3]
-    mv, mi = em.retrieve_dense(q, 10)
-    dv, di = ed.retrieve_dense(q, 10)
+    mv, mi, *_ = em.retrieve_dense(q, 10)
+    dv, di, *_ = ed.retrieve_dense(q, 10)
     np.testing.assert_array_equal(np.asarray(mi), np.asarray(di))
     np.testing.assert_array_equal(np.asarray(mv), np.asarray(dv))
 
@@ -181,12 +185,12 @@ def test_int8_engine_kernel_ref_bit_identical(qsetup, mode):
     int32 accumulation plus the shared panel quantizer leave no rounding
     slack between the two backends."""
     params, qindex, _, queries = qsetup
-    ek = RetrievalEngine(params, qindex, mode=mode, use_kernel=True,
-                         precision="int8")
-    er = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
-                         precision="int8")
-    kv, ki = ek.retrieve_dense(queries, 25)
-    rv, ri = er.retrieve_dense(queries, 25)
+    ek = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=True, precision="int8"))
+    er = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False, precision="int8"))
+    kv, ki, *_ = ek.retrieve_dense(queries, 25)
+    rv, ri, *_ = er.retrieve_dense(queries, 25)
     np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
     np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
 
@@ -199,9 +203,10 @@ def test_int8_engine_quality_vs_exact(qsetup, mode):
     from repro.core.eval import retrieval_quality
 
     params, qindex, _, queries = qsetup
-    exact = RetrievalEngine(params, qindex, mode=mode, use_kernel=False)
-    approx = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
-                             precision="int8")
+    exact = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False))
+    approx = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False, precision="int8"))
     e = exact.retrieve_dense(queries, 25)
     a = approx.retrieve_dense(queries, 25)
     quality = retrieval_quality(a, e)
@@ -222,12 +227,12 @@ def test_int8_engine_sharded_bit_identical(qsetup, mode, shards,
         pytest.skip(f"needs {shards} devices")
     params, qindex, _, queries = qsetup
     mesh = make_candidate_mesh(shards)
-    em = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
-                         mesh=mesh, precision="int8")
-    e1 = RetrievalEngine(params, qindex, mode=mode, use_kernel=False,
-                         precision="int8")
-    mv, mi = em.retrieve_dense(queries, 20)
-    sv, si = e1.retrieve_dense(queries, 20)
+    em = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False, mesh=mesh, precision="int8"))
+    e1 = RetrievalEngine(qindex, params,
+                    config=EngineConfig(mode=mode, use_kernel=False, precision="int8"))
+    mv, mi, *_ = em.retrieve_dense(queries, 20)
+    sv, si, *_ = e1.retrieve_dense(queries, 20)
     np.testing.assert_array_equal(np.asarray(mi), np.asarray(si))
     np.testing.assert_array_equal(np.asarray(mv), np.asarray(sv))
 
@@ -241,13 +246,13 @@ def test_int8_engine_sharded_fused_kernel(qsetup, forced_device_count):
         pytest.skip("needs 2 devices")
     params, qindex, _, queries = qsetup
     mesh = make_candidate_mesh(2)
-    em = RetrievalEngine(params, qindex, use_kernel=True, mesh=mesh,
-                         precision="int8")
-    er = RetrievalEngine(params, qindex, use_kernel=False,
-                         precision="int8")
+    em = RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=True, mesh=mesh, precision="int8"))
+    er = RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=False, precision="int8"))
     q = queries[:3]
-    mv, mi = em.retrieve_dense(q, 10)
-    rv, ri = er.retrieve_dense(q, 10)
+    mv, mi, *_ = em.retrieve_dense(q, 10)
+    rv, ri, *_ = er.retrieve_dense(q, 10)
     np.testing.assert_array_equal(np.asarray(mi), np.asarray(ri))
     np.testing.assert_array_equal(np.asarray(mv), np.asarray(rv))
 
@@ -258,9 +263,11 @@ def test_precision_validation(setup, qsetup):
     params, index, queries = setup
     _, qindex, _, _ = qsetup
     with pytest.raises(ValueError, match="requires a QuantizedIndex"):
-        RetrievalEngine(params, index, precision="int8")
+        RetrievalEngine(index, params,
+                    config=EngineConfig(precision="int8"))
     with pytest.raises(ValueError, match="unknown precision"):
-        RetrievalEngine(params, qindex, precision="fp8")
+        RetrievalEngine(qindex, params,
+                    config=EngineConfig(precision="fp8"))
     q_codes = encode(params, queries, CFG.k)
     with pytest.raises(ValueError, match="requires a QuantizedIndex"):
         retrieve(index, q_codes, 5, use_kernel=False, precision="int8")
@@ -273,10 +280,11 @@ def test_precision_validation(setup, qsetup):
 
 def test_engine_single_dense_query(setup):
     params, index, queries = setup
-    engine = RetrievalEngine(params, index, use_kernel=False)
-    v, i = engine.retrieve_dense(queries[0], 5)
+    engine = RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False))
+    v, i, *_ = engine.retrieve_dense(queries[0], 5)
     assert v.shape == (5,) and i.shape == (5,)
-    bv, bi = engine.retrieve_dense(queries[:1], 5)
+    bv, bi, *_ = engine.retrieve_dense(queries[:1], 5)
     np.testing.assert_array_equal(np.asarray(i), np.asarray(bi[0]))
     np.testing.assert_array_equal(np.asarray(v), np.asarray(bv[0]))
 
@@ -285,7 +293,8 @@ def test_engine_retrieve_codes_matches_retrieve(setup):
     params, index, queries = setup
     q_codes = encode(params, queries, CFG.k)
     for mode in ("sparse", "reconstructed"):
-        engine = RetrievalEngine(params, index, mode=mode, use_kernel=False)
+        engine = RetrievalEngine(index, params,
+                    config=EngineConfig(mode=mode, use_kernel=False))
         gv, gi = engine.retrieve_codes(q_codes, 12)
         wv, wi = retrieve(index, q_codes, 12, mode=mode, params=params,
                           use_kernel=False)
@@ -295,7 +304,8 @@ def test_engine_retrieve_codes_matches_retrieve(setup):
 
 def test_engine_jit_cache_reuse(setup):
     params, index, queries = setup
-    engine = RetrievalEngine(params, index, use_kernel=False)
+    engine = RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False))
     engine.retrieve_dense(queries, 7)
     fn = engine._serve_cache[7]
     engine.retrieve_dense(queries, 7)
@@ -307,17 +317,22 @@ def test_engine_jit_cache_reuse(setup):
 def test_engine_validations(setup):
     params, index, queries = setup
     with pytest.raises(ValueError, match="unknown retrieval mode"):
-        RetrievalEngine(params, index, mode="bogus")
+        RetrievalEngine(index, params,
+                    config=EngineConfig(mode="bogus"))
     with pytest.raises(ValueError, match="requires SAE params"):
-        RetrievalEngine(None, index, mode="reconstructed")
+        RetrievalEngine(index, None,
+                    config=EngineConfig(mode="reconstructed"))
     index_no_params = build_index(index.codes)   # no decoder norms
     with pytest.raises(ValueError, match="recon norms missing"):
-        RetrievalEngine(params, index_no_params, mode="reconstructed")
-    engine = RetrievalEngine(params, index, use_kernel=False)
+        RetrievalEngine(index_no_params, params,
+                    config=EngineConfig(mode="reconstructed"))
+    engine = RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False))
     with pytest.raises(ValueError, match="exceeds candidate count"):
         engine.retrieve_dense(queries, index.codes.n + 1)
     with pytest.raises(ValueError, match="requires SAE params"):
-        RetrievalEngine(None, index, use_kernel=False).retrieve_dense(
+        RetrievalEngine(index, None,
+                    config=EngineConfig(use_kernel=False)).retrieve_dense(
             queries, 3
         )
 
@@ -326,7 +341,8 @@ def test_engine_codes_only_without_params(setup):
     """Sparse-mode retrieval over pre-encoded codes needs no params at all."""
     params, index, queries = setup
     q_codes = encode(params, queries, CFG.k)
-    engine = RetrievalEngine(None, index, use_kernel=False)
+    engine = RetrievalEngine(index, None,
+                    config=EngineConfig(use_kernel=False))
     gv, gi = engine.retrieve_codes(q_codes, 6)
     wv, wi = retrieve(index, q_codes, 6, use_kernel=False)
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))

@@ -26,6 +26,7 @@ from repro.errors import (
 from repro.launch.mesh import make_candidate_mesh
 from repro.serving import (
     Deadline,
+    EngineConfig,
     FaultInjector,
     GuardedEngine,
     RetrievalEngine,
@@ -69,7 +70,8 @@ def test_deadline_expires_and_names_the_stage():
 # ------------------------------------------------------ ladder composition
 def test_ladder_fp32_unsharded(setup):
     params, index, _, _ = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
     # the dequant pre-floor rung coincides with the primary -> deduped
     assert g.ladder == ("fp32-ref", "fp32-fullscore")
 
@@ -77,7 +79,8 @@ def test_ladder_fp32_unsharded(setup):
 def test_ladder_int8(setup):
     params, _, qindex, _ = setup
     g = GuardedEngine(
-        RetrievalEngine(params, qindex, use_kernel=False, precision="int8")
+        RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=False, precision="int8"))
     )
     assert g.ladder == ("int8-ref", "quantized-ref", "fp32-ref",
                         "fp32-fullscore")
@@ -90,7 +93,8 @@ def test_ladder_sharded_sheds_mesh_first(setup, forced_device_count):
     params, index, _, _ = setup
     mesh = make_candidate_mesh(2)
     g = GuardedEngine(
-        RetrievalEngine(params, index, use_kernel=False, mesh=mesh)
+        RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False, mesh=mesh))
     )
     assert g.ladder == ("fp32-ref-sharded", "fp32-ref", "fp32-fullscore")
 
@@ -98,14 +102,15 @@ def test_ladder_sharded_sheds_mesh_first(setup, forced_device_count):
 # ------------------------------------------------------------- admission
 def test_healthy_request_is_not_degraded(setup):
     params, index, _, queries = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
-    scores, ids, status = g.retrieve_dense(queries, 7)
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
+    scores, ids, status, *_ = g.retrieve_dense(queries, 7)
     assert isinstance(status, ServingStatus)
     assert status.path == "fp32-ref" and status.step == 0
     assert not status.degraded and status.fault is None
     assert status.coverage == 1.0 and status.sanitized == 0
     # bit-identical to the bare engine
-    bv, bi = g.engine.retrieve_dense(queries, 7)
+    bv, bi, *_ = g.engine.retrieve_dense(queries, 7)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(bi))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(bv))
     assert g.counters["requests"] == 1 and g.counters["degraded"] == 0
@@ -113,7 +118,8 @@ def test_healthy_request_is_not_degraded(setup):
 
 def test_reject_names_position_and_counts(setup):
     params, index, _, queries = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
     bad = np.asarray(queries).copy()
     bad[2, 5] = np.nan
     with pytest.raises(InvalidQueryError,
@@ -127,25 +133,27 @@ def test_reject_names_position_and_counts(setup):
 
 def test_sanitize_serves_degraded_with_count(setup):
     params, index, _, queries = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False),
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)),
                       on_invalid="sanitize")
     bad = np.asarray(queries).copy()
     bad[0, 0] = np.inf
     bad[3, 7] = np.nan
-    scores, ids, status = g.retrieve_dense(bad, 5)
+    scores, ids, status, *_ = g.retrieve_dense(bad, 5)
     assert status.degraded and status.sanitized == 2
     assert "sanitized 2 non-finite" in status.fault
     assert np.all(np.isfinite(np.asarray(scores)))
     # the sanitized request equals serving the zeroed batch
     clean = np.where(np.isfinite(bad), bad, 0.0).astype(bad.dtype)
-    wv, wi = g.engine.retrieve_dense(jnp.asarray(clean), 5)
+    wv, wi, *_ = g.engine.retrieve_dense(jnp.asarray(clean), 5)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     assert g.counters["sanitized"] == 1 and g.counters["degraded"] == 1
 
 
 def test_typed_shape_dtype_topn_rejections(setup):
     params, index, _, queries = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
     with pytest.raises(InvalidQueryError, match="expected an array"):
         g.retrieve_dense([[1.0, 2.0]], 5)
     with pytest.raises(InvalidQueryError, match="rank-3"):
@@ -166,7 +174,8 @@ def test_typed_shape_dtype_topn_rejections(setup):
 
 def test_on_invalid_validated(setup):
     params, index, _, _ = setup
-    engine = RetrievalEngine(params, index, use_kernel=False)
+    engine = RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False))
     with pytest.raises(ValueError, match="'reject' or 'sanitize'"):
         GuardedEngine(engine, on_invalid="explode")
 
@@ -176,21 +185,23 @@ def test_kernel_fault_steps_down_and_recovers(setup):
     params, _, qindex, queries = setup
     inj = FaultInjector("kernel-exception")
     g = GuardedEngine(
-        RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
+        RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=False, precision="int8")),
         injector=inj,
     )
-    scores, ids, status = g.retrieve_dense(queries, 10)
+    scores, ids, status, *_ = g.retrieve_dense(queries, 10)
     assert status.degraded and status.step == 1
     assert status.path == "quantized-ref"
     assert "injected kernel fault" in status.fault
     # the step-down rung is the exact path over the SAME index: equals the
     # exact oracle bit-for-bit
-    oracle = RetrievalEngine(params, qindex, use_kernel=False)
-    wv, wi = oracle.retrieve_dense(queries, 10)
+    oracle = RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=False))
+    wv, wi, *_ = oracle.retrieve_dense(queries, 10)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
     # trip_once: the next request serves healthy on the primary again
-    _, _, status2 = g.retrieve_dense(queries, 10)
+    _, _, status2, *_ = g.retrieve_dense(queries, 10)
     assert not status2.degraded and status2.step == 0
     assert g.counters["degraded"] == 1
 
@@ -199,7 +210,8 @@ def test_unanticipated_exception_degrades_not_crashes(setup):
     """A bare RuntimeError on the primary rung (not a typed
     RetrievalError) must also step the ladder down."""
     params, index, _, queries = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
 
     class Boom:
         mesh = None
@@ -208,13 +220,14 @@ def test_unanticipated_exception_degrades_not_crashes(setup):
             raise RuntimeError("boom: simulated runtime fault")
 
     g._rung_engines[0] = Boom()
-    scores, ids, status = g.retrieve_dense(queries, 6)
+    scores, ids, status, *_ = g.retrieve_dense(queries, 6)
     assert status.degraded and status.step == 1
     assert status.path == "fp32-fullscore"
     assert "RuntimeError: boom" in status.fault
     # the floor is the battle-tested oracle composition
-    oracle = RetrievalEngine(params, index, use_kernel=False)
-    wv, wi = oracle.retrieve_dense(queries, 6)
+    oracle = RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False))
+    wv, wi, *_ = oracle.retrieve_dense(queries, 6)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     # same ids; scores agree to f32 rounding (full-score vs streaming sum)
     np.testing.assert_allclose(np.asarray(scores), np.asarray(wv),
@@ -223,7 +236,8 @@ def test_unanticipated_exception_degrades_not_crashes(setup):
 
 def test_degradation_exhausted_chains_every_rung(setup):
     params, index, _, queries = setup
-    g = GuardedEngine(RetrievalEngine(params, index, use_kernel=False))
+    g = GuardedEngine(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
 
     class Boom:
         mesh = None
@@ -241,7 +255,8 @@ def test_rung_engines_are_memoized(setup):
     params, _, qindex, queries = setup
     inj = FaultInjector("kernel-exception", trip_once=False)
     g = GuardedEngine(
-        RetrievalEngine(params, qindex, use_kernel=False, precision="int8"),
+        RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=False, precision="int8")),
         injector=inj,
     )
     g.retrieve_dense(queries, 5)
@@ -253,7 +268,8 @@ def test_rung_engines_are_memoized(setup):
 # ----------------------------------------------------------- self-check
 def test_self_check_passes_on_healthy_engine(setup):
     params, index, _, _ = setup
-    report = self_check(RetrievalEngine(params, index, use_kernel=False))
+    report = self_check(RetrievalEngine(index, params,
+                    config=EngineConfig(use_kernel=False)))
     assert report.index_verified
     assert report.canary_q >= 1 and report.canary_n >= 1
     assert report.path == "fp32-ref"
@@ -263,7 +279,8 @@ def test_self_check_passes_on_healthy_engine(setup):
 def test_self_check_int8_kernel_vs_ref_bit_identical(setup):
     params, _, qindex, _ = setup
     report = self_check(
-        RetrievalEngine(params, qindex, use_kernel=True, precision="int8"),
+        RetrievalEngine(qindex, params,
+                    config=EngineConfig(use_kernel=True, precision="int8")),
         canary_q=2, canary_n=4,
     )
     assert report.kernel_vs_ref == "bit-identical"
@@ -274,16 +291,19 @@ def test_self_check_catches_flipped_byte(setup):
     params, _, qindex, _ = setup
     corrupt = flip_index_byte(qindex, byte=17, bit=2)
     with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
-        self_check(RetrievalEngine(params, corrupt, use_kernel=False))
+        self_check(RetrievalEngine(corrupt, params,
+                    config=EngineConfig(use_kernel=False)))
 
 
 def test_self_check_requires_checksum_by_default(setup):
     params, index, _, _ = setup
     bare = index._replace(checksum=None)
     with pytest.raises(IndexIntegrityError, match="no stored checksum"):
-        self_check(RetrievalEngine(params, bare, use_kernel=False))
+        self_check(RetrievalEngine(bare, params,
+                    config=EngineConfig(use_kernel=False)))
     # opt out for ad-hoc indexes: canary still runs
-    report = self_check(RetrievalEngine(params, bare, use_kernel=False),
+    report = self_check(RetrievalEngine(bare, params,
+                    config=EngineConfig(use_kernel=False)),
                         require_checksum=False)
     assert not report.index_verified
 
@@ -297,7 +317,8 @@ def test_self_check_catches_poisoned_norms(setup):
         inv_sparse_norms=None, checksum=None,
     )
     with pytest.raises(SelfCheckError, match="non-finite"):
-        self_check(RetrievalEngine(params, poisoned, use_kernel=False),
+        self_check(RetrievalEngine(poisoned, params,
+                    config=EngineConfig(use_kernel=False)),
                    require_checksum=False)
 
 
@@ -307,26 +328,26 @@ def test_guard_startup_self_check_and_fallback(setup):
     # no fallback: the integrity failure surfaces typed
     with pytest.raises(IndexIntegrityError):
         GuardedEngine(
-            RetrievalEngine(params, corrupt, use_kernel=False,
-                            precision="int8"),
+            RetrievalEngine(corrupt, params,
+                    config=EngineConfig(use_kernel=False, precision="int8")),
             run_self_check=True,
         )
     # with a verified fallback: serve from it, degraded from the start
     fp_index = dequantize_index(qindex)
     assert verify_index(fp_index)
     g = GuardedEngine(
-        RetrievalEngine(params, corrupt, use_kernel=False,
-                        precision="int8"),
+        RetrievalEngine(corrupt, params,
+                    config=EngineConfig(use_kernel=False, precision="int8")),
         run_self_check=True, fallback_index=fp_index,
     )
     assert g.degraded_from_start is not None
     assert "failed integrity check" in g.degraded_from_start
     assert g.engine.index is fp_index and g.engine.precision == "exact"
-    scores, ids, status = g.retrieve_dense(queries, 8)
+    scores, ids, status, *_ = g.retrieve_dense(queries, 8)
     assert status.degraded and "fallback index" in status.fault
     # the fallback answer is the fp32 oracle's answer
-    wv, wi = RetrievalEngine(params, fp_index,
-                             use_kernel=False).retrieve_dense(queries, 8)
+    wv, wi, *_ = RetrievalEngine(fp_index, params,
+                    config=EngineConfig(use_kernel=False)).retrieve_dense(queries, 8)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     np.testing.assert_array_equal(np.asarray(scores), np.asarray(wv))
 
@@ -355,11 +376,11 @@ def test_segmented_self_check_per_segment_crc(setup):
 
     params, _, qindex, _ = setup
     seg = _segmented(params, qindex)
-    rep = self_check(RetrievalEngine(params, seg, use_kernel=True,
-                                     precision="int8"))
+    rep = self_check(RetrievalEngine(seg, params,
+                    config=EngineConfig(use_kernel=True, precision="int8")))
     assert rep.kernel_vs_ref == "bit-identical"
-    bad = RetrievalEngine(params, flip_delta_byte(seg),
-                          use_kernel=True, precision="int8")
+    bad = RetrievalEngine(flip_delta_byte(seg), params,
+                    config=EngineConfig(use_kernel=True, precision="int8"))
     with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
         self_check(bad)
 
@@ -371,7 +392,8 @@ def test_segmented_ladder_serves_segments_on_every_rung(setup):
     params, _, qindex, _ = setup
     seg = _segmented(params, qindex)
     g = GuardedEngine(
-        RetrievalEngine(params, seg, use_kernel=False, precision="int8"))
+        RetrievalEngine(seg, params,
+                    config=EngineConfig(use_kernel=False, precision="int8")))
     assert g.ladder == ("int8-ref", "quantized-ref", "fp32-fullscore")
     for step in range(len(g.ladder) - 1):
         assert g._engine_for(step).segments is not None
@@ -384,17 +406,18 @@ def test_segmented_floor_serves_survivors_only(setup):
     params, index, _, queries = setup
     seg = _segmented(params, index)
     g = GuardedEngine(
-        RetrievalEngine(params, seg, use_kernel=False),
+        RetrievalEngine(seg, params,
+                    config=EngineConfig(use_kernel=False)),
         injector=FaultInjector("kernel-exception"),
     )
     assert g.ladder == ("fp32-ref", "fp32-fullscore")
-    scores, ids, status = g.retrieve_dense(queries, 16)
+    scores, ids, status, *_ = g.retrieve_dense(queries, 16)
     assert status.path == "fp32-fullscore" and status.degraded
     alive = set(int(v) for v in seg.alive_ids())
     assert set(np.asarray(ids).ravel().tolist()) <= alive | {-1}
     assert {5, 9}.isdisjoint(set(np.asarray(ids).ravel().tolist()))
-    wv, wi = RetrievalEngine(params, seg,
-                             use_kernel=False).retrieve_dense(queries, 16)
+    wv, wi, *_ = RetrievalEngine(seg, params,
+                    config=EngineConfig(use_kernel=False)).retrieve_dense(queries, 16)
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
     np.testing.assert_allclose(np.asarray(scores), np.asarray(wv),
                                rtol=1e-5, atol=1e-5)
@@ -405,7 +428,8 @@ def test_segmented_topn_admission_spans_all_segments(setup):
     (base + delta), not the base alone."""
     params, index, _, queries = setup
     seg = _segmented(params, index, adds=8)
-    g = GuardedEngine(RetrievalEngine(params, seg, use_kernel=False))
+    g = GuardedEngine(RetrievalEngine(seg, params,
+                    config=EngineConfig(use_kernel=False)))
     n_total = seg.n_rows
     scores, ids = g.retrieve_dense(queries, n_total)[:2]
     assert np.asarray(ids).shape == (queries.shape[0], n_total)

@@ -137,7 +137,7 @@ def test_engine_two_stage_matches_core_function(trained):
     np.testing.assert_array_equal(np.asarray(v_e), np.asarray(v_c))
     np.testing.assert_array_equal(np.asarray(i_e), np.asarray(i_c))
     # dense entry point: encode folded in front of the same path
-    v_d, i_d = eng.retrieve_dense(queries, 10)
+    v_d, i_d, *_ = eng.retrieve_dense(queries, 10)
     assert v_d.shape == (NQ, 10) and i_d.shape == (NQ, 10)
 
 
@@ -151,13 +151,13 @@ def test_guard_falls_back_on_corrupt_postings(trained):
     guard = GuardedEngine(eng)
     assert guard.ladder[0].startswith("two-stage-")
     # healthy: served by the primary two-stage rung
-    _, _, status = guard.retrieve_dense(queries, 8)
+    _, _, status, *_ = guard.retrieve_dense(queries, 8)
     assert status.step == 0 and not status.degraded
     eng.inverted = corrupt_postings(eng.inverted)
-    v, ids, status = guard.retrieve_dense(queries, 8)
+    v, ids, status, *_ = guard.retrieve_dense(queries, 8)
     assert status.step >= 1 and status.degraded
     assert "postings corrupted" in status.fault
     single = RetrievalEngine(params, index, use_kernel=False)
-    v1, i1 = single.retrieve_dense(queries, 8)
+    v1, i1, *_ = single.retrieve_dense(queries, 8)
     np.testing.assert_array_equal(np.asarray(v), np.asarray(v1))
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(i1))

@@ -299,10 +299,10 @@ def test_guard_ladder_sheds_device_then_host_then_single():
     assert guard.ladder[0].startswith("two-stage-device-")
     assert guard.ladder[1].startswith("two-stage-host-")
     eng.inverted = corrupt_postings(eng.inverted)
-    v, ids, status = guard.retrieve_dense(queries, 8)
+    v, ids, status, *_ = guard.retrieve_dense(queries, 8)
     assert status.step == 2 and status.degraded
     assert status.fault.count("postings corrupted") == 2  # both rungs tried
     single = RetrievalEngine(params, index, use_kernel=False)
-    v1, i1 = single.retrieve_dense(queries, 8)
+    v1, i1, *_ = single.retrieve_dense(queries, 8)
     np.testing.assert_array_equal(np.asarray(v), np.asarray(v1))
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(i1))

@@ -33,9 +33,30 @@ WARN-ONLY (exit 0):
     noise-dominated at smoke sizes (see docs/BENCHMARKS.md §Comparing);
   * rows whose configuration changed (reported as not comparable).
 
+Serving schema (ISSUE 10, ``--schema serving``): the same gate for
+``BENCH_serving.json`` written by ``repro.launch.loadtest``.
+
+GATES (exit 1):
+  * schema — every serving record carries the traffic-shaped fields
+    (latency percentiles, throughput/offered load, occupancy, shed rate,
+    request count, path, coalescing deadline);
+  * row-set — a baseline row name may not disappear;
+  * sanity — ``0 <= shed_rate <= 1``, ``0 <= occupancy_mean <= 1`` and
+    ``p50_ms <= p95_ms <= p99_ms`` (a violated ordering means the
+    percentile computation broke, not that the machine was slow);
+  * shed-rate regression — for configuration-matched rows, ``shed_rate``
+    may not grow by more than ``--shed-tol`` (default 0.05): admission
+    control shedding more traffic at the same offered load is a serving
+    regression even when latency is noise.
+
+WARN-ONLY: every latency/throughput/occupancy movement — wall-clock
+under concurrent load on a shared CPU runner is the noisiest number in
+the repo.
+
 Usage:
     python tools/check_bench.py BASELINE.json FRESH.json \
-        [--recall-tol 0.02] [--summary PATH]
+        [--schema retrieval|serving] [--recall-tol 0.02] \
+        [--shed-tol 0.05] [--summary PATH]
 
 ``--summary`` appends a markdown report (for ``$GITHUB_STEP_SUMMARY``).
 """
@@ -97,6 +118,18 @@ RECALL_FLOOR_ROWS = (
 )
 # records are only comparable within an identical configuration
 CONFIG_FIELDS = ("path", "shards", "n", "q", "topn")
+
+# ------------------------------------------------- serving schema (ISSUE 10)
+SERVING_REQUIRED = {
+    "name", "p50_ms", "p95_ms", "p99_ms", "throughput_rps", "offered_rps",
+    "occupancy_mean", "shed_rate", "requests", "path", "max_wait_us",
+}
+# a serving row is only comparable against a baseline run of the same
+# engine path AND the same traffic shape / admission settings
+SERVING_CONFIG_FIELDS = (
+    "path", "shards", "n", "users", "topn",
+    "max_wait_us", "max_queue_rows", "smoke",
+)
 
 
 def load(path: pathlib.Path) -> dict:
@@ -197,6 +230,73 @@ def compare(baseline: dict, fresh: dict, recall_tol: float
     return failures, warnings
 
 
+def compare_serving(baseline: dict, fresh: dict, shed_tol: float
+                    ) -> tuple[list[str], list[str]]:
+    """-> (failures, warnings) for the serving schema."""
+    failures, warnings = [], []
+
+    for name, rec in fresh.items():
+        missing = SERVING_REQUIRED - set(rec)
+        if missing:
+            failures.append(f"schema: row `{name}` missing {sorted(missing)}")
+
+    # internal-consistency gates: these fail on ANY machine if the driver
+    # or the batcher bookkeeping is wrong, independent of timing noise
+    for name, rec in fresh.items():
+        sr = rec.get("shed_rate")
+        if sr is not None and not 0.0 <= sr <= 1.0:
+            failures.append(f"sanity: `{name}`.shed_rate {sr!r} not in [0, 1]")
+        occ = rec.get("occupancy_mean")
+        if occ is not None and not 0.0 <= occ <= 1.0:
+            failures.append(
+                f"sanity: `{name}`.occupancy_mean {occ!r} not in [0, 1]"
+            )
+        ps = [rec.get(k) for k in ("p50_ms", "p95_ms", "p99_ms")]
+        if None not in ps and not ps[0] <= ps[1] <= ps[2]:
+            failures.append(
+                f"sanity: `{name}` percentile ordering broken: "
+                f"p50 {ps[0]:.2f} / p95 {ps[1]:.2f} / p99 {ps[2]:.2f}"
+            )
+
+    gone = sorted(set(baseline) - set(fresh))
+    if gone:
+        failures.append(f"row-set: baseline rows disappeared: {gone}")
+    for name in sorted(set(fresh) - set(baseline)):
+        warnings.append(f"new row `{name}` (no baseline to compare)")
+
+    for name in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[name], fresh[name]
+        cfg_b = tuple(b.get(c) for c in SERVING_CONFIG_FIELDS)
+        cfg_f = tuple(f.get(c) for c in SERVING_CONFIG_FIELDS)
+        if cfg_b != cfg_f:
+            warnings.append(
+                f"`{name}`: configuration changed "
+                f"{dict(zip(SERVING_CONFIG_FIELDS, cfg_b))} -> "
+                f"{dict(zip(SERVING_CONFIG_FIELDS, cfg_f))} — not "
+                "comparable, shed-rate gate skipped"
+            )
+            continue
+        grow = f.get("shed_rate", 0.0) - b.get("shed_rate", 0.0)
+        if grow > shed_tol:
+            failures.append(
+                f"shed-rate regression: `{name}`.shed_rate "
+                f"{b['shed_rate']:.4f} -> {f['shed_rate']:.4f} "
+                f"(grew {grow:.4f} > tol {shed_tol}) at the same "
+                "offered load"
+            )
+        for field in ("p50_ms", "p99_ms", "throughput_rps"):
+            if b.get(field) and f.get(field):
+                ratio = f[field] / b[field]
+                if ratio > 1.5 or ratio < 0.67:
+                    warnings.append(
+                        f"`{name}`: {field} {b[field]:.1f} -> "
+                        f"{f[field]:.1f} ({ratio:.2f}x) — latency/"
+                        "throughput is warn-only (concurrent-load timing "
+                        "on a shared runner)"
+                    )
+    return failures, warnings
+
+
 def render_summary(failures: list[str], warnings: list[str]) -> str:
     lines = ["## Bench-regression gate",
              f"**{'FAIL' if failures else 'OK'}** — "
@@ -210,7 +310,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", type=pathlib.Path)
     ap.add_argument("fresh", type=pathlib.Path)
+    ap.add_argument("--schema", choices=["retrieval", "serving"],
+                    default="retrieval",
+                    help="which record schema to gate: 'retrieval' "
+                         "(BENCH_retrieval.json) or 'serving' "
+                         "(BENCH_serving.json from repro.launch.loadtest)")
     ap.add_argument("--recall-tol", type=float, default=0.02)
+    ap.add_argument("--shed-tol", type=float, default=0.05,
+                    help="serving schema: max allowed shed_rate growth on "
+                         "configuration-matched rows")
     ap.add_argument("--summary", type=pathlib.Path, default=None,
                     help="append a markdown report to this file "
                          "(e.g. $GITHUB_STEP_SUMMARY)")
@@ -222,7 +330,11 @@ def main(argv=None) -> int:
         # a traceback that skips the summary
         failures, warnings = [f"unreadable record: {e}"], []
     else:
-        failures, warnings = compare(baseline, fresh, args.recall_tol)
+        if args.schema == "serving":
+            failures, warnings = compare_serving(baseline, fresh,
+                                                 args.shed_tol)
+        else:
+            failures, warnings = compare(baseline, fresh, args.recall_tol)
     for w in warnings:
         print(f"WARN: {w}")
     for f in failures:
